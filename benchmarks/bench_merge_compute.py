@@ -1,0 +1,39 @@
+"""Beyond-paper: merge compute/throughput — streaming numpy vs batched
+XLA/Pallas kernels, and coalesced vs per-block physical reads.
+
+The paper's regime is disk-bound; on TPU-class deployments the merge
+becomes HBM-bound and the fused batched kernels matter.  This bench
+reports end-to-end merge throughput (MB/s of output) per mode.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.harness import Csv, build_zoo, cleanup, fresh_dir
+
+
+def run(k=8, op="ties") -> None:
+    ws = fresh_dir("compute")
+    try:
+        mp, base, ids = build_zoo(ws, k)
+        mp.ensure_analyzed(base, ids)
+        total_out = sum(
+            r[3] for r in mp.catalog.tensor_metas(base)
+        )
+        csv = Csv("merge_compute", [
+            "mode", "coalesce", "wall_s", "out_throughput_mb_s",
+        ])
+        for compute in ("stream", "batched"):
+            for coalesce in (True, False):
+                t0 = time.time()
+                mp.merge(base, ids, op, theta={"trim_frac": 0.3},
+                         budget=0.5, compute=compute, coalesce=coalesce,
+                         reuse_plan=False)
+                wall = time.time() - t0
+                csv.row(compute, coalesce, wall, total_out / 1e6 / wall)
+    finally:
+        cleanup(ws)
+
+
+if __name__ == "__main__":
+    run()

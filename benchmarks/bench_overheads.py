@@ -1,0 +1,72 @@
+"""Paper Table 5 + Fig 5: planning/metadata/transactional overheads.
+
+Planning is ~1% of execution; catalog+manifest bytes are a small
+fraction of parameter I/O; budgeting changes expert reads while base
+reads and output writes stay constant (the decomposition argument).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.store.iostats import measure
+
+from benchmarks.harness import Csv, build_zoo, cleanup, fresh_dir
+
+
+def run(k=16, op="ties", decompose=True) -> None:
+    ws = fresh_dir("overheads")
+    try:
+        mp, base, ids = build_zoo(ws, k)
+        t0 = time.time()
+        mp.ensure_analyzed(base, ids)
+        t_analyze = time.time() - t0
+        budget = mp.resolve_budget(ids, 0.4)
+
+        pr, t_plan = None, 0.0
+        t0 = time.time()
+        pr = mp.plan(base, ids, op, theta={"trim_frac": 0.3}, budget=budget,
+                     reuse=False)
+        t_plan = time.time() - t0
+
+        with measure(mp.stats) as io:
+            t0 = time.time()
+            res = mp.execute(pr.plan)
+            t_exec = time.time() - t0
+
+        man_path = os.path.join(mp.snapshots.manifest_root, f"{res.sid}.json")
+        csv = Csv("overheads", ["metric", "value", "unit"])
+        csv.row("analyze_time_oneoff", t_analyze, "s")
+        csv.row("plan_time", t_plan, "s")
+        csv.row("exec_time", t_exec, "s")
+        csv.row("plan_frac_of_exec", 100 * t_plan / t_exec, "%")
+        csv.row("estimated_expert_io", pr.plan.c_expert_hat / 1e6, "MB")
+        csv.row("executed_expert_io", io["expert_read"] / 1e6, "MB")
+        csv.row("exec_vs_estimate", io["expert_read"] /
+                max(pr.plan.c_expert_hat, 1), "x")
+        total = (io["base_read"] + io["expert_read"] + io["out_written"]
+                 + io["meta"])
+        csv.row("total_io", total / 1e6, "MB")
+        csv.row("catalog_size", mp.catalog.catalog_nbytes() / 1e6, "MB")
+        csv.row("catalog_frac_of_total_io",
+                100 * mp.catalog.catalog_nbytes() / total, "%")
+        csv.row("manifest_size", os.path.getsize(man_path) / 1e3, "KB")
+
+        if decompose:
+            # Fig 5b: the budget knob moves ONLY expert reads
+            for f in (0.2, 0.6, 1.0):
+                with measure(mp.stats) as io:
+                    mp.merge(base, ids, op, theta={"trim_frac": 0.3},
+                             budget=f, reuse_plan=False)
+                csv.row(f"decompose_budget_{f}_base_read",
+                        io["base_read"] / 1e6, "MB")
+                csv.row(f"decompose_budget_{f}_expert_read",
+                        io["expert_read"] / 1e6, "MB")
+                csv.row(f"decompose_budget_{f}_out_written",
+                        io["out_written"] / 1e6, "MB")
+    finally:
+        cleanup(ws)
+
+
+if __name__ == "__main__":
+    run()

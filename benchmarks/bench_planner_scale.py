@@ -1,0 +1,29 @@
+"""Beyond-paper: planner complexity check — O(N_b log N_b) (§4.5).
+
+MoE-scale tensor populations (grok/deepseek have 1e4-1e5 tensors) stress
+PlanGen; this bench sweeps the candidate-block count and reports
+plan time, which should grow near-linearithmically.
+"""
+from __future__ import annotations
+
+from benchmarks.harness import Csv, build_zoo, cleanup, fresh_dir
+
+
+def run(block_kbs=(512, 128, 32, 8), k=8) -> None:
+    csv = Csv("planner_scale", ["candidate_blocks", "plan_s",
+                                "per_block_us"])
+    for kb in block_kbs:
+        ws = fresh_dir(f"ps{kb}")
+        try:
+            mp, base, ids = build_zoo(ws, k, block_size=kb * 1024)
+            mp.ensure_analyzed(base, ids)
+            pr = mp.plan(base, ids, "ties", budget=0.5, reuse=False)
+            n = pr.stats["candidates"]
+            csv.row(n, pr.stats["plan_seconds"],
+                    1e6 * pr.stats["plan_seconds"] / max(n, 1))
+        finally:
+            cleanup(ws)
+
+
+if __name__ == "__main__":
+    run()

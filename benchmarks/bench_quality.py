@@ -1,0 +1,113 @@
+"""Paper Table 7 / §6.8: correctness & quality preservation under budget.
+
+(A) parameter-level deviation of θ_B vs θ_full (rel-l2 + p95 block err,
+    touched ratio), and
+(B) a downstream proxy: eval loss of the merged smoke model on held-out
+    synthetic batches per budget (stands in for HumanEval/IFEval/DROP —
+    no external benchmark data ships in this container).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.harness import Csv, cleanup, fresh_dir
+
+
+def _rel_l2(a, b):
+    num = den = 0.0
+    for k in a:
+        num += float(np.sum((a[k].astype(np.float64) - b[k]) ** 2))
+        den += float(np.sum(b[k].astype(np.float64) ** 2))
+    return (num ** 0.5) / max(den ** 0.5, 1e-30)
+
+
+def _p95_block_err(a, b, block_elems=32768):
+    errs = []
+    for k in a:
+        fa = a[k].reshape(-1).astype(np.float64)
+        fb = b[k].reshape(-1).astype(np.float64)
+        for lo in range(0, fa.size, block_elems):
+            da = fa[lo:lo + block_elems]
+            db = fb[lo:lo + block_elems]
+            d = np.linalg.norm(da - db) / max(np.linalg.norm(db), 1e-30)
+            errs.append(d)
+    return float(np.percentile(errs, 95))
+
+
+def run(budgets=(1.0, 0.9, 0.8, 0.7, 0.6, 0.5), k=8, op="ties") -> None:
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.api import MergePipe
+    from repro.models import build_model
+    from repro.store.checkpoint import flatten_tree, unflatten_like
+    from repro.train.data import synth_batch
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_state import init_train_state, make_train_step
+
+    cfg = get_smoke_config("qwen3-14b")
+    model = build_model(cfg)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=5e-3,
+                                                      warmup_steps=1,
+                                                      total_steps=8)))
+
+    # expert branches fine-tuned on distinct synthetic skills
+    base_state = init_train_state(model, jax.random.PRNGKey(0))
+    experts = []
+    for skill in range(k):
+        st = base_state
+        for s in range(4):
+            import jax.numpy as jnp
+
+            b = synth_batch(seed=skill, step=s, batch=4, seq=16,
+                            vocab=cfg.vocab_size, skill=skill % 3)
+            st, _ = step(st, {k2: jnp.asarray(v) for k2, v in b.items()})
+        experts.append(st.params)
+
+    ws = fresh_dir("quality")
+    try:
+        mp = MergePipe(ws, block_size=4096)
+        mp.register_model("base", flatten_tree(base_state.params))
+        ids = []
+        for i, p in enumerate(experts):
+            mp.register_model(f"e{i}", flatten_tree(p))
+            ids.append(f"e{i}")
+        full = mp.load(mp.merge("base", ids, op, theta={"trim_frac": 0.3},
+                                budget=None, sid="full").sid)
+
+        def eval_loss(flat):
+            import jax.numpy as jnp
+
+            params = unflatten_like(base_state.params, flat)
+            tot = 0.0
+            for s in range(3):
+                b = synth_batch(seed=99, step=s, batch=4, seq=16,
+                                vocab=cfg.vocab_size, skill=s)
+                tot += float(model.loss_fn(
+                    params, {k2: jnp.asarray(v) for k2, v in b.items()}))
+            return tot / 3
+
+        csv = Csv("quality", [
+            "budget", "touched_ratio", "rel_l2_err", "p95_block_err",
+            "eval_loss",
+        ])
+        total_blocks = sum(
+            len(mp.catalog.block_metas(e, mp.block_size)) for e in ids
+        )
+        for b in budgets:
+            sid = f"b{int(b*100)}"
+            res = mp.merge("base", ids, op, theta={"trim_frac": 0.3},
+                           budget=b if b < 1.0 else None, sid=sid,
+                           reuse_plan=False)
+            out = mp.load(sid)
+            ex = mp.explain(sid)
+            touched = sum(ex["per_expert_touched_blocks"].values())
+            csv.row(b, touched / total_blocks, _rel_l2(out, full),
+                    _p95_block_err(out, full), eval_loss(out))
+        mp.close()
+    finally:
+        cleanup(ws)
+
+
+if __name__ == "__main__":
+    run()

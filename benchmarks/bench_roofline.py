@@ -1,0 +1,112 @@
+"""§Roofline: per-(arch × shape) roofline terms from the dry-run artifacts.
+
+Reads reports/dryrun_baseline.jsonl (produced by
+``python -m repro.launch.dryrun --all``), joins the HLO-derived numbers
+with the analytic FLOP/byte model (launch/flops.py — XLA cost_analysis
+counts while-loop bodies once, so scanned programs under-report), and
+emits the three roofline terms per cell:
+
+    compute_s    = FLOPs / (chip peak 197 TF bf16)
+    memory_s     = HBM bytes / (819 GB/s)
+    collective_s = collective bytes / (50 GB/s ICI per link)
+
+plus the dominant term and MODEL_FLOPS/HLO ratios.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import get_config
+from repro.launch import flops as aflops
+from repro.launch.dryrun import HW
+from repro.models import SHAPES
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "reports",
+                      "dryrun_baseline.jsonl")
+
+
+def load_records(path: str = REPORT) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last run wins
+    return list(recs.values())
+
+
+def analyze(rec: Dict, causal_skip: bool = False) -> Dict:
+    cfg = get_config(rec["arch"])
+    n = rec["n_chips"]
+    # post-H3, prefill paths skip non-causal chunks (train keeps full
+    # tiles: dynamic-bound loops are not reverse-differentiable)
+    skip = causal_skip and SHAPES[rec["shape"]]["kind"] == "prefill"
+    ana = aflops.cell_cost(cfg, rec["shape"], n, causal_skip=skip)
+    hlo_flops = rec["cost"].get("flops") or 0.0
+    hlo_bytes = rec["cost"].get("bytes_accessed") or 0.0
+    coll = rec["collectives"]["total_bytes"]
+    terms = {
+        "compute_s": ana["flops"] / HW["peak_flops_bf16"],
+        "memory_s": ana["hbm_bytes"] / HW["hbm_bw"],
+        "collective_s": coll / HW["ici_bw_per_link"],
+    }
+    dom = max(terms, key=lambda k: terms[k])
+    bound = max(terms.values())
+    kind = SHAPES[rec["shape"]]["kind"]
+    tokens = SHAPES[rec["shape"]]["batch"] * (
+        SHAPES[rec["shape"]]["seq"] if kind != "decode" else 1
+    )
+    mf = aflops.model_flops_per_token(cfg) * tokens / n
+    if kind != "train":
+        mf /= 3.0  # fwd only
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "analytic_flops": ana["flops"], "analytic_hbm_bytes": ana["hbm_bytes"],
+        "hlo_flops_raw": hlo_flops, "hlo_bytes_raw": hlo_bytes,
+        "collective_bytes": coll,
+        **terms,
+        "dominant": dom,
+        "roofline_bound_s": bound,
+        "model_flops": mf,
+        "useful_fraction": mf / ana["flops"] if ana["flops"] else 0.0,
+        "compute_fraction_of_bound": terms["compute_s"] / bound if bound else 0,
+    }
+
+
+OPTIMIZED = os.path.join(os.path.dirname(__file__), "..", "reports",
+                         "dryrun_optimized.jsonl")
+
+
+def run(path: str = None, mesh: str = "16x16",
+        causal_skip: bool = None) -> List[Dict]:
+    if path is None:  # prefer the optimized sweep when present
+        path = OPTIMIZED if os.path.exists(OPTIMIZED) else REPORT
+        if causal_skip is None:
+            causal_skip = path == OPTIMIZED
+    recs = [r for r in load_records(path)
+            if r.get("status") == "ok" and r["mesh"] == mesh]
+    if not recs:
+        print(f"# roofline: no dry-run records at {path}; run "
+              f"`python -m repro.launch.dryrun --all` first")
+        return []
+    from benchmarks.harness import Csv
+
+    csv = Csv("roofline", [
+        "arch", "shape", "compute_s", "memory_s", "collective_s",
+        "dominant", "useful_frac", "compute_frac_of_bound",
+    ])
+    out = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        a = analyze(r, causal_skip=bool(causal_skip))
+        out.append(a)
+        csv.row(a["arch"], a["shape"], a["compute_s"], a["memory_s"],
+                a["collective_s"], a["dominant"], a["useful_fraction"],
+                a["compute_fraction_of_bound"])
+    return out
+
+
+if __name__ == "__main__":
+    run()

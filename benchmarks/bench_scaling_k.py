@@ -1,0 +1,63 @@
+"""Paper Fig 2 + Fig 4 + Table 3: scaling with the number of experts K.
+
+Naive pipelines scan every expert fully per merge (O(K) expert I/O);
+MergePipe enforces a fixed expert budget B, so expert I/O stays flat.
+``--ablation`` adds the Table 3 disable-budget row (planner keeps budget
+enforcement at execution but skips budget-aware scaling/ordering, i.e.
+conflict_aware=False + no plan reuse).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.naive import naive_merge
+from repro.store.iostats import measure
+
+from benchmarks.harness import Csv, build_zoo, cleanup, fresh_dir
+
+
+def run(ks=(2, 4, 8, 12, 16, 20), op="ties", budget_experts=2,
+        ablation=False) -> None:
+    ws = fresh_dir("scaling")
+    try:
+        mp, base, ids = build_zoo(ws, max(ks))
+        theta = {"trim_frac": 0.3}
+        mp.ensure_analyzed(base, ids)  # one-time ANALYZE, amortized
+        budget = mp.resolve_budget(ids[:budget_experts], 1.0)
+        csv = Csv("scaling_k", [
+            "K", "system", "expert_io_mb", "total_io_mb", "wall_s",
+        ])
+        for k in ks:
+            sel = ids[:k]
+            with measure(mp.stats) as io:
+                t0 = time.time()
+                naive_merge(mp.snapshots.models, base, sel, op, theta)
+                wall = time.time() - t0
+            csv.row(k, "naive", io["expert_read"] / 1e6,
+                    (io["base_read"] + io["expert_read"] + io["out_written"]
+                     + io["meta"]) / 1e6, wall)
+            with measure(mp.stats) as io:
+                t0 = time.time()
+                mp.merge(base, sel, op, theta=theta, budget=budget,
+                         reuse_plan=False)
+                wall = time.time() - t0
+            csv.row(k, "mergepipe", io["expert_read"] / 1e6,
+                    (io["base_read"] + io["expert_read"] + io["out_written"]
+                     + io["meta"]) / 1e6, wall)
+            if ablation:
+                with measure(mp.stats) as io:
+                    t0 = time.time()
+                    mp.merge(base, sel, op, theta=theta, budget=budget,
+                             conflict_aware=False, reuse_plan=False,
+                             coalesce=False)
+                    wall = time.time() - t0
+                csv.row(k, "mergepipe-disable-budget-scaling",
+                        io["expert_read"] / 1e6,
+                        (io["base_read"] + io["expert_read"]
+                         + io["out_written"] + io["meta"]) / 1e6, wall)
+    finally:
+        cleanup(ws)
+
+
+if __name__ == "__main__":
+    run(ablation=True)

@@ -1,0 +1,47 @@
+"""Paper Fig 7 / §6.7: stability across repeated runs.
+
+Five identical executions per K: wall-time variance is system noise;
+expert-read bytes are bit-stable (deterministic planning + execution).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.store.iostats import measure
+
+from benchmarks.harness import Csv, build_zoo, cleanup, fresh_dir
+
+
+def run(ks=(4, 8, 12, 16, 20), repeats=5, op="ties") -> None:
+    ws = fresh_dir("stability")
+    try:
+        mp, base, ids = build_zoo(ws, max(ks))
+        mp.ensure_analyzed(base, ids)
+        budget = mp.resolve_budget(ids, 0.3)
+        csv = Csv("stability", [
+            "K", "wall_mean_s", "wall_std_s", "expert_io_mb",
+            "expert_io_std", "plan_s_mean",
+        ])
+        for k in ks:
+            walls, ios, plans = [], [], []
+            for _ in range(repeats):
+                with measure(mp.stats) as io:
+                    t0 = time.time()
+                    res = mp.merge(base, ids[:k], op,
+                                   theta={"trim_frac": 0.3}, budget=budget,
+                                   reuse_plan=False)
+                    walls.append(time.time() - t0)
+                ios.append(io["expert_read"] / 1e6)
+                plans.append(res.stats["plan"]["plan_seconds"])
+            csv.row(k, statistics.mean(walls),
+                    statistics.stdev(walls) if len(walls) > 1 else 0.0,
+                    statistics.mean(ios),
+                    statistics.stdev(ios) if len(ios) > 1 else 0.0,
+                    statistics.mean(plans))
+    finally:
+        cleanup(ws)
+
+
+if __name__ == "__main__":
+    run()

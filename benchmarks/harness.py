@@ -1,0 +1,104 @@
+"""Shared benchmark harness.
+
+Builds synthetic model zoos with realistic tensor structure (layered
+transformer-shaped checkpoints) scaled to container-friendly sizes: the
+paper's 0.6B–8B checkpoints become 4–32 MB here; *byte counts are exact*
+(I/O accounting is at the storage layer) and wall-time trends match the
+paper's because both systems are I/O-dominated.  Scale with
+``REPRO_BENCH_MB`` (default 8 MB per checkpoint).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.api import MergePipe
+from repro.store.iostats import IOStats, measure
+
+
+def bench_mb() -> float:
+    return float(os.environ.get("REPRO_BENCH_MB", "8"))
+
+
+def model_shapes(total_mb: float) -> Dict[str, Tuple[int, ...]]:
+    """Transformer-shaped tensor inventory summing to ~total_mb."""
+    # distribute: 70% mlp, 20% attn, 10% embed across 24 layers
+    total = int(total_mb * 1e6 / 4)  # f32 elements
+    d = max(64, int((total / (24 * 9)) ** 0.5 // 8 * 8))
+    shapes: Dict[str, Tuple[int, ...]] = {"embed/table": (total // 10 // d, d)}
+    for i in range(24):
+        shapes[f"layer{i:02d}/attn/wqkv"] = (d, 3 * d)
+        shapes[f"layer{i:02d}/attn/wo"] = (d, d)
+        shapes[f"layer{i:02d}/mlp/w_in"] = (d, 4 * d)
+        shapes[f"layer{i:02d}/mlp/w_out"] = (4 * d, d)
+        shapes[f"layer{i:02d}/ln"] = (d,)
+    return shapes
+
+
+def build_zoo(
+    workspace: str,
+    n_experts: int,
+    total_mb: float = None,
+    seed: int = 0,
+    delta_scale: float = 0.02,
+    sparse_delta: float = 0.0,
+    block_size: int = 128 * 1024,
+    stats: IOStats = None,
+) -> Tuple[MergePipe, str, List[str]]:
+    """Base + K experts; experts differ by dense or sparse task vectors."""
+    stats = stats or IOStats()
+    mp = MergePipe(workspace, block_size=block_size, stats=stats)
+    rng = np.random.default_rng(seed)
+    shapes = model_shapes(total_mb or bench_mb())
+    base = {k: rng.normal(size=s).astype(np.float32) for k, s in shapes.items()}
+    mp.register_model("base", base)
+    ids = []
+    for i in range(n_experts):
+        ex = {}
+        for k, v in base.items():
+            delta = delta_scale * rng.normal(size=v.shape).astype(np.float32)
+            if sparse_delta > 0:
+                mask = rng.random(v.shape) < sparse_delta
+                delta = delta * mask
+            ex[k] = v + delta
+        mp.register_model(f"expert-{i:02d}", ex)
+        ids.append(f"expert-{i:02d}")
+    return mp, "base", ids
+
+
+class Csv:
+    """CSV emitter: header once, rows to stdout (benchmarks.run contract)."""
+
+    def __init__(self, name: str, cols: List[str]):
+        self.name = name
+        print(f"# {name}")
+        print(",".join(["bench"] + cols))
+
+    def row(self, *vals) -> None:
+        print(",".join([self.name] + [_fmt(v) for v in vals]), flush=True)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def fresh_dir(tag: str) -> str:
+    d = tempfile.mkdtemp(prefix=f"repro-bench-{tag}-")
+    return d
+
+
+def cleanup(path: str) -> None:
+    shutil.rmtree(path, ignore_errors=True)

@@ -1,0 +1,69 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Emits CSV blocks per benchmark (harness.Csv).  Scale checkpoint sizes
+with REPRO_BENCH_MB (default 8 MB per model; the paper uses 1.2–16 GB —
+byte accounting is exact at any scale).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    bench_blocksize,
+    bench_conflict_ablation,
+    bench_budget,
+    bench_merge_compute,
+    bench_operators,
+    bench_overheads,
+    bench_planner_scale,
+    bench_quality,
+    bench_roofline,
+    bench_scaling_k,
+    bench_stability,
+)
+
+ALL = {
+    "scaling_k": lambda fast: bench_scaling_k.run(
+        ks=(2, 4, 8) if fast else (2, 4, 8, 12, 16, 20), ablation=not fast),
+    "budget": lambda fast: bench_budget.run(
+        fracs=(0.25, 0.75) if fast else (0.1, 0.25, 0.5, 0.75, 1.0),
+        ks=(4,) if fast else (10, 20)),
+    "operators": lambda fast: bench_operators.run(
+        ks=(2, 8) if fast else (2, 4, 8, 12, 16, 20)),
+    "overheads": lambda fast: bench_overheads.run(
+        k=4 if fast else 16, decompose=not fast),
+    "blocksize": lambda fast: bench_blocksize.run(
+        block_sizes=(32, 128) if fast else (16, 32, 64, 128, 256, 512),
+        k=4 if fast else 8),
+    "stability": lambda fast: bench_stability.run(
+        ks=(4, 8) if fast else (4, 8, 12, 16, 20),
+        repeats=2 if fast else 5),
+    "quality": lambda fast: bench_quality.run(
+        budgets=(1.0, 0.5) if fast else (1.0, 0.9, 0.8, 0.7, 0.6, 0.5),
+        k=3 if fast else 8),
+    "merge_compute": lambda fast: bench_merge_compute.run(k=4 if fast else 8),
+    "planner_scale": lambda fast: bench_planner_scale.run(
+        block_kbs=(512, 64) if fast else (512, 128, 32, 8)),
+    "conflict_ablation": lambda fast: bench_conflict_ablation.run(
+        k=4 if fast else 6),
+    "roofline": lambda fast: bench_roofline.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", choices=list(ALL), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(ALL)
+    for name in names:
+        t0 = time.time()
+        ALL[name](args.fast)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

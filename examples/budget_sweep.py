@@ -1,0 +1,54 @@
+"""Budget sweep: the paper's Fig 6 interactively — how the expert-read
+budget trades I/O for output fidelity, on one workspace.
+
+    PYTHONPATH=src python examples/budget_sweep.py
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import MergePipe
+from repro.store.iostats import IOStats, measure
+
+
+def main() -> None:
+    rng = np.random.default_rng(7)
+    shapes = {f"layer{i}/w": (128, 512) for i in range(16)}
+    base = {k: rng.normal(size=s).astype(np.float32)
+            for k, s in shapes.items()}
+    stats = IOStats()
+    with tempfile.TemporaryDirectory() as ws:
+        mp = MergePipe(ws, block_size=32 * 1024, stats=stats)
+        mp.register_model("base", base)
+        ids = []
+        for i in range(10):
+            ex = {k: v + 0.05 * rng.normal(size=v.shape).astype(np.float32)
+                  for k, v in base.items()}
+            ids.append(mp.register_model(f"e{i}", ex))
+        full = mp.load(mp.merge("base", ids, "ties",
+                                theta={"trim_frac": 0.3},
+                                budget=None, sid="full").sid)
+
+        print(f"{'budget':>8s} {'expert MB':>10s} {'wall s':>8s} "
+              f"{'rel-l2 vs full':>14s} {'blocks':>7s}")
+        for frac in (0.1, 0.25, 0.5, 0.75, 1.0):
+            with measure(stats) as io:
+                t0 = time.time()
+                res = mp.merge("base", ids, "ties",
+                               theta={"trim_frac": 0.3},
+                               budget=frac, sid=f"b{frac}",
+                               reuse_plan=False)
+                wall = time.time() - t0
+            out = mp.load(res.sid)
+            num = sum(float(np.sum((out[k] - full[k]) ** 2)) for k in out)
+            den = sum(float(np.sum(full[k] ** 2)) for k in out)
+            ex = mp.explain(res.sid)
+            print(f"{frac:>8.0%} {io['expert_read']/1e6:>10.2f} "
+                  f"{wall:>8.2f} {(num/den)**0.5:>14.2e} "
+                  f"{ex['touched_blocks']:>7d}")
+        mp.close()
+
+
+if __name__ == "__main__":
+    main()

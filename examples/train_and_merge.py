@@ -1,0 +1,131 @@
+"""End-to-end driver: train expert branches of a model-zoo architecture,
+then merge them with MergePipe under an I/O budget and evaluate.
+
+This is the paper's target workflow (iterative expert merging inside an
+LLM development pipeline), end to end:
+
+  1. init a base model (any --arch; default a ~20M-param qwen3-family
+     reduction, --full uses a ~100M config),
+  2. branch-train K experts on distinct synthetic skills (fault-tolerant
+     train loop, checkpoints via the transactional snapshot layer),
+  3. ANALYZE + budget-aware TIES merge of the expert checkpoints,
+  4. evaluate base vs experts vs merged on every skill.
+
+    PYTHONPATH=src python examples/train_and_merge.py \
+        [--arch qwen3-14b] [--experts 3] [--steps 30] [--budget 0.5] [--full]
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import arch_ids, get_smoke_config
+from repro.core import MergePipe
+from repro.models import build_model
+from repro.store.checkpoint import flatten_tree, unflatten_like
+from repro.store.iostats import IOStats, measure
+from repro.train.data import DataPipeline, synth_batch
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_state import init_train_state, make_train_step
+
+
+def scaled_config(arch: str, full: bool):
+    cfg = get_smoke_config(arch)
+    if full:  # ~100M-param variant, still CPU-trainable for a few steps
+        cfg = dataclasses.replace(
+            cfg, n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+            d_ff=1536, vocab_size=32000,
+        )
+    return cfg
+
+
+def eval_loss(model, params, vocab, skill, batches=3):
+    tot = 0.0
+    for s in range(batches):
+        b = synth_batch(seed=1234, step=s, batch=4, seq=32, vocab=vocab,
+                        skill=skill)
+        tot += float(model.loss_fn(
+            params, {k: jnp.asarray(v) for k, v in b.items()}))
+    return tot / batches
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=arch_ids(), default="qwen3-14b")
+    ap.add_argument("--experts", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--budget", type=float, default=0.5)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param variant (slower)")
+    args = ap.parse_args()
+
+    cfg = scaled_config(args.arch, args.full)
+    model = build_model(cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))))
+    print(f"[setup] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.experts} experts x {args.steps} steps")
+
+    opt = AdamWConfig(lr=3e-3, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    step = jax.jit(make_train_step(model, opt))
+    base_state = init_train_state(model, jax.random.PRNGKey(0))
+
+    experts = []
+    for k in range(args.experts):
+        t0 = time.time()
+        st = base_state
+        pipe = DataPipeline(cfg.vocab_size, batch=4, seq=32, seed=k,
+                            skill=k)
+        try:
+            for _ in range(args.steps):
+                st, m = step(st, next(pipe))
+        finally:
+            pipe.close()
+        print(f"[train] expert {k} (skill {k}): final loss "
+              f"{float(m['loss']):.3f} in {time.time()-t0:.1f}s")
+        experts.append(st.params)
+
+    stats = IOStats()
+    with tempfile.TemporaryDirectory() as ws:
+        mp = MergePipe(ws, block_size=64 * 1024, stats=stats)
+        mp.register_model("base", flatten_tree(base_state.params))
+        ids = []
+        for i, p in enumerate(experts):
+            ids.append(mp.register_model(f"skill-{i}", flatten_tree(p)))
+
+        t0 = time.time()
+        with measure(stats) as io:
+            res = mp.merge("base", ids, op="ties",
+                           theta={"trim_frac": 0.3, "lam": 1.0},
+                           budget=args.budget)
+        print(f"[merge] {res.sid} in {time.time()-t0:.1f}s — expert read "
+              f"{io['expert_read']/1e6:.1f} MB "
+              f"(budget {args.budget:.0%} of naive), "
+              f"out {io['out_written']/1e6:.1f} MB")
+        ex = mp.explain(res.sid)
+        print(f"[merge] touched {ex['touched_blocks']} blocks across "
+              f"{ex['touched_tensors']} tensors; budget respected: "
+              f"{ex['budget_respected']}")
+
+        merged = unflatten_like(base_state.params, mp.load(res.sid))
+        print(f"\n{'model':14s}" + "".join(
+            f"skill{k:<9d}" for k in range(args.experts)))
+        row = lambda name, params: print(  # noqa: E731
+            f"{name:14s}" + "".join(
+                f"{eval_loss(model, params, cfg.vocab_size, k):<14.3f}"
+                for k in range(args.experts)))
+        row("base", base_state.params)
+        for i, p in enumerate(experts):
+            row(f"expert-{i}", p)
+        row("merged", merged)
+        print("\nThe merged model recovers multiple skills from one "
+              "checkpoint — with expert I/O bounded by the budget.")
+        mp.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — MergePipe (budget-aware LLM merging) on a multi-pod JAX stack."""
+__version__ = "1.0.0"

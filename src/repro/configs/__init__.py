@@ -1,0 +1,5 @@
+"""Assigned-architecture configs (+ reduced smoke variants)."""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import arch_ids, get_config, get_smoke_config
+
+__all__ = ["ModelConfig", "arch_ids", "get_config", "get_smoke_config"]

@@ -1,0 +1,200 @@
+"""MergePipe public API — the facade over catalog / planner / executor.
+
+Typical use::
+
+    mp = MergePipe("/path/workspace")
+    mp.register_model("base", base_arrays)
+    mp.register_model("expert-0", ex0, kind="full")
+    mp.analyze("base")
+    mp.analyze("expert-0", base_id="base")
+    result = mp.merge("base", ["expert-0"], op="ties",
+                      theta={"trim_frac": 0.2}, budget=0.3)
+    arrays = mp.load(result.sid)
+    mp.explain(result.sid)
+
+``budget`` accepts absolute bytes (int) or a fraction of the naive
+full-read expert cost (float in (0, 1]); ``None`` = unbounded (the
+faithful full-read configuration).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import blocks as blk
+from repro.core import cost as cost_model
+from repro.core.catalog import Catalog
+from repro.core.executor import MergeResult, execute_merge
+from repro.core.lineage import explain as _explain
+from repro.core.lineage import lineage_chain, verify_snapshot
+from repro.core.plan import MergePlan
+from repro.core.planner import PlannerResult, plan_merge
+from repro.core.sketch import analyze_model
+from repro.core.transactions import TransactionManager
+from repro.store.iostats import GLOBAL_STATS, IOStats
+from repro.store.snapshot import SnapshotStore
+from repro.store.tensorstore import load_model_arrays
+
+
+class MergePipe:
+    def __init__(
+        self,
+        workspace: str,
+        block_size: int = blk.DEFAULT_BLOCK_SIZE,
+        stats: Optional[IOStats] = None,
+        recover: bool = True,
+    ):
+        self.workspace = workspace
+        self.block_size = block_size
+        self.stats = stats or GLOBAL_STATS
+        os.makedirs(workspace, exist_ok=True)
+        self.snapshots = SnapshotStore(workspace, self.stats)
+        self.catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), self.stats)
+        self.txn = TransactionManager(self.snapshots, self.catalog)
+        if recover:
+            self.txn.recover()
+
+    # ------------------------------------------------------------ ingestion
+    def register_model(
+        self,
+        model_id: str,
+        arrays: Mapping[str, np.ndarray],
+        kind: str = "full",
+        scale: float = 1.0,
+        analyze: bool = False,
+        base_id: Optional[str] = None,
+    ) -> str:
+        meta: Dict[str, Any] = {"kind": kind}
+        if kind == "adapter":
+            meta["scale"] = scale
+        self.snapshots.models.write_model(model_id, arrays, meta=meta)
+        if analyze:
+            self.analyze(model_id, base_id=base_id)
+        return model_id
+
+    # -------------------------------------------------------------- ANALYZE
+    def analyze(
+        self, model_id: str, base_id: Optional[str] = None, force: bool = False
+    ) -> Dict:
+        return analyze_model(
+            self.catalog,
+            self.snapshots.models,
+            model_id,
+            self.block_size,
+            base_id=base_id,
+            force=force,
+        )
+
+    def ensure_analyzed(
+        self, base_id: str, expert_ids: Sequence[str]
+    ) -> None:
+        self.analyze(base_id)
+        for e in expert_ids:
+            self.analyze(e, base_id=base_id)
+
+    # ----------------------------------------------------------------- PLAN
+    def resolve_budget(
+        self, expert_ids: Sequence[str], budget: Union[None, int, float]
+    ) -> Optional[int]:
+        if budget is None:
+            return None
+        if isinstance(budget, float) and 0 < budget <= 1.0:
+            naive = cost_model.naive_expert_cost(self.catalog, expert_ids)
+            return int(budget * naive)
+        return int(budget)
+
+    def plan(
+        self,
+        base_id: str,
+        expert_ids: Sequence[str],
+        op: str,
+        theta: Optional[Dict] = None,
+        budget: Union[None, int, float] = None,
+        conflict_aware: bool = True,
+        reuse: bool = True,
+    ) -> PlannerResult:
+        budget_b = self.resolve_budget(expert_ids, budget)
+        return plan_merge(
+            self.catalog,
+            base_id,
+            expert_ids,
+            op,
+            theta=theta,
+            budget_b=budget_b,
+            block_size=self.block_size,
+            conflict_aware=conflict_aware,
+            reuse=reuse,
+        )
+
+    def estimate(
+        self,
+        base_id: str,
+        expert_ids: Sequence[str],
+        plan: Optional[MergePlan] = None,
+    ) -> cost_model.CostEstimate:
+        return cost_model.estimate(
+            self.catalog,
+            base_id,
+            expert_ids,
+            c_expert_hat=plan.c_expert_hat if plan else None,
+        )
+
+    # ---------------------------------------------------------------- MERGE
+    def merge(
+        self,
+        base_id: str,
+        expert_ids: Sequence[str],
+        op: str,
+        theta: Optional[Dict] = None,
+        budget: Union[None, int, float] = None,
+        sid: Optional[str] = None,
+        compute: str = "stream",
+        coalesce: bool = True,
+        analyze: bool = True,
+        conflict_aware: bool = True,
+        reuse_plan: bool = True,
+    ) -> MergeResult:
+        """ANALYZE (cached) -> PLAN -> EXECUTE -> COMMIT."""
+        if analyze:
+            self.ensure_analyzed(base_id, expert_ids)
+        pr = self.plan(
+            base_id, expert_ids, op, theta=theta, budget=budget,
+            conflict_aware=conflict_aware, reuse=reuse_plan,
+        )
+        result = self.execute(pr.plan, sid=sid, compute=compute, coalesce=coalesce)
+        result.stats["plan"] = pr.stats
+        return result
+
+    def execute(
+        self,
+        plan: MergePlan,
+        sid: Optional[str] = None,
+        compute: str = "stream",
+        coalesce: bool = True,
+    ) -> MergeResult:
+        return execute_merge(
+            plan, self.snapshots, self.catalog, sid=sid, txn=self.txn,
+            compute=compute, coalesce=coalesce,
+        )
+
+    # ---------------------------------------------------------------- audit
+    def explain(self, sid: str) -> Dict:
+        return _explain(self.catalog, self.snapshots, sid)
+
+    def lineage(self, sid: str):
+        return lineage_chain(self.catalog, sid)
+
+    def verify(self, sid: str) -> bool:
+        return verify_snapshot(self.snapshots, sid)
+
+    # ----------------------------------------------------------------- data
+    def load(self, model_id: str) -> Dict[str, np.ndarray]:
+        return load_model_arrays(self.snapshots.models, model_id)
+
+    def list_snapshots(self):
+        return self.snapshots.list_snapshots()
+
+    def close(self) -> None:
+        self.catalog.close()

@@ -1,0 +1,360 @@
+"""Persistent catalog — the paper's Table 1 relations, backed by SQLite.
+
+Records:
+    TensorMeta  model_id, tensor_id; shape, dtype, nbytes          (for fallback)
+    BlockMeta   model_id, tensor_id, block_size, block_idx;
+                bytes, hash, sketch (l2/absmax/mean/sign_sig/l2_delta/cos_base)
+    TouchMap    sid, tensor_id; touched block ranges
+    Coverage    sid, tensor_id, block_idx; expert-set digest
+    Plan        plan_id; base_id, expert_ids, op, budget_B,
+                selected_blocks_digest, C_expert_hat, payload
+    Manifest    sid; plan_id, base_id, expert_ids, op, budget_B,
+                realized C_expert, output_root, created_at
+
+The catalog is metadata-only: ANALYZE writes block statistics once per
+checkpoint; planning then never touches parameter bytes (G2).  Catalog I/O
+is tagged ``meta`` so C_meta stays visible in every experiment.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import threading
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.store.iostats import GLOBAL_STATS, IOStats
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS tensor_meta (
+    model_id  TEXT NOT NULL,
+    tensor_id TEXT NOT NULL,
+    shape     TEXT NOT NULL,
+    dtype     TEXT NOT NULL,
+    nbytes    INTEGER NOT NULL,
+    PRIMARY KEY (model_id, tensor_id)
+);
+CREATE TABLE IF NOT EXISTS block_meta (
+    model_id   TEXT NOT NULL,
+    tensor_id  TEXT NOT NULL,
+    block_size INTEGER NOT NULL,
+    block_idx  INTEGER NOT NULL,
+    bytes      INTEGER NOT NULL,
+    hash       TEXT NOT NULL,
+    l2         REAL NOT NULL,
+    absmax     REAL NOT NULL,
+    mean       REAL NOT NULL,
+    sign_sig   INTEGER NOT NULL,
+    l2_delta   REAL,
+    cos_base   REAL,
+    PRIMARY KEY (model_id, tensor_id, block_size, block_idx)
+);
+CREATE TABLE IF NOT EXISTS analysis (
+    model_id   TEXT NOT NULL,
+    block_size INTEGER NOT NULL,
+    base_id    TEXT,
+    created_at REAL NOT NULL,
+    PRIMARY KEY (model_id, block_size)
+);
+CREATE TABLE IF NOT EXISTS touch_map (
+    sid        TEXT NOT NULL,
+    tensor_id  TEXT NOT NULL,
+    ranges     TEXT NOT NULL,
+    PRIMARY KEY (sid, tensor_id)
+);
+CREATE TABLE IF NOT EXISTS coverage (
+    sid        TEXT NOT NULL,
+    tensor_id  TEXT NOT NULL,
+    block_idx  INTEGER NOT NULL,
+    expert_set TEXT NOT NULL,
+    PRIMARY KEY (sid, tensor_id, block_idx)
+);
+CREATE TABLE IF NOT EXISTS plan (
+    plan_id    TEXT PRIMARY KEY,
+    base_id    TEXT NOT NULL,
+    expert_ids TEXT NOT NULL,
+    op         TEXT NOT NULL,
+    budget_b   INTEGER NOT NULL,
+    selected_blocks_digest TEXT NOT NULL,
+    c_expert_hat INTEGER NOT NULL,
+    payload    TEXT NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS manifest (
+    sid        TEXT PRIMARY KEY,
+    plan_id    TEXT NOT NULL,
+    base_id    TEXT NOT NULL,
+    expert_ids TEXT NOT NULL,
+    op         TEXT NOT NULL,
+    budget_b   INTEGER NOT NULL,
+    c_expert_run INTEGER NOT NULL,
+    output_root TEXT NOT NULL,
+    created_at REAL NOT NULL
+);
+"""
+
+
+class Catalog:
+    """SQLite-backed catalog; one file per workspace."""
+
+    def __init__(self, path: str, stats: Optional[IOStats] = None):
+        self.path = path
+        self.stats = stats or GLOBAL_STATS
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._local = threading.local()
+        self._conn().executescript(_SCHEMA)
+        self._conn().commit()
+
+    def _conn(self) -> sqlite3.Connection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = sqlite3.connect(self.path)
+            conn.execute("PRAGMA journal_mode=WAL")
+            conn.execute("PRAGMA synchronous=NORMAL")
+            self._local.conn = conn
+        return conn
+
+    def _meta_io(self, payload_rows: int, row_bytes: int = 96) -> None:
+        # approximate catalog I/O accounting (exact file deltas are reported
+        # separately via catalog_nbytes())
+        self.stats.record_write("meta", payload_rows * row_bytes)
+
+    # ----------------------------------------------------------- TensorMeta
+    def upsert_tensor_meta(
+        self, model_id: str, rows: Iterable[Tuple[str, str, str, int]]
+    ) -> None:
+        """rows: (tensor_id, shape_json, dtype, nbytes)"""
+        rows = list(rows)
+        self._conn().executemany(
+            "INSERT OR REPLACE INTO tensor_meta VALUES (?,?,?,?,?)",
+            [(model_id, t, s, d, n) for t, s, d, n in rows],
+        )
+        self._conn().commit()
+        self._meta_io(len(rows))
+
+    def tensor_metas(self, model_id: str) -> List[sqlite3.Row]:
+        cur = self._conn().execute(
+            "SELECT tensor_id, shape, dtype, nbytes FROM tensor_meta "
+            "WHERE model_id=? ORDER BY tensor_id",
+            (model_id,),
+        )
+        return cur.fetchall()
+
+    # ------------------------------------------------------------ BlockMeta
+    def upsert_block_meta(self, rows: Sequence[Tuple]) -> None:
+        """rows: (model_id, tensor_id, block_size, block_idx, bytes, hash,
+        l2, absmax, mean, sign_sig, l2_delta, cos_base)"""
+        self._conn().executemany(
+            "INSERT OR REPLACE INTO block_meta VALUES (?,?,?,?,?,?,?,?,?,?,?,?)",
+            rows,
+        )
+        self._conn().commit()
+        self._meta_io(len(rows))
+
+    def block_metas(
+        self, model_id: str, block_size: int, tensor_id: Optional[str] = None
+    ) -> List[Tuple]:
+        q = (
+            "SELECT tensor_id, block_idx, bytes, hash, l2, absmax, mean, "
+            "sign_sig, l2_delta, cos_base FROM block_meta "
+            "WHERE model_id=? AND block_size=?"
+        )
+        args: List = [model_id, block_size]
+        if tensor_id is not None:
+            q += " AND tensor_id=?"
+            args.append(tensor_id)
+        q += " ORDER BY tensor_id, block_idx"
+        return self._conn().execute(q, args).fetchall()
+
+    def mark_analyzed(
+        self, model_id: str, block_size: int, base_id: Optional[str]
+    ) -> None:
+        self._conn().execute(
+            "INSERT OR REPLACE INTO analysis VALUES (?,?,?,?)",
+            (model_id, block_size, base_id, time.time()),
+        )
+        self._conn().commit()
+        self._meta_io(1)
+
+    def has_analysis(self, model_id: str, block_size: int) -> bool:
+        cur = self._conn().execute(
+            "SELECT 1 FROM analysis WHERE model_id=? AND block_size=?",
+            (model_id, block_size),
+        )
+        return cur.fetchone() is not None
+
+    # -------------------------------------------------------------- TouchMap
+    def record_touch_map(
+        self, sid: str, touched: Dict[str, List[Tuple[int, int]]]
+    ) -> None:
+        rows = [(sid, t, json.dumps(ranges)) for t, ranges in touched.items()]
+        self._conn().executemany(
+            "INSERT OR REPLACE INTO touch_map VALUES (?,?,?)", rows
+        )
+        self._conn().commit()
+        self._meta_io(len(rows))
+
+    def touch_map(self, sid: str) -> Dict[str, List[Tuple[int, int]]]:
+        cur = self._conn().execute(
+            "SELECT tensor_id, ranges FROM touch_map WHERE sid=?", (sid,)
+        )
+        return {t: [tuple(r) for r in json.loads(rj)] for t, rj in cur.fetchall()}
+
+    # -------------------------------------------------------------- Coverage
+    def record_coverage(
+        self, sid: str, rows: Sequence[Tuple[str, int, str]]
+    ) -> None:
+        """rows: (tensor_id, block_idx, expert_set_digest)"""
+        self._conn().executemany(
+            "INSERT OR REPLACE INTO coverage VALUES (?,?,?,?)",
+            [(sid, t, b, e) for t, b, e in rows],
+        )
+        self._conn().commit()
+        self._meta_io(len(rows), row_bytes=48)
+
+    def coverage(self, sid: str, tensor_id: Optional[str] = None) -> List[Tuple]:
+        q = "SELECT tensor_id, block_idx, expert_set FROM coverage WHERE sid=?"
+        args: List = [sid]
+        if tensor_id is not None:
+            q += " AND tensor_id=?"
+            args.append(tensor_id)
+        return self._conn().execute(q, args).fetchall()
+
+    # ------------------------------------------------------------------ Plan
+    def record_plan(
+        self,
+        plan_id: str,
+        base_id: str,
+        expert_ids: Sequence[str],
+        op: str,
+        budget_b: int,
+        selected_blocks_digest: str,
+        c_expert_hat: int,
+        payload: Dict,
+    ) -> None:
+        self._conn().execute(
+            "INSERT OR REPLACE INTO plan VALUES (?,?,?,?,?,?,?,?,?)",
+            (
+                plan_id,
+                base_id,
+                json.dumps(list(expert_ids)),
+                op,
+                budget_b,
+                selected_blocks_digest,
+                c_expert_hat,
+                json.dumps(payload),
+                time.time(),
+            ),
+        )
+        self._conn().commit()
+        self._meta_io(1, row_bytes=len(json.dumps(payload)) + 128)
+
+    def get_plan(self, plan_id: str) -> Optional[Dict]:
+        cur = self._conn().execute(
+            "SELECT plan_id, base_id, expert_ids, op, budget_b, "
+            "selected_blocks_digest, c_expert_hat, payload, created_at "
+            "FROM plan WHERE plan_id=?",
+            (plan_id,),
+        )
+        row = cur.fetchone()
+        if row is None:
+            return None
+        return {
+            "plan_id": row[0],
+            "base_id": row[1],
+            "expert_ids": json.loads(row[2]),
+            "op": row[3],
+            "budget_b": row[4],
+            "selected_blocks_digest": row[5],
+            "c_expert_hat": row[6],
+            "payload": json.loads(row[7]),
+            "created_at": row[8],
+        }
+
+    def find_reusable_plan(
+        self,
+        base_id: str,
+        expert_ids: Sequence[str],
+        op: str,
+        budget_b: int,
+    ) -> Optional[Dict]:
+        """Plan reuse across iterative merges (§2.2): same inputs, same
+        budget, same operator -> identical plan, skip PlanGen entirely."""
+        cur = self._conn().execute(
+            "SELECT plan_id FROM plan WHERE base_id=? AND expert_ids=? AND "
+            "op=? AND budget_b=? ORDER BY created_at DESC LIMIT 1",
+            (base_id, json.dumps(list(expert_ids)), op, budget_b),
+        )
+        row = cur.fetchone()
+        return self.get_plan(row[0]) if row else None
+
+    # --------------------------------------------------------------- Manifest
+    def record_manifest(
+        self,
+        sid: str,
+        plan_id: str,
+        base_id: str,
+        expert_ids: Sequence[str],
+        op: str,
+        budget_b: int,
+        c_expert_run: int,
+        output_root: str,
+    ) -> None:
+        self._conn().execute(
+            "INSERT INTO manifest VALUES (?,?,?,?,?,?,?,?,?)",
+            (
+                sid,
+                plan_id,
+                base_id,
+                json.dumps(list(expert_ids)),
+                op,
+                budget_b,
+                c_expert_run,
+                output_root,
+                time.time(),
+            ),
+        )
+        self._conn().commit()
+        self._meta_io(1, row_bytes=192)
+
+    def get_manifest(self, sid: str) -> Optional[Dict]:
+        cur = self._conn().execute(
+            "SELECT sid, plan_id, base_id, expert_ids, op, budget_b, "
+            "c_expert_run, output_root, created_at FROM manifest WHERE sid=?",
+            (sid,),
+        )
+        row = cur.fetchone()
+        if row is None:
+            return None
+        return {
+            "sid": row[0],
+            "plan_id": row[1],
+            "base_id": row[2],
+            "expert_ids": json.loads(row[3]),
+            "op": row[4],
+            "budget_b": row[5],
+            "c_expert_run": row[6],
+            "output_root": row[7],
+            "created_at": row[8],
+        }
+
+    def list_manifests(self) -> List[str]:
+        cur = self._conn().execute("SELECT sid FROM manifest ORDER BY created_at")
+        return [r[0] for r in cur.fetchall()]
+
+    # ------------------------------------------------------------------ misc
+    def catalog_nbytes(self) -> int:
+        self._conn().commit()
+        total = 0
+        for suffix in ("", "-wal", "-shm"):
+            p = self.path + suffix
+            if os.path.exists(p):
+                total += os.path.getsize(p)
+        return total
+
+    def close(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+            self._local.conn = None

@@ -1,0 +1,69 @@
+"""Cost model for model merging (paper §3).
+
+    C_merge = C_base + C_expert + C_out + C_meta
+
+``C_base`` and ``C_out`` are semantic necessities (every merge reads the
+full base and writes a complete output checkpoint).  ``C_expert`` is the
+only term that grows with K under naive execution and the only term the
+planner optimizes; the budget constraint is ``C_expert <= B``.
+
+All estimates here are *metadata-only*: they read the catalog, never
+parameter bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+from repro.core.catalog import Catalog
+
+
+@dataclasses.dataclass
+class CostEstimate:
+    c_base: int
+    c_expert_hat: int
+    c_out: int
+    c_meta_hat: int
+
+    @property
+    def c_total_hat(self) -> int:
+        return self.c_base + self.c_expert_hat + self.c_out + self.c_meta_hat
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self) | {"c_total_hat": self.c_total_hat}
+
+
+def model_nbytes(catalog: Catalog, model_id: str) -> int:
+    """Total parameter bytes of a cataloged model (Σ size(T))."""
+    rows = catalog.tensor_metas(model_id)
+    if not rows:
+        raise KeyError(f"model {model_id!r} has no tensor metadata in catalog")
+    return sum(r[3] for r in rows)
+
+
+def naive_expert_cost(catalog: Catalog, expert_ids: Sequence[str]) -> int:
+    """C_expert^naive = Σ_i Σ_{T∈M_i} size(T) — the O(K) term (§3.2)."""
+    return sum(model_nbytes(catalog, e) for e in expert_ids)
+
+
+def estimate(
+    catalog: Catalog,
+    base_id: str,
+    expert_ids: Sequence[str],
+    c_expert_hat: Optional[int] = None,
+    meta_fraction: float = 0.002,
+) -> CostEstimate:
+    """Bind the cost model to a candidate plan (§4.2).
+
+    ``c_expert_hat`` is the planned expert read cost (Σ selected block
+    sizes); if None, the naive full-read cost is used.  ``C_meta`` is
+    bounded and weakly strategy-dependent; we budget it as a small fixed
+    fraction of moved bytes (validated against measurements in
+    benchmarks/bench_overheads.py).
+    """
+    c_base = model_nbytes(catalog, base_id)
+    c_out = c_base  # merged model preserves the base tensor structure
+    if c_expert_hat is None:
+        c_expert_hat = naive_expert_cost(catalog, expert_ids)
+    c_meta = int(meta_fraction * (c_base + c_out + c_expert_hat))
+    return CostEstimate(c_base, c_expert_hat, c_out, c_meta)

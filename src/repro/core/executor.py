@@ -1,0 +1,282 @@
+"""ExecuteMerge — budget-enforced streaming execution (paper §5, Algorithm 2).
+
+The engine enforces a planner-produced plan π:
+
+  * every base block is read and every output block is written — the
+    output is always a *complete checkpoint* (C_base, C_out intrinsic);
+  * expert blocks are read **iff** selected by π (budget soundness:
+    realized expert I/O <= Ĉ_expert(π) <= B);
+  * writes are staged, hash-validated, and atomically published as an
+    immutable snapshot with full lineage (touch maps + per-block expert
+    coverage).
+
+Two compute paths apply the operator:
+  ``stream``  — per-block numpy apply (paper-faithful CPU streaming);
+  ``batched`` — stacks same-width blocks and calls the jitted kernel
+                wrappers in :mod:`repro.kernels.ops` (TPU-native path;
+                beyond-paper optimization, bit-identical results are
+                asserted in tests).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import blocks as blk
+from repro.core.catalog import Catalog
+from repro.core.delta_iterator import DeltaIterator
+from repro.core.operators import apply_operator, dare_mask
+from repro.core.plan import MergePlan
+from repro.core.transactions import TransactionManager
+from repro.store.iostats import IOStats
+from repro.store.snapshot import SnapshotStore
+
+
+def _ranges_from_indices(idxs: List[int]) -> List[Tuple[int, int]]:
+    """Compress sorted block indexes into [start, end) ranges (TouchMap)."""
+    if not idxs:
+        return []
+    runs = []
+    start = prev = idxs[0]
+    for i in idxs[1:]:
+        if i == prev + 1:
+            prev = i
+            continue
+        runs.append((start, prev + 1))
+        start = prev = i
+    runs.append((start, prev + 1))
+    return runs
+
+
+class MergeResult:
+    def __init__(self, sid: str, manifest: Dict, stats: Dict):
+        self.sid = sid
+        self.manifest = manifest
+        self.stats = stats
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"MergeResult(sid={self.sid!r}, stats={self.stats})"
+
+
+def execute_merge(
+    plan: MergePlan,
+    snapshots: SnapshotStore,
+    catalog: Catalog,
+    sid: Optional[str] = None,
+    txn: Optional[TransactionManager] = None,
+    coalesce: bool = True,
+    compute: str = "stream",
+    validate: bool = True,
+    enforce_budget: bool = True,
+) -> MergeResult:
+    """Run Algorithm 2 for plan π and return the committed snapshot."""
+    t0 = time.time()
+    stats: IOStats = snapshots.stats
+    expert_read_before = stats.c_expert
+    txn = txn or TransactionManager(snapshots, catalog)
+    sid = sid or TransactionManager.new_sid()
+
+    if compute == "batched":
+        from repro.kernels import ops as kernel_ops  # lazy: jax import
+    elif compute != "stream":
+        raise ValueError(f"unknown compute mode {compute!r}")
+
+    # -- Transaction and staging -----------------------------------------
+    writer = txn.begin()
+    touch: Dict[str, List[int]] = {}
+    coverage_rows: List[Tuple[str, int, str]] = []
+
+    base_reader = snapshots.models.open_model(plan.base_id)
+    expert_readers = {
+        e: snapshots.models.open_model(e) for e in plan.expert_ids
+    }
+    theta = dict(plan.theta)
+    seed = int(theta.get("seed", 0))
+    is_dare = plan.op.lower() == "dare"
+
+    realized_expert_blocks = 0
+    try:
+        # -- (1) Stream selected blocks under plan π -----------------------
+        for tensor_id in plan.tensor_order:
+            spec = base_reader.spec(tensor_id)
+            writer.begin_tensor(tensor_id, spec.shape, spec.dtype)
+            rev = plan.reverse_index(tensor_id)
+            mergeable = np.issubdtype(
+                np.asarray([], dtype=spec.dtype).dtype, np.floating
+            ) or spec["dtype"] in ("bfloat16", "float16", "float32", "float64")
+            D = DeltaIterator(
+                tensor_id, plan, base_reader, expert_readers, coalesce=coalesce
+            )
+            n_blocks = blk.num_blocks(spec.nbytes, plan.block_size)
+            touched: List[int] = []
+
+            if compute == "batched" and mergeable:
+                _run_tensor_batched(
+                    kernel_ops, plan, writer, base_reader, D, rev,
+                    tensor_id, spec, n_blocks, theta, seed, is_dare,
+                    touched, coverage_rows,
+                )
+                realized_expert_blocks += sum(len(v) for v in rev.values())
+            else:
+                for b in range(n_blocks):
+                    x0 = base_reader.read_block(
+                        tensor_id, b, plan.block_size, "base"
+                    )
+                    if mergeable and b in rev:
+                        deltas, eidxs, eids = D.pull(b, x0)
+                        realized_expert_blocks += len(eids)
+                        if is_dare and len(eids):
+                            theta["_masks"] = np.stack(
+                                [
+                                    dare_mask(
+                                        seed, ei, tensor_id, b, x0.size,
+                                        float(theta.get("density", 0.5)),
+                                    )
+                                    for ei in eidxs
+                                ]
+                            )
+                        x = apply_operator(x0, deltas, plan.op, theta)
+                        theta.pop("_masks", None)
+                        if len(eids):
+                            touched.append(b)
+                            coverage_rows.append(
+                                (tensor_id, b, ",".join(eids))
+                            )
+                    else:
+                        x = x0  # base passthrough (no expert selected)
+                    writer.write_block(tensor_id, b, x)
+            writer.finish_tensor(tensor_id)
+            touch[tensor_id] = touched
+
+        # -- (2) Validate and atomically publish --------------------------
+        if validate:
+            writer.validate_hashes()
+
+        realized_expert_bytes = stats.c_expert - expert_read_before
+        if enforce_budget and plan.budget_b >= 0:
+            # Budget soundness (§5.1): realized <= planned <= B, up to the
+            # storage layer's accounting granularity (adapters read factor
+            # tensors, which are far below the planned block bytes).
+            slack = 2 * plan.block_size
+            if realized_expert_bytes > plan.c_expert_hat + slack:
+                raise RuntimeError(
+                    f"budget soundness violated: realized expert bytes "
+                    f"{realized_expert_bytes} > planned {plan.c_expert_hat}"
+                )
+
+        manifest = {
+            "sid": sid,
+            "plan_id": plan.plan_id,
+            "base_id": plan.base_id,
+            "expert_ids": plan.expert_ids,
+            "op": plan.op,
+            "theta": {k: v for k, v in theta.items() if not k.startswith("_")},
+            "budget_b": plan.budget_b,
+            "c_expert_hat": plan.c_expert_hat,
+            "c_expert_run": realized_expert_bytes,
+            "plan_digest": plan.digest(),
+            "block_size": plan.block_size,
+        }
+        sid = txn.atomic_publish(writer, manifest)
+        manifest["output_root"] = snapshots.manifest(sid)["output_root"]
+        txn.commit_record(sid, manifest)
+        catalog.record_touch_map(
+            sid, {t: _ranges_from_indices(ix) for t, ix in touch.items()}
+        )
+        catalog.record_coverage(sid, coverage_rows)
+        txn.commit()
+    except Exception:
+        txn.abort()
+        raise
+    finally:
+        base_reader.close()
+        for r in expert_readers.values():
+            r.close()
+
+    run_stats = {
+        "seconds": time.time() - t0,
+        "c_expert_run": realized_expert_bytes,
+        "c_expert_hat": plan.c_expert_hat,
+        "realized_expert_blocks": realized_expert_blocks,
+        "compute": compute,
+        "coalesce": coalesce,
+    }
+    return MergeResult(sid, manifest, run_stats)
+
+
+def _run_tensor_batched(
+    kernel_ops,
+    plan: MergePlan,
+    writer,
+    base_reader,
+    D: DeltaIterator,
+    rev: Dict[int, List[str]],
+    tensor_id: str,
+    spec,
+    n_blocks: int,
+    theta: Dict,
+    seed: int,
+    is_dare: bool,
+    touched: List[int],
+    coverage_rows: List[Tuple[str, int, str]],
+) -> None:
+    """Batched compute path: group blocks by (K_sel, width) and apply the
+    jitted kernel once per group.  Physical I/O identical to the stream
+    path; only operator application is vectorized."""
+    eid_to_idx = {e: i for i, e in enumerate(plan.expert_ids)}
+    # gather all blocks first (full tensor streams block-by-block for I/O
+    # accounting, then math runs in grouped batches)
+    base_blocks: List[np.ndarray] = []
+    deltas_per_block: List[Optional[np.ndarray]] = []
+    eidxs_per_block: List[List[int]] = []
+    for b in range(n_blocks):
+        x0 = base_reader.read_block(tensor_id, b, plan.block_size, "base")
+        base_blocks.append(x0)
+        if b in rev:
+            deltas, eidxs, eids = D.pull(b, x0)
+            deltas_per_block.append(deltas)
+            eidxs_per_block.append(eidxs)
+            if len(eids):
+                touched.append(b)
+                coverage_rows.append((tensor_id, b, ",".join(eids)))
+        else:
+            deltas_per_block.append(None)
+            eidxs_per_block.append([])
+
+    out_blocks: List[Optional[np.ndarray]] = [None] * n_blocks
+    groups: Dict[Tuple[int, int], List[int]] = {}
+    for b in range(n_blocks):
+        d = deltas_per_block[b]
+        if d is None or d.shape[0] == 0:
+            out_blocks[b] = base_blocks[b]
+            continue
+        groups.setdefault((d.shape[0], base_blocks[b].size), []).append(b)
+
+    for (k_sel, width), idxs in groups.items():
+        x0s = np.stack([np.asarray(base_blocks[b], np.float32) for b in idxs])
+        Ds = np.stack([deltas_per_block[b] for b in idxs])  # (nb, k, w)
+        masks = None
+        if is_dare:
+            masks = np.stack(
+                [
+                    np.stack(
+                        [
+                            dare_mask(
+                                seed, ei, tensor_id, b, width,
+                                float(theta.get("density", 0.5)),
+                            )
+                            for ei in eidxs_per_block[b]
+                        ]
+                    )
+                    for b in idxs
+                ]
+            )
+        outs = kernel_ops.merge_blocks(plan.op, x0s, Ds, theta, masks=masks)
+        outs = np.asarray(outs).astype(np.asarray(base_blocks[idxs[0]]).dtype)
+        for j, b in enumerate(idxs):
+            out_blocks[b] = outs[j]
+
+    for b in range(n_blocks):
+        writer.write_block(tensor_id, b, out_blocks[b])

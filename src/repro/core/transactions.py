@@ -1,0 +1,94 @@
+"""Transaction manager — Begin / AtomicPublish / Commit (Algorithm 2).
+
+Thin coordinator over :class:`SnapshotStore` and :class:`Catalog` that
+gives the executor the exact call surface of the paper's pseudocode and
+centralizes failure injection for crash-safety tests.
+
+Commit protocol (all-or-nothing):
+    1. stage writes              (invisible)
+    2. validate hashes           (invisible)
+    3. snapshot dir rename + manifest file replace  <- publish point
+    4. catalog CommitRecord      (idempotent, recoverable from manifest)
+
+A crash before (3) leaves only an orphaned staging dir (gc'd on next
+start); a crash between (3) and (4) is repaired by ``recover()``, which
+re-registers any published manifest missing from the catalog.
+"""
+from __future__ import annotations
+
+import uuid
+from typing import Dict, Optional
+
+from repro.core.catalog import Catalog
+from repro.store.snapshot import SnapshotStore, StagingWriter
+
+
+class CrashPoint(Exception):
+    """Raised by injected failures in tests."""
+
+
+class TransactionManager:
+    def __init__(self, snapshots: SnapshotStore, catalog: Catalog):
+        self.snapshots = snapshots
+        self.catalog = catalog
+        self._active: Optional[StagingWriter] = None
+        # test hooks
+        self.fail_before_publish = False
+        self.fail_after_publish = False
+
+    def begin(self) -> StagingWriter:
+        if self._active is not None:
+            raise RuntimeError("transaction already active")
+        self._active = self.snapshots.open_staging_writer()
+        return self._active
+
+    def atomic_publish(self, writer: StagingWriter, manifest: Dict) -> str:
+        if writer is not self._active:
+            raise RuntimeError("publishing a writer from another transaction")
+        if self.fail_before_publish:
+            self.abort()
+            raise CrashPoint("injected failure before publish")
+        sid = self.snapshots.atomic_publish(writer, manifest)
+        if self.fail_after_publish:
+            self._active = None
+            raise CrashPoint("injected failure after publish (pre-catalog)")
+        return sid
+
+    def commit_record(self, sid: str, manifest: Dict) -> None:
+        self.catalog.record_manifest(
+            sid,
+            manifest["plan_id"],
+            manifest["base_id"],
+            manifest["expert_ids"],
+            manifest["op"],
+            manifest["budget_b"],
+            manifest["c_expert_run"],
+            manifest["output_root"],
+        )
+
+    def commit(self) -> None:
+        self._active = None
+
+    def abort(self) -> None:
+        if self._active is not None:
+            self._active.abort()
+            self._active = None
+
+    @staticmethod
+    def new_sid() -> str:
+        return "snap-" + uuid.uuid4().hex[:12]
+
+    # -- recovery ---------------------------------------------------------
+    def recover(self) -> Dict[str, int]:
+        """Crash recovery: gc staging orphans; re-register published
+        manifests missing from the catalog (idempotent)."""
+        gc = self.snapshots.gc_staging()
+        repaired = 0
+        known = set(self.catalog.list_manifests())
+        for sid in self.snapshots.list_snapshots():
+            if sid not in known:
+                man = self.snapshots.manifest(sid)
+                man.setdefault("output_root", "")
+                self.commit_record(sid, man)
+                repaired += 1
+        return {"staging_gc": gc, "manifests_repaired": repaired}

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for MergePipe's compute hot-spots.
+
+    merge_block.py  — fused blockwise AVG/TA/TIES/DARE + ANALYZE sketch
+                      (pl.pallas_call with explicit VMEM BlockSpec tiling)
+    ops.py          — jitted wrappers; TPU->Pallas, CPU->XLA-fused jnp ref
+    ref.py          — pure-jnp oracles (allclose target for every kernel)
+
+Validated on CPU via interpret=True (tests/test_kernels.py sweeps
+shapes × dtypes × K).  TPU v5e is the deployment target.
+"""
+from repro.kernels import merge_block, ops, ref
+
+__all__ = ["merge_block", "ops", "ref"]

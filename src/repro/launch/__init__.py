@@ -1,0 +1,1 @@
+"""Launchers: production mesh, sharding resolution, dry-run, train/merge CLIs."""

@@ -1,0 +1,85 @@
+"""Logical-axis -> NamedSharding resolution for parameter/cache trees.
+
+The model zoo annotates every parameter with a logical spec tuple (see
+models/*.py init functions); this module binds those specs to a concrete
+mesh under the train or serve rule set, with per-dim divisibility checks
+(indivisible axes are dropped => replicated, never an error).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import shardctx
+
+
+#: when two dims of one tensor resolve to the same mesh axis, the dim with
+#: the higher-priority logical name wins (e.g. kv_heads over seq for KV
+#: caches when kv_heads divides the model axis; seq takes over otherwise)
+AXIS_PRIORITY = (
+    "batch", "fsdp", "vocab", "expert", "heads", "kv_heads", "mlp",
+    "state", "seq",
+)
+
+
+def spec_to_sharding(
+    mesh: Mesh,
+    rules: Dict,
+    logical: tuple,
+    shape: tuple,
+) -> NamedSharding:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    prio = {n: i for i, n in enumerate(AXIS_PRIORITY)}
+    order = sorted(
+        range(len(logical)),
+        key=lambda i: prio.get(logical[i], len(AXIS_PRIORITY)),
+    )
+    out = [None] * len(logical)
+    used: set = set()
+    for i in order:
+        name = logical[i]
+        axes = rules.get(name) if name else None
+        if not axes:
+            continue
+        if any(a in used for a in axes):
+            continue  # axis already consumed by a higher-priority dim
+        extent = 1
+        for a in axes:
+            extent *= sizes.get(a, 1)
+        if i >= len(shape) or shape[i] % extent != 0:
+            continue
+        used.update(axes)
+        out[i] = axes[0] if len(axes) == 1 else tuple(axes)
+    return NamedSharding(mesh, P(*out))
+
+
+def tree_shardings(
+    mesh: Mesh,
+    rules: Dict,
+    specs_tree: Any,
+    shapes_tree: Any,
+) -> Any:
+    """Map a parallel (specs, shape-structs) tree pair to NamedShardings.
+
+    specs leaves are tuples of logical names; shapes leaves are
+    ShapeDtypeStructs (or arrays).
+    """
+    is_spec = lambda x: isinstance(x, tuple)  # noqa: E731
+
+    def one(spec, shaped):
+        return spec_to_sharding(mesh, rules, spec, tuple(shaped.shape))
+
+    return jax.tree.map(one, specs_tree, shapes_tree, is_leaf=is_spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, rules: Dict, shape: tuple) -> NamedSharding:
+    """Token/label arrays: shard dim 0 over the batch axes."""
+    logical = ("batch",) + (None,) * (len(shape) - 1)
+    return spec_to_sharding(mesh, rules, logical, shape)

@@ -1,0 +1,91 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+        --steps 20 --batch 4 --seq 64 --workspace /tmp/run1
+
+Production notes (documented here, exercised by the dry-run):
+  * compute/comm overlap: scan-over-layers + XLA's latency-hiding
+    scheduler (--xla_tpu_enable_latency_hiding_scheduler=true on real
+    TPU runtimes) overlaps the FSDP all-gathers of layer i+1 with layer
+    i's compute; gradient reduce-scatters overlap the backward pass.
+  * ``--grad-compress`` enables int8 error-feedback gradient compression
+    (train/grad_compress.py) to cut cross-pod DCI traffic 4x.
+  * ``--multi-pod`` selects the (2, 16, 16) production mesh (needs 512
+    devices — see launch/dryrun.py for the host-device dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import arch_ids, get_config, get_smoke_config
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.sharding import tree_shardings
+from repro.models import build_model
+from repro.models import shardctx
+from repro.store.snapshot import SnapshotStore
+from repro.train.data import DataPipeline
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import TrainLoop
+from repro.train.train_state import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=arch_ids(), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--workspace", default="/tmp/repro-train")
+    ap.add_argument("--run-id", default="train")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skill", type=int, default=0,
+                    help="synthetic-data skill id (expert branches)")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--step-deadline", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_debug_mesh()
+    rules = shardctx.train_rules(args.multi_pod)
+
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    step_fn = make_train_step(model, opt, grad_compression=args.grad_compress)
+    snaps = SnapshotStore(args.workspace)
+
+    with shardctx.use_mesh(mesh, rules):
+        state = init_train_state(
+            model, jax.random.PRNGKey(args.seed),
+            grad_compression=args.grad_compress,
+        )
+        loop = TrainLoop(
+            model, step_fn, snaps, run_id=args.run_id,
+            ckpt_every=args.ckpt_every, step_deadline_s=args.step_deadline,
+        )
+        state, start = loop.restore_or_init(state)
+        pipe = DataPipeline(
+            cfg.vocab_size, batch=args.batch, seq=args.seq,
+            seed=args.seed, skill=args.skill, start_step=start,
+        )
+        try:
+            loop.run(state, pipe, num_steps=args.steps, start_step=start)
+        finally:
+            pipe.close()
+    print(f"[train] done; checkpoints under {args.workspace}")
+
+
+if __name__ == "__main__":
+    main()

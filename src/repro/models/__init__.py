@@ -1,0 +1,4 @@
+"""Architecture zoo: dense GQA / MoE / MLA / SSD / RG-LRU / VLM / enc-dec."""
+from repro.models.model import SHAPES, build_model, input_specs, shape_applicable
+
+__all__ = ["SHAPES", "build_model", "input_specs", "shape_applicable"]

@@ -1,0 +1,319 @@
+"""Attention: chunked (flash-style) GQA, local windows, cross-attn, MLA,
+and single-token decode against KV caches.
+
+Memory-safe by construction: prefill/train attention never materializes
+the (S, S) score matrix.  Queries are processed in chunks (lax.map) with
+an online-softmax scan over key chunks — the pure-JAX equivalent of a
+flash kernel; XLA fuses each (cq × ck) tile in VMEM.  Peak activation is
+O(S·cq + cq·ck) per head group instead of O(S²).
+
+GQA never materializes repeated KV: queries are reshaped to
+(B, S, n_kv, q_per_kv, hd) and contracted against un-repeated KV heads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    head_rmsnorm,
+    rmsnorm,
+)
+from repro.models.shardctx import constrain
+
+_NEG = -1.0e30
+
+
+def pl_cdiv(a, b):
+    return (a + b - 1) // b
+
+
+# ------------------------------------------------------------------ params
+def init_attention(key, cfg: ModelConfig, n_layers: int, dtype) -> Tuple[Dict, Dict]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (n_layers, d, nq, hd), in_axis=1, dtype=dtype),
+        "wk": dense_init(ks[1], (n_layers, d, nkv, hd), in_axis=1, dtype=dtype),
+        "wv": dense_init(ks[2], (n_layers, d, nkv, hd), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[3], (n_layers, nq, hd, d), in_axis=2, dtype=dtype),
+    }
+    s = {
+        "wq": ("stack", "fsdp", "heads", None),
+        "wk": ("stack", "fsdp", "kv_heads", None),
+        "wv": ("stack", "fsdp", "kv_heads", None),
+        "wo": ("stack", "heads", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, nq, hd), dtype)
+        p["bk"] = jnp.zeros((n_layers, nkv, hd), dtype)
+        p["bv"] = jnp.zeros((n_layers, nkv, hd), dtype)
+        s["bq"] = ("stack", "heads", None)
+        s["bk"] = ("stack", "kv_heads", None)
+        s["bv"] = ("stack", "kv_heads", None)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((n_layers, hd), dtype)
+        p["k_norm"] = jnp.zeros((n_layers, hd), dtype)
+        s["q_norm"] = ("stack", None)
+        s["k_norm"] = ("stack", None)
+    return p, s
+
+
+def qkv_project(
+    pl: Dict, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> q (B, S, H, hd), k/v (B, S, Hkv, hd), roped+normed."""
+    q = jnp.einsum("bsd,dhk->bshk", x, pl["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, pl["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, pl["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + pl["bq"].astype(x.dtype)
+        k = k + pl["bk"].astype(x.dtype)
+        v = v + pl["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, pl["q_norm"], cfg.norm_eps)
+        k = head_rmsnorm(k, pl["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+# ------------------------------------------------- chunked flash attention
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,  # (B, Sk, Hkv, hd)
+    causal: bool = True,
+    window: int = 0,       # 0 = unlimited; >0 = local causal window
+    q_offset: int = 0,     # absolute position of q[0] (cache append)
+    cq: int = 512,
+    ck: int = 1024,
+    skip_masked_chunks: bool = False,
+) -> jnp.ndarray:
+    """Chunked online-softmax attention.
+
+    ``skip_masked_chunks`` (§Perf H3): bound the key loop per q-chunk to
+    the causally (and window-) reachable k-chunks via a dynamic
+    ``fori_loop`` — halves causal-attention FLOPs (and cuts local-window
+    FLOPs to the window fraction).  Inference-only: dynamic-trip-count
+    loops are not reverse-differentiable, so training paths keep the
+    static scan (full tiles + masking).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    hdv = v.shape[-1]  # may differ from hd (MLA: k is nope+rope, v is dv)
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    cq = min(cq, sq)
+    ck = min(ck, sk)
+    pad_q = (-sq) % cq
+    pad_k = (-sk) % ck
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
+
+    # (nq, B, cq, Hkv, g, hd)
+    qc = qp.reshape(b, nq, cq, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = kp.reshape(b, nk, ck, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nk, ck, hkv, hdv).transpose(1, 0, 2, 3, 4)
+
+    kpos_all = jnp.arange(nk * ck)
+
+    def q_chunk(args):
+        qi, qblk = args  # qblk (B, cq, Hkv, g, hd)
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def tile(kj, kblk, vblk, m, l, acc):
+            kpos = kj * ck + jnp.arange(ck)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk",
+                qblk.astype(jnp.float32),
+                kblk.astype(jnp.float32),
+            ) * scale  # (B, Hkv, g, cq, ck)
+            valid = kpos[None, :] < sk
+            if causal:
+                valid = valid & (qpos[:, None] >= kpos[None, :])
+            if window > 0:
+                valid = valid & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(valid[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = p * valid[None, None, None].astype(jnp.float32)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((b, hkv, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, hdv), jnp.float32)
+
+        if skip_masked_chunks and (causal or window > 0):
+            # dynamic loop bounds: only causally/window-reachable k-chunks
+            q_hi = q_offset + qi * cq + cq  # max qpos in this chunk + 1
+            hi = jnp.minimum(nk, pl_cdiv(q_hi, ck)) if causal else nk
+            if window > 0:
+                q_lo = q_offset + qi * cq
+                lo = jnp.maximum(0, (q_lo - window + 1) // ck)
+            else:
+                lo = jnp.zeros((), jnp.int32)
+
+            def body(j, carry):
+                m, l, acc = carry
+                kblk = jax.lax.dynamic_index_in_dim(kc, j, 0, False)
+                vblk = jax.lax.dynamic_index_in_dim(vc, j, 0, False)
+                return tile(j, kblk, vblk, m, l, acc)
+
+            m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        else:
+            def k_step(carry, inp):
+                kj, kblk, vblk = inp
+                return tile(kj, kblk, vblk, *carry), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                k_step, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+            )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, Hkv, g, cq, hdv) -> (B, cq, Hkv, g, hdv)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    outs = jax.lax.map(q_chunk, (jnp.arange(nq), qc))  # (nq, B, cq, Hkv, g, hdv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * cq, h, hdv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ------------------------------------------------------------------ decode
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S_max, Hkv, hd)
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray,   # () int32 — #valid cache entries incl. this token
+    window: int = 0,
+) -> jnp.ndarray:
+    b, _, h, hd = q.shape
+    s_max = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = q.reshape(b, 1, hkv, g, hd)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale  # (B, Hkv, g, 1, S_max)
+    kpos = jnp.arange(s_max)
+    valid = kpos < length
+    if window > 0:
+        valid = valid & (length - 1 - kpos < window)
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hdv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- MLA
+def init_mla(key, cfg: ModelConfig, n_layers: int, dtype) -> Tuple[Dict, Dict]:
+    """DeepSeek-V2 Multi-head Latent Attention parameters."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (n_layers, d, h, dn + dr), in_axis=1, dtype=dtype),
+        "w_dkv": dense_init(ks[1], (n_layers, d, r + dr), in_axis=1, dtype=dtype),
+        "ckv_norm": jnp.zeros((n_layers, r), dtype),
+        "w_uk": dense_init(ks[2], (n_layers, r, h, dn), in_axis=1, dtype=dtype),
+        "w_uv": dense_init(ks[3], (n_layers, r, h, dv), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[4], (n_layers, h, dv, d), in_axis=2, dtype=dtype),
+    }
+    s = {
+        "wq": ("stack", "fsdp", "heads", None),
+        "w_dkv": ("stack", "fsdp", None),
+        "ckv_norm": ("stack", None),
+        "w_uk": ("stack", "fsdp", "heads", None),
+        "w_uv": ("stack", "fsdp", "heads", None),
+        "wo": ("stack", "heads", None, "fsdp"),
+    }
+    return p, s
+
+
+def mla_project(
+    pl: Dict, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q (B,S,H,dn+dr), c_kv (B,S,r), k_rope (B,S,dr), v-side
+    expansion is done by :func:`mla_expand_kv` so decode can cache the
+    *compressed* latent (the MLA memory win)."""
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    r = cfg.kv_lora_rank
+    q = jnp.einsum("bsd,dhk->bshk", x, pl["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, pl["w_dkv"].astype(x.dtype))
+    c_kv, k_rope = ckv_full[..., :r], ckv_full[..., r:]
+    c_kv = rmsnorm(c_kv, pl["ckv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q, c_kv, k_rope
+
+
+def mla_expand_kv(
+    pl: Dict, c_kv: jnp.ndarray, k_rope: jnp.ndarray, x_dtype
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """c_kv (B,S,r), k_rope (B,S,dr) -> k (B,S,H,dn+dr), v (B,S,H,dv)."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, pl["w_uk"].astype(x_dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, pl["w_uv"].astype(x_dtype))
+    h = k_nope.shape[2]
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, :, None, :], (*k_nope.shape[:2], h, k_rope.shape[-1])
+    )
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+# ------------------------------------------------------------- cross-attn
+def init_cross_attention(key, cfg: ModelConfig, n_layers: int, dtype):
+    """Cross-attention (VLM image layers / enc-dec): q from decoder stream,
+    kv from frozen context states (vision embeddings / encoder output)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (n_layers, d, nq, hd), in_axis=1, dtype=dtype),
+        "wk": dense_init(ks[1], (n_layers, d, nkv, hd), in_axis=1, dtype=dtype),
+        "wv": dense_init(ks[2], (n_layers, d, nkv, hd), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[3], (n_layers, nq, hd, d), in_axis=2, dtype=dtype),
+        "gate": jnp.zeros((n_layers,), dtype),  # tanh-gated residual (llama-vision)
+    }
+    s = {
+        "wq": ("stack", "fsdp", "heads", None),
+        "wk": ("stack", "fsdp", "kv_heads", None),
+        "wv": ("stack", "fsdp", "kv_heads", None),
+        "wo": ("stack", "heads", None, "fsdp"),
+        "gate": ("stack",),
+    }
+    return p, s
+
+
+def cross_attention(
+    pl: Dict, x: jnp.ndarray, context: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """x (B,S,D) attends over context (B,Sc,D); no mask, no rope."""
+    q = jnp.einsum("bsd,dhk->bshk", x, pl["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", context, pl["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", context, pl["wv"].astype(x.dtype))
+    out = flash_attention(q, k, v, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", out, pl["wo"].astype(x.dtype))
+    return jnp.tanh(pl["gate"]).astype(x.dtype) * out

@@ -1,0 +1,289 @@
+"""Encoder-decoder audio model (Whisper family backbone).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, encoder_seq, d_model).  Encoder layers
+are bidirectional self-attn + MLP; decoder layers are causal self-attn +
+cross-attn over encoder output + MLP.  Both stacks are scanned.
+
+Decode: self-KV cache grows per token; cross-K/V are computed once at
+prefill and cached (static per request).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.shardctx import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        pd = _dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 8)
+        emb, emb_s = L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, pd)
+        e_att, e_att_s = attn.init_attention(ks[1], cfg, cfg.n_encoder_layers, pd)
+        e_mlp, e_mlp_s = L.init_mlp(
+            ks[2], cfg.n_encoder_layers, cfg.d_model, cfg.d_ff, pd
+        )
+        d_att, d_att_s = attn.init_attention(ks[3], cfg, cfg.n_layers, pd)
+        d_x, d_x_s = attn.init_cross_attention(ks[4], cfg, cfg.n_layers, pd)
+        d_mlp, d_mlp_s = L.init_mlp(ks[5], cfg.n_layers, cfg.d_model, cfg.d_ff, pd)
+        self._specs = {
+            "embed": emb_s,
+            "enc_attn": e_att_s, "enc_mlp": e_mlp_s,
+            "enc_ln1": ("stack", None), "enc_ln2": ("stack", None),
+            "enc_ln_f": (None,),
+            "dec_attn": d_att_s, "dec_xattn": d_x_s, "dec_mlp": d_mlp_s,
+            "dec_ln1": ("stack", None), "dec_lnx": ("stack", None),
+            "dec_ln2": ("stack", None), "ln_f": (None,),
+        }
+        z = lambda *shape: jnp.zeros(shape, pd)  # noqa: E731
+        return {
+            "embed": emb,
+            "enc_attn": e_att, "enc_mlp": e_mlp,
+            "enc_ln1": z(cfg.n_encoder_layers, cfg.d_model),
+            "enc_ln2": z(cfg.n_encoder_layers, cfg.d_model),
+            "enc_ln_f": z(cfg.d_model),
+            "dec_attn": d_att, "dec_xattn": d_x, "dec_mlp": d_mlp,
+            "dec_ln1": z(cfg.n_layers, cfg.d_model),
+            "dec_lnx": z(cfg.n_layers, cfg.d_model),
+            "dec_ln2": z(cfg.n_layers, cfg.d_model),
+            "ln_f": z(cfg.d_model),
+        }
+
+    def param_specs(self) -> Dict:
+        if not hasattr(self, "_specs"):
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._specs
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        return fn
+
+    # ------------------------------------------------------------- encoder
+    def encode(self, params: Params, audio_embeds: jnp.ndarray) -> jnp.ndarray:
+        """audio_embeds (B, S_enc, D) — stubbed conv frontend output."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = audio_embeds.astype(cd)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        stacked = {
+            "attn": params["enc_attn"], "mlp": params["enc_mlp"],
+            "ln1": params["enc_ln1"], "ln2": params["enc_ln2"],
+        }
+
+        def layer(x, pl):
+            h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+            q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+            o = attn.flash_attention(q, k, v, causal=False)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+            return x + L.swiglu_mlp(pl["mlp"], h)
+
+        fn = lambda x, pl: (self._maybe_remat(layer)(x, pl), None)  # noqa: E731
+        x, _ = jax.lax.scan(fn, x, stacked)
+        return L.rmsnorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+    # ------------------------------------------------------------- decoder
+    def _dec_layer(self, pl, x, positions, enc_out, decode_ctx=None):
+        cfg = self.cfg
+        h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+        if decode_ctx is None:
+            o = attn.flash_attention(q, k, v, causal=True)
+            new_kv = (k, v)
+        else:
+            k_cache, v_cache, pos = decode_ctx
+            k_c = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0)
+            )
+            v_c = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0)
+            )
+            o = attn.decode_attention(q, k_c, v_c, pos + 1)
+            new_kv = (k_c, v_c)
+        o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+        x = x + o
+        h = L.rmsnorm(x, pl["lnx"], cfg.norm_eps)
+        x = x + attn.cross_attention(pl["xattn"], h, enc_out, cfg)
+        h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+        return x + L.swiglu_mlp(pl["mlp"], h), new_kv
+
+    def forward(
+        self, params: Params, tokens: jnp.ndarray, audio_embeds: jnp.ndarray
+    ) -> jnp.ndarray:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        enc_out = self.encode(params, audio_embeds)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        stacked = {
+            "attn": params["dec_attn"], "xattn": params["dec_xattn"],
+            "mlp": params["dec_mlp"], "ln1": params["dec_ln1"],
+            "lnx": params["dec_lnx"], "ln2": params["dec_ln2"],
+        }
+
+        def layer(x, pl):
+            y, _ = self._dec_layer(pl, x, positions, enc_out)
+            return constrain(y, ("batch", None, None))
+
+        fn = lambda x, pl: (self._maybe_remat(layer)(x, pl), None)  # noqa: E731
+        x, _ = jax.lax.scan(fn, x, stacked)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.unembed(params["embed"], x)
+
+    def loss_fn(self, params: Params, batch: Dict) -> jnp.ndarray:
+        logits = self.forward(params, batch["tokens"], batch["audio_embeds"])
+        return L.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------ serving
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        hd = cfg.resolved_head_dim
+        return {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), cd
+            ),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), cd
+            ),
+            # cross K/V: static per request, computed at prefill
+            "xk": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), cd
+            ),
+            "xv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), cd
+            ),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_logical_specs(self) -> Dict:
+        return {
+            "k": ("stack", "batch", "seq", "kv_heads", None),
+            "v": ("stack", "batch", "seq", "kv_heads", None),
+            "xk": ("stack", "batch", "seq", "kv_heads", None),
+            "xv": ("stack", "batch", "seq", "kv_heads", None),
+            "len": (),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            self.cache_specs(batch, max_len),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def prefill(
+        self, params: Params, tokens: jnp.ndarray, audio_embeds: jnp.ndarray
+    ) -> Tuple:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        enc_out = self.encode(params, audio_embeds)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        stacked = {
+            "attn": params["dec_attn"], "xattn": params["dec_xattn"],
+            "mlp": params["dec_mlp"], "ln1": params["dec_ln1"],
+            "lnx": params["dec_lnx"], "ln2": params["dec_ln2"],
+        }
+
+        def layer(x, pl):
+            h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+            q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+            o = attn.flash_attention(q, k, v, causal=True,
+                                     skip_masked_chunks=True)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = L.rmsnorm(x, pl["lnx"], cfg.norm_eps)
+            xk = jnp.einsum(
+                "bsd,dhk->bshk", enc_out, pl["xattn"]["wk"].astype(x.dtype)
+            )
+            xv = jnp.einsum(
+                "bsd,dhk->bshk", enc_out, pl["xattn"]["wv"].astype(x.dtype)
+            )
+            q2 = jnp.einsum("bsd,dhk->bshk", h, pl["xattn"]["wq"].astype(x.dtype))
+            o = attn.flash_attention(q2, xk, xv, causal=False)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["xattn"]["wo"].astype(x.dtype))
+            x = x + jnp.tanh(pl["xattn"]["gate"]).astype(x.dtype) * o
+            h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+            x = x + L.swiglu_mlp(pl["mlp"], h)
+            return x, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+        def body(carry, pl):
+            return self._maybe_remat(layer)(carry, pl)
+
+        x, caches = jax.lax.scan(body, x, stacked)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x[:, -1:])
+        caches["len"] = jnp.asarray(s, jnp.int32)
+        return logits, caches
+
+    def decode_step(
+        self, params: Params, tokens: jnp.ndarray, cache: Dict
+    ) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b = tokens.shape[0]
+        pos = cache["len"]
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(pos[None], (b, 1))
+        stacked = {
+            "attn": params["dec_attn"], "xattn": params["dec_xattn"],
+            "mlp": params["dec_mlp"], "ln1": params["dec_ln1"],
+            "lnx": params["dec_lnx"], "ln2": params["dec_ln2"],
+        }
+        layer_cache = {k: cache[k] for k in ("k", "v", "xk", "xv")}
+
+        def body(x, inp):
+            pl, lc = inp
+            h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+            q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+            k_c = jax.lax.dynamic_update_slice(
+                lc["k"], k.astype(lc["k"].dtype), (0, pos, 0, 0)
+            )
+            v_c = jax.lax.dynamic_update_slice(
+                lc["v"], v.astype(lc["v"].dtype), (0, pos, 0, 0)
+            )
+            o = attn.decode_attention(q, k_c, v_c, pos + 1)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = L.rmsnorm(x, pl["lnx"], cfg.norm_eps)
+            q2 = jnp.einsum("bsd,dhk->bshk", h, pl["xattn"]["wq"].astype(x.dtype))
+            o = attn.decode_attention(
+                q2, lc["xk"], lc["xv"], jnp.asarray(lc["xk"].shape[1])
+            )
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["xattn"]["wo"].astype(x.dtype))
+            x = x + jnp.tanh(pl["xattn"]["gate"]).astype(x.dtype) * o
+            h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+            x = x + L.swiglu_mlp(pl["mlp"], h)
+            return x, {"k": k_c, "v": v_c, "xk": lc["xk"], "xv": lc["xv"]}
+
+        x, new_cache = jax.lax.scan(body, x, (stacked, layer_cache))
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x)
+        new_cache["len"] = pos + 1
+        return logits, new_cache

@@ -1,0 +1,395 @@
+"""Griffin / RecurrentGemma hybrid LM: RG-LRU + local attention, 1:2.
+
+Layer pattern repeats (recurrent, recurrent, local-attention); every
+layer is followed by a SwiGLU MLP.  Super-blocks of 3 layers are scanned
+(n_layers // 3 groups); remainder layers (38 % 3 = 2 for the 9B config)
+run unrolled with their own parameters.
+
+Sub-quadratic by construction: RG-LRU is a parallel prefix (O(T)) and the
+attention layers see only a ``local_window`` slice — this arch runs the
+long_500k shape.  Decode caches: per-rec-layer LRU state (B, W) + conv
+tail, per-attn-layer a *windowed* KV ring of ``local_window`` entries.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import rglru
+from repro.models.shardctx import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class GriffinLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_super = cfg.n_layers // 3
+        self.n_rest = cfg.n_layers % 3  # trailing recurrent layers
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        pd = _dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 6)
+        emb, emb_s = L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, pd)
+        # two rec layers per super-block, stacked (n_super, 2, ...)
+        rec, rec_s = rglru.init_rglru_block(ks[1], cfg, self.n_super * 2, pd)
+        rec = jax.tree.map(lambda a: a.reshape(self.n_super, 2, *a.shape[1:]), rec)
+        rec_s = {k: ("stack", "stack") + tuple(v[1:]) for k, v in rec_s.items()}
+        att, att_s = attn.init_attention(ks[2], cfg, self.n_super, pd)
+        mlp, mlp_s = L.init_mlp(ks[3], cfg.n_layers, cfg.d_model, cfg.d_ff, pd)
+        mlp = jax.tree.map(
+            lambda a: a[: self.n_super * 3].reshape(self.n_super, 3, *a.shape[1:]),
+            mlp,
+        )
+        mlp_s = {k: ("stack", "stack") + tuple(v[1:]) for k, v in mlp_s.items()}
+        params: Params = {
+            "embed": emb,
+            "rec": rec,
+            "attn": att,
+            "mlp": mlp,
+            "ln_t": jnp.zeros((self.n_super, 3, cfg.d_model), pd),  # temporal norms
+            "ln_c": jnp.zeros((self.n_super, 3, cfg.d_model), pd),  # channel norms
+            "ln_f": jnp.zeros((cfg.d_model,), pd),
+        }
+        specs: Dict = {
+            "embed": emb_s,
+            "rec": rec_s,
+            "attn": att_s,
+            "mlp": mlp_s,
+            "ln_t": ("stack", None, None),
+            "ln_c": ("stack", None, None),
+            "ln_f": (None,),
+        }
+        if self.n_rest:
+            rest, rest_s = rglru.init_rglru_block(ks[4], cfg, self.n_rest, pd)
+            rmlp, rmlp_s = L.init_mlp(ks[5], self.n_rest, cfg.d_model, cfg.d_ff, pd)
+            params["rest_rec"] = rest
+            params["rest_mlp"] = rmlp
+            params["rest_ln_t"] = jnp.zeros((self.n_rest, cfg.d_model), pd)
+            params["rest_ln_c"] = jnp.zeros((self.n_rest, cfg.d_model), pd)
+            specs["rest_rec"] = rest_s
+            specs["rest_mlp"] = rmlp_s
+            specs["rest_ln_t"] = ("stack", None)
+            specs["rest_ln_c"] = ("stack", None)
+        self._specs = specs
+        return params
+
+    def param_specs(self) -> Dict:
+        if not hasattr(self, "_specs"):
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._specs
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        return fn
+
+    # ------------------------------------------------------------ forward
+    def _rec_layer(self, pl_rec, ln_t, ln_c, pl_mlp, x):
+        cfg = self.cfg
+        h = L.rmsnorm(x, ln_t, cfg.norm_eps)
+        x = x + rglru.rglru_block(pl_rec, h, cfg)
+        h = L.rmsnorm(x, ln_c, cfg.norm_eps)
+        return x + L.swiglu_mlp(pl_mlp, h)
+
+    def _attn_layer(self, pl_attn, ln_t, ln_c, pl_mlp, x, positions):
+        cfg = self.cfg
+        h = L.rmsnorm(x, ln_t, cfg.norm_eps)
+        q, k, v = attn.qkv_project(pl_attn, h, cfg, positions)
+        o = attn.flash_attention(q, k, v, causal=True, window=cfg.local_window)
+        o = jnp.einsum("bshk,hkd->bsd", o, pl_attn["wo"].astype(x.dtype))
+        x = x + o
+        h = L.rmsnorm(x, ln_c, cfg.norm_eps)
+        return x + L.swiglu_mlp(pl_mlp, h)
+
+    def forward(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        stacked = {
+            "rec": params["rec"], "attn": params["attn"], "mlp": params["mlp"],
+            "ln_t": params["ln_t"], "ln_c": params["ln_c"],
+        }
+
+        def super_block(x, pl):
+            for j in (0, 1):  # two recurrent layers
+                x = self._rec_layer(
+                    jax.tree.map(lambda a: a[j], pl["rec"]),
+                    pl["ln_t"][j], pl["ln_c"][j],
+                    jax.tree.map(lambda a: a[j], pl["mlp"]),
+                    x,
+                )
+            x = self._attn_layer(
+                pl["attn"], pl["ln_t"][2], pl["ln_c"][2],
+                jax.tree.map(lambda a: a[2], pl["mlp"]),
+                x, positions,
+            )
+            return constrain(x, ("batch", None, None))
+
+        fn = lambda x, pl: (self._maybe_remat(super_block)(x, pl), None)  # noqa: E731
+        x, _ = jax.lax.scan(fn, x, stacked)
+
+        for i in range(self.n_rest):
+            x = self._rec_layer(
+                jax.tree.map(lambda a: a[i], params["rest_rec"]),
+                params["rest_ln_t"][i], params["rest_ln_c"][i],
+                jax.tree.map(lambda a: a[i], params["rest_mlp"]),
+                x,
+            )
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.unembed(params["embed"], x)
+
+    def loss_fn(self, params: Params, batch: Dict) -> jnp.ndarray:
+        logits = self.forward(params, batch["tokens"])
+        return L.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------ serving
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        w = cfg.rglru_width or cfg.d_model
+        hd = cfg.resolved_head_dim
+        win = min(cfg.local_window, max_len)
+        spec = {
+            "h": jax.ShapeDtypeStruct((self.n_super, 2, batch, w), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (self.n_super, 2, batch, cfg.conv_kernel - 1, w), cd
+            ),
+            "k": jax.ShapeDtypeStruct(
+                (self.n_super, batch, win, cfg.n_kv_heads, hd), cd
+            ),
+            "v": jax.ShapeDtypeStruct(
+                (self.n_super, batch, win, cfg.n_kv_heads, hd), cd
+            ),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if self.n_rest:
+            spec["rest_h"] = jax.ShapeDtypeStruct(
+                (self.n_rest, batch, w), jnp.float32
+            )
+            spec["rest_conv"] = jax.ShapeDtypeStruct(
+                (self.n_rest, batch, cfg.conv_kernel - 1, w), cd
+            )
+        return spec
+
+    def cache_logical_specs(self) -> Dict:
+        spec = {
+            "h": ("stack", None, "batch", "mlp"),
+            "conv": ("stack", None, "batch", None, "mlp"),
+            "k": ("stack", "batch", "seq", "kv_heads", None),
+            "v": ("stack", "batch", "seq", "kv_heads", None),
+            "len": (),
+        }
+        if self.n_rest:
+            spec["rest_h"] = ("stack", "batch", "mlp")
+            spec["rest_conv"] = ("stack", "batch", None, "mlp")
+        return spec
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            self.cache_specs(batch, max_len),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def decode_step(
+        self, params: Params, tokens: jnp.ndarray, cache: Dict
+    ) -> Tuple[jnp.ndarray, Dict]:
+        """One token; LRU states update in O(1), attention KV is a ring
+        buffer of local_window entries (position pos % window)."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b = tokens.shape[0]
+        pos = cache["len"]
+        win = cache["k"].shape[2]
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(pos[None], (b, 1))
+
+        stacked = {
+            "rec": params["rec"], "attn": params["attn"], "mlp": params["mlp"],
+            "ln_t": params["ln_t"], "ln_c": params["ln_c"],
+        }
+        layer_cache = {
+            "h": cache["h"], "conv": cache["conv"],
+            "k": cache["k"], "v": cache["v"],
+        }
+
+        def body(x, inp):
+            pl, lc = inp
+            new_lc = dict(lc)
+            new_h, new_conv = [], []
+            for j in (0, 1):
+                h = L.rmsnorm(x, pl["ln_t"][j], cfg.norm_eps)
+                state = {"h": lc["h"][j], "conv": lc["conv"][j]}
+                out, ns = rglru.rglru_decode_step(
+                    jax.tree.map(lambda a: a[j], pl["rec"]), h, state, cfg
+                )
+                x = x + out
+                h = L.rmsnorm(x, pl["ln_c"][j], cfg.norm_eps)
+                x = x + L.swiglu_mlp(jax.tree.map(lambda a: a[j], pl["mlp"]), h)
+                new_h.append(ns["h"])
+                new_conv.append(ns["conv"])
+            # local attention layer with ring-buffer cache
+            h = L.rmsnorm(x, pl["ln_t"][2], cfg.norm_eps)
+            q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+            slot = jnp.mod(pos, win)
+            k_c = jax.lax.dynamic_update_slice(
+                lc["k"], k.astype(lc["k"].dtype), (0, slot, 0, 0)
+            )
+            v_c = jax.lax.dynamic_update_slice(
+                lc["v"], v.astype(lc["v"].dtype), (0, slot, 0, 0)
+            )
+            # ring buffer holds the last min(pos+1, win) tokens — all valid
+            o = attn.decode_attention(
+                q, k_c, v_c, jnp.minimum(pos + 1, win), window=0
+            )
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = L.rmsnorm(x, pl["ln_c"][2], cfg.norm_eps)
+            x = x + L.swiglu_mlp(jax.tree.map(lambda a: a[2], pl["mlp"]), h)
+            new_lc["h"] = jnp.stack(new_h)
+            new_lc["conv"] = jnp.stack(new_conv)
+            new_lc["k"] = k_c
+            new_lc["v"] = v_c
+            return x, new_lc
+
+        x, new_cache = jax.lax.scan(body, x, (stacked, layer_cache))
+
+        rest_cache = {}
+        if self.n_rest:
+            rh, rc = [], []
+            for i in range(self.n_rest):
+                h = L.rmsnorm(x, params["rest_ln_t"][i], cfg.norm_eps)
+                state = {"h": cache["rest_h"][i], "conv": cache["rest_conv"][i]}
+                out, ns = rglru.rglru_decode_step(
+                    jax.tree.map(lambda a: a[i], params["rest_rec"]), h, state, cfg
+                )
+                x = x + out
+                h = L.rmsnorm(x, params["rest_ln_c"][i], cfg.norm_eps)
+                x = x + L.swiglu_mlp(
+                    jax.tree.map(lambda a: a[i], params["rest_mlp"]), h
+                )
+                rh.append(ns["h"])
+                rc.append(ns["conv"])
+            rest_cache = {"rest_h": jnp.stack(rh), "rest_conv": jnp.stack(rc)}
+
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x)
+        out_cache = {**new_cache, **rest_cache, "len": pos + 1}
+        return logits, out_cache
+
+    def prefill(self, params: Params, tokens: jnp.ndarray) -> Tuple:
+        """Prefill = full forward + state extraction via per-token decode
+        would be O(T); we run the parallel forward for logits and build
+        attention ring caches from the last `window` tokens, LRU states via
+        a short scan over the final conv window (exact: LRU state needs the
+        full history, so we fold the parallel prefix's final element)."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        win = min(cfg.local_window, s)
+        stacked = {
+            "rec": params["rec"], "attn": params["attn"], "mlp": params["mlp"],
+            "ln_t": params["ln_t"], "ln_c": params["ln_c"],
+        }
+
+        def super_block(x, pl):
+            caches = {}
+            new_h, new_conv = [], []
+            for j in (0, 1):
+                h = L.rmsnorm(x, pl["ln_t"][j], cfg.norm_eps)
+                pl_rec = jax.tree.map(lambda a: a[j], pl["rec"])
+                gate = jax.nn.gelu(
+                    jnp.einsum("btd,dw->btw", h, pl_rec["w_gate_branch"].astype(h.dtype))
+                )
+                u = jnp.einsum("btd,dw->btw", h, pl_rec["w_rec_branch"].astype(h.dtype))
+                conv_tail = u[:, -(cfg.conv_kernel - 1):, :]
+                kk = cfg.conv_kernel
+                pad = jnp.pad(u, ((0, 0), (kk - 1, 0), (0, 0)))
+                u = sum(
+                    pad[:, i : i + u.shape[1], :]
+                    * pl_rec["conv_w"][i][None, None, :].astype(h.dtype)
+                    for i in range(kk)
+                ) + pl_rec["conv_b"][None, None, :].astype(h.dtype)
+                a, gated = rglru._gates(pl_rec, u)
+                hh = rglru.rglru_scan(a, gated)
+                new_h.append(hh[:, -1])
+                new_conv.append(conv_tail)
+                out = jnp.einsum(
+                    "btw,wd->btd", (hh.astype(h.dtype)) * gate,
+                    pl_rec["w_out"].astype(h.dtype),
+                )
+                x = x + out
+                h = L.rmsnorm(x, pl["ln_c"][j], cfg.norm_eps)
+                x = x + L.swiglu_mlp(jax.tree.map(lambda a: a[j], pl["mlp"]), h)
+            h = L.rmsnorm(x, pl["ln_t"][2], cfg.norm_eps)
+            q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+            o = attn.flash_attention(q, k, v, causal=True,
+                                     window=cfg.local_window,
+                                     skip_masked_chunks=True)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = L.rmsnorm(x, pl["ln_c"][2], cfg.norm_eps)
+            x = x + L.swiglu_mlp(jax.tree.map(lambda a: a[2], pl["mlp"]), h)
+            caches["h"] = jnp.stack(new_h)
+            caches["conv"] = jnp.stack(new_conv)
+            # ring-buffer layout: token at absolute position p lives in slot
+            # p % win (decode inserts at pos % win), so roll the tail.
+            shift = (s - win) % win
+            caches["k"] = jnp.roll(k[:, -win:], shift, axis=1)
+            caches["v"] = jnp.roll(v[:, -win:], shift, axis=1)
+            return x, caches
+
+        def body(carry, pl):
+            return self._maybe_remat(super_block)(carry, pl)
+
+        x, caches = jax.lax.scan(body, x, stacked)
+
+        rest = {}
+        if self.n_rest:
+            rh, rc = [], []
+            for i in range(self.n_rest):
+                h = L.rmsnorm(x, params["rest_ln_t"][i], cfg.norm_eps)
+                pl_rec = jax.tree.map(lambda a: a[i], params["rest_rec"])
+                out = rglru.rglru_block(pl_rec, h, cfg)
+                # final LRU state via one extra gated pass (small tensors)
+                u = jnp.einsum("btd,dw->btw", h, pl_rec["w_rec_branch"].astype(h.dtype))
+                rc.append(u[:, -(cfg.conv_kernel - 1):, :])
+                kk = cfg.conv_kernel
+                pad = jnp.pad(u, ((0, 0), (kk - 1, 0), (0, 0)))
+                uc = sum(
+                    pad[:, i2 : i2 + u.shape[1], :]
+                    * pl_rec["conv_w"][i2][None, None, :].astype(h.dtype)
+                    for i2 in range(kk)
+                ) + pl_rec["conv_b"][None, None, :].astype(h.dtype)
+                a, gated = rglru._gates(pl_rec, uc)
+                rh.append(rglru.rglru_scan(a, gated)[:, -1])
+                x = x + out
+                h = L.rmsnorm(x, params["rest_ln_c"][i], cfg.norm_eps)
+                x = x + L.swiglu_mlp(
+                    jax.tree.map(lambda a: a[i], params["rest_mlp"]), h
+                )
+            rest = {"rest_h": jnp.stack(rh), "rest_conv": jnp.stack(rc)}
+
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x[:, -1:])
+        caches = {**caches, **rest, "len": jnp.asarray(s, jnp.int32)}
+        return logits, caches

@@ -1,0 +1,122 @@
+"""Shared neural building blocks: norms, SwiGLU MLP, RoPE, init helpers.
+
+All parameters are plain pytrees (dicts of jnp arrays).  Every param
+tensor has a parallel *logical spec* (tuple of logical axis names) used
+by the launcher to build in_shardings; layer-stacked params carry a
+leading "stack" axis (scan-over-layers keeps the HLO O(1) in depth).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.shardctx import constrain
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+# ------------------------------------------------------------------- init
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32, scale=1.0):
+    """LeCun-normal on the reduction dim."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    return (scale / jnp.sqrt(fan_in)) * jax.random.normal(key, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def head_rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm: RMSNorm over the head_dim axis (qwen3)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(key, n_layers: int, d_model: int, d_ff: int, dtype) -> Tuple[Params, Specs]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_gate": dense_init(k1, (n_layers, d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (n_layers, d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (n_layers, d_ff, d_model), dtype=dtype),
+    }
+    s = {
+        "w_gate": ("stack", "fsdp", "mlp"),
+        "w_up": ("stack", "fsdp", "mlp"),
+        "w_down": ("stack", "mlp", "fsdp"),
+    }
+    return p, s
+
+
+def swiglu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, D) -> (B, S, D) with hidden sharded over tp."""
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = constrain(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x (..., S, n_heads, head_dim), positions (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- embed
+def init_embed(key, vocab: int, d_model: int, dtype) -> Tuple[Params, Specs]:
+    p = {"embedding": embed_init(key, (vocab, d_model), dtype)}
+    s = {"embedding": ("vocab", "fsdp")}
+    return p, s
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    out = p["embedding"].astype(compute_dtype)[tokens]
+    return constrain(out, ("batch", None, None))
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,vd->bsv", x, p["embedding"].astype(x.dtype))
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+# ------------------------------------------------------------------- loss
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Mean token NLL; logits (B, S, V) possibly vocab-sharded."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

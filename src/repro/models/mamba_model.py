@@ -1,0 +1,174 @@
+"""Mamba-2 language model (attention-free SSM family).
+
+Uniform stack of [pre-norm -> SSD mixer -> residual] layers (Mamba has no
+separate FFN; the mixer's expand factor carries the capacity).  Scanned
+over layers; decode carries an O(1) state cache — no KV cache, which is
+what makes long_500k (524288-token context) a constant-memory decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.shardctx import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class Mamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        pd = _dtype(cfg.param_dtype)
+        k1, k2 = jax.random.split(key)
+        emb, emb_s = L.init_embed(k1, cfg.vocab_size, cfg.d_model, pd)
+        mixer, mixer_s = ssm.init_ssm(k2, cfg, cfg.n_layers, pd)
+        self._specs = {
+            "embed": emb_s,
+            "mixer": mixer_s,
+            "ln": ("stack", None),
+            "ln_f": (None,),
+        }
+        return {
+            "embed": emb,
+            "mixer": mixer,
+            "ln": jnp.zeros((cfg.n_layers, cfg.d_model), pd),
+            "ln_f": jnp.zeros((cfg.d_model,), pd),
+        }
+
+    def param_specs(self) -> Dict:
+        if not hasattr(self, "_specs"):
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._specs
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        return fn
+
+    def forward(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        stacked = {"mixer": params["mixer"], "ln": params["ln"]}
+
+        def layer(x, pl):
+            h = L.rmsnorm(x, pl["ln"], cfg.norm_eps)
+            x = x + ssm.ssm_block(pl["mixer"], h, cfg)
+            return constrain(x, ("batch", None, None))
+
+        fn = lambda x, pl: (self._maybe_remat(layer)(x, pl), None)  # noqa: E731
+        x, _ = jax.lax.scan(fn, x, stacked)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.unembed(params["embed"], x)
+
+    def loss_fn(self, params: Params, batch: Dict) -> jnp.ndarray:
+        logits = self.forward(params, batch["tokens"])
+        return L.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------ serving
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        """State cache is O(1) in max_len (the SSM long-context win)."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        d_in, h, n = ssm.ssm_dims(cfg)
+        conv_dim = d_in + 2 * n
+        return {
+            "s": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, h, cfg.ssm_head_dim, n), jnp.float32
+            ),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.conv_kernel - 1, conv_dim), cd
+            ),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_logical_specs(self) -> Dict:
+        return {
+            "s": ("stack", "batch", "heads", None, None),
+            "conv": ("stack", "batch", None, "mlp"),
+            "len": (),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            self.cache_specs(batch, max_len),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def prefill(self, params: Params, tokens: jnp.ndarray) -> Tuple:
+        """Chunked SSD over the prompt, emitting final states per layer."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        stacked = {"mixer": params["mixer"], "ln": params["ln"]}
+
+        def layer(x, pl):
+            h = L.rmsnorm(x, pl["ln"], cfg.norm_eps)
+            # run mixer capturing final state: re-derive SSD inputs
+            d_in, nh, n = ssm.ssm_dims(cfg)
+            proj = jnp.einsum("btd,dk->btk", h, pl["mixer"]["in_proj"].astype(h.dtype))
+            z, xbc, dt_raw = ssm._split_proj(proj, cfg)
+            conv_tail = xbc[:, -(cfg.conv_kernel - 1):, :]
+            xbc = ssm._causal_conv(
+                xbc, pl["mixer"]["conv_w"].astype(h.dtype),
+                pl["mixer"]["conv_b"].astype(h.dtype),
+            )
+            xs = xbc[..., :d_in]
+            Bm = xbc[..., d_in : d_in + n].astype(jnp.float32)
+            Cm = xbc[..., d_in + n :].astype(jnp.float32)
+            dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + pl["mixer"]["dt_bias"])
+            a = -jnp.exp(pl["mixer"]["A_log"])[None, None, :] * dt
+            xh = xs.reshape(*xs.shape[:2], nh, cfg.ssm_head_dim).astype(jnp.float32)
+            y, s_fin = ssm.ssd_chunked(xh * dt[..., None], a, Bm, Cm, cfg.ssm_chunk)
+            y = y + pl["mixer"]["D"][None, None, :, None] * xh
+            y = y.reshape(*h.shape[:2], d_in).astype(h.dtype)
+            y = L.rmsnorm(y * jax.nn.silu(z), pl["mixer"]["out_norm"], cfg.norm_eps)
+            out = jnp.einsum("btk,kd->btd", y, pl["mixer"]["out_proj"].astype(h.dtype))
+            return x + out, {"s": s_fin, "conv": conv_tail}
+
+        def body(carry, pl):
+            return self._maybe_remat(layer)(carry, pl)
+
+        x, caches = jax.lax.scan(body, x, stacked)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x[:, -1:])
+        caches["len"] = jnp.asarray(s, jnp.int32)
+        return logits, caches
+
+    def decode_step(
+        self, params: Params, tokens: jnp.ndarray, cache: Dict
+    ) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        stacked = {"mixer": params["mixer"], "ln": params["ln"]}
+        layer_cache = {k: v for k, v in cache.items() if k != "len"}
+
+        def body(x, inp):
+            pl, lc = inp
+            h = L.rmsnorm(x, pl["ln"], cfg.norm_eps)
+            out, new_state = ssm.ssm_decode_step(pl["mixer"], h, lc, cfg)
+            return x + out, new_state
+
+        x, new_cache = jax.lax.scan(body, x, (stacked, layer_cache))
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x)
+        new_cache["len"] = cache["len"] + 1
+        return logits, new_cache

@@ -1,0 +1,102 @@
+"""Model zoo dispatch + per-shape input specs.
+
+``build_model(cfg)`` returns the family implementation; every model
+exposes the same surface: init / param_specs / loss_fn / prefill /
+decode_step / cache_specs / cache_logical_specs.
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of an (arch × shape) cell — weak-type-correct, shardable, no
+device allocation — the dry-run contract.  Modality frontends are STUBS:
+VLM cells get precomputed patch embeddings, audio cells get precomputed
+frame embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.griffin_model import GriffinLM
+from repro.models.mamba_model import Mamba2LM
+from repro.models.transformer import DecoderLM
+from repro.models.vlm import VisionLM
+
+#: assigned input-shape grid (LM shapes: seq_len × global_batch)
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+#: families with sub-quadratic sequence mixing (run long_500k)
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        return GriffinLM(cfg)
+    if cfg.family == "vlm":
+        return VisionLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise KeyError(f"unknown family {cfg.family!r}")
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """None if runnable; otherwise the skip reason (recorded in tables)."""
+    if shape == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return "skip(full-attn): quadratic attention at 524k context"
+    return None
+
+
+def input_specs(
+    cfg: ModelConfig, shape: str, batch_override: Optional[int] = None
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for the step function of (cfg × shape)."""
+    sh = SHAPES[shape]
+    b = batch_override or sh["batch"]
+    s = sh["seq"]
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    model = build_model(cfg)
+
+    if sh["kind"] == "train":
+        batch: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), bf16
+            )
+        if cfg.family == "audio":
+            batch["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), bf16
+            )
+        return {"batch": batch}
+
+    if sh["kind"] == "prefill":
+        out: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            out["vision"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), bf16
+            )
+        if cfg.family == "audio":
+            out["audio_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), bf16
+            )
+        return out
+
+    # decode: one new token against a cache of size seq
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache": model.cache_specs(b, s),
+    }

@@ -1,0 +1,137 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Gated diagonal linear recurrence over time:
+
+    r_t = σ(W_r x_t + b_r)                    recurrence gate
+    i_t = σ(W_i x_t + b_i)                    input gate
+    a_t = exp(-c · softplus(Λ) · r_t)         per-channel decay, c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (parallel prefix over
+the linear recurrence) — O(log T) depth, no O(T²) memory; this is the
+sub-quadratic path that makes long_500k viable for the hybrid arch.
+Decode is the O(1) per-step update on an (B, width) state.
+
+The full Griffin *recurrent block* wraps the LRU with the gated two-branch
+structure: [linear -> GeLU gate] ⊙ [linear -> causal conv(4) -> RG-LRU],
+followed by a down projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, n_layers: int, dtype) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_gate_branch": dense_init(ks[0], (n_layers, d, w), in_axis=1, dtype=dtype),
+        "w_rec_branch": dense_init(ks[1], (n_layers, d, w), in_axis=1, dtype=dtype),
+        "conv_w": dense_init(ks[2], (n_layers, cfg.conv_kernel, w), in_axis=1, dtype=dtype),
+        "conv_b": jnp.zeros((n_layers, w), dtype),
+        "w_r": dense_init(ks[3], (n_layers, w, w), in_axis=1, dtype=dtype),
+        "b_r": jnp.zeros((n_layers, w), jnp.float32),
+        "w_i": dense_init(ks[4], (n_layers, w, w), in_axis=1, dtype=dtype),
+        "b_i": jnp.zeros((n_layers, w), jnp.float32),
+        "lam": jnp.full((n_layers, w), 2.0, jnp.float32),  # softplus(2)≈2.1
+        "w_out": dense_init(ks[5], (n_layers, w, d), in_axis=1, dtype=dtype),
+    }
+    s = {
+        "w_gate_branch": ("stack", "fsdp", "mlp"),
+        "w_rec_branch": ("stack", "fsdp", "mlp"),
+        "conv_w": ("stack", None, "mlp"),
+        "conv_b": ("stack", "mlp"),
+        "w_r": ("stack", "fsdp", "mlp"),
+        "b_r": ("stack", "mlp"),
+        "w_i": ("stack", "fsdp", "mlp"),
+        "b_i": ("stack", "mlp"),
+        "lam": ("stack", "mlp"),
+        "w_out": ("stack", "mlp", "fsdp"),
+    }
+    return p, s
+
+
+def _gates(pl: Dict, u: jnp.ndarray):
+    """u (B, T, W) -> per-step decay a_t (f32) and gated input.
+
+    The W×W gate matmuls run in the compute dtype (bf16 in production —
+    halves their gradient all-reduce bytes, §Perf note); the recurrence
+    math (sigmoid/softplus/exp and the scan itself) stays float32 — the
+    LRU decay is precision-sensitive.
+    """
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        jnp.einsum("btw,wv->btv", u, pl["w_r"].astype(u.dtype))
+        .astype(jnp.float32) + pl["b_r"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("btw,wv->btv", u, pl["w_i"].astype(u.dtype))
+        .astype(jnp.float32) + pl["b_i"]
+    )
+    log_a = -_C * jax.nn.softplus(pl["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0=None) -> jnp.ndarray:
+    """Parallel prefix for h_t = a_t h_{t-1} + b_t over axis 1."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(pl: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Griffin recurrent block for training/prefill. x (B,T,D) -> (B,T,D)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("btd,dw->btw", x, pl["w_gate_branch"].astype(x.dtype))
+    )
+    u = jnp.einsum("btd,dw->btw", x, pl["w_rec_branch"].astype(x.dtype))
+    # causal depthwise conv(K)
+    k = cfg.conv_kernel
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    u = sum(
+        pad[:, i : i + u.shape[1], :] * pl["conv_w"][i][None, None, :].astype(x.dtype)
+        for i in range(k)
+    ) + pl["conv_b"][None, None, :].astype(x.dtype)
+    a, gated = _gates(pl, u)
+    h = rglru_scan(a, gated).astype(x.dtype)
+    out = h * gate
+    return jnp.einsum("btw,wd->btd", out, pl["w_out"].astype(x.dtype))
+
+
+def rglru_decode_step(
+    pl: Dict, x: jnp.ndarray, state: Dict, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. state = {"h": (B, W), "conv": (B, K-1, W)}."""
+    gate = jax.nn.gelu(
+        jnp.einsum("btd,dw->btw", x, pl["w_gate_branch"].astype(x.dtype))
+    )
+    u_new = jnp.einsum("btd,dw->btw", x, pl["w_rec_branch"].astype(x.dtype))
+    hist = jnp.concatenate([state["conv"], u_new], axis=1)  # (B, K, W)
+    u = (
+        jnp.einsum("bkw,kw->bw", hist, pl["conv_w"].astype(x.dtype))
+        + pl["conv_b"].astype(x.dtype)
+    )[:, None, :]
+    a, gated = _gates(pl, u)
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    out = (h[:, None, :].astype(x.dtype)) * gate
+    out = jnp.einsum("btw,wd->btd", out, pl["w_out"].astype(x.dtype))
+    return out, {"h": h, "conv": hist[:, 1:]}

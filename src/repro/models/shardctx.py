@@ -1,0 +1,126 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations/params with *logical* axis names
+("batch", "heads", "mlp", ...).  The launcher installs a mesh + a
+logical->mesh rule set; outside any context (CPU tests) every constraint
+is a no-op, so model code never mentions physical axes.
+
+Train rules (MaxText-style):  batch over (pod, data); weights FSDP-sharded
+over "data" on their reduction dim and tensor-parallel over "model" on
+heads/mlp/vocab/expert dims (ZeRO-3 falls out of XLA SPMD).
+Serve rules: weights replicated over "data" (no per-token all-gathers at
+decode), KV cache batch-sharded over (pod, data) and head-sharded over
+"model".
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Logical = Union[str, None]
+_STATE = threading.local()
+
+
+def train_rules(multi_pod: bool) -> Dict[str, Optional[Tuple[str, ...]]]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "fsdp": ("data",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+    }
+
+
+def serve_rules(multi_pod: bool) -> Dict[str, Optional[Tuple[str, ...]]]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "fsdp": None,  # replicate weights across data at decode
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        # KV caches: when kv_heads cannot divide the model axis (GQA with
+        # few KV heads), the cache SEQUENCE dim takes the model axis —
+        # partial softmax over sharded keys costs tiny (B,H,1)-sized
+        # reductions instead of all-gathering the multi-GB cache.
+        "seq": ("model",),
+    }
+
+
+def set_context(mesh: Optional[Mesh], rules: Optional[Dict]) -> None:
+    _STATE.mesh = mesh
+    _STATE.rules = rules or {}
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Dict):
+    prev = (getattr(_STATE, "mesh", None), getattr(_STATE, "rules", {}))
+    set_context(mesh, rules)
+    try:
+        with mesh:
+            yield
+    finally:
+        set_context(*prev)
+
+
+def resolve(
+    logical: Sequence[Logical], shape: Optional[Sequence[int]] = None
+) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules.
+
+    When ``shape`` is given, axes whose mesh extent does not divide the
+    dim are dropped (e.g. kv_heads=8 over model=16, or batch=1 over data)
+    — GSPMD would otherwise reject the annotation.  Dropped constraints
+    mean replication on that dim, which is always semantically safe.
+    """
+    rules = getattr(_STATE, "rules", {})
+    mesh = get_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    out = []
+    for i, name in enumerate(logical):
+        axes = rules.get(name) if name else None
+        if not axes:
+            out.append(None)
+            continue
+        if shape is not None and sizes:
+            extent = 1
+            for a in axes:
+                extent *= sizes.get(a, 1)
+            if shape[i] % extent != 0:
+                out.append(None)
+                continue
+        out.append(axes[0] if len(axes) == 1 else tuple(axes))
+    return P(*out)
+
+
+def constrain(x, logical: Sequence[Logical]):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(logical, x.shape))
+    )
+
+
+def sharding_for(
+    logical: Sequence[Logical], shape: Optional[Sequence[int]] = None
+) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(logical, shape))

@@ -1,0 +1,207 @@
+"""Mamba-2 SSD (state-space duality) block — chunked, MXU-friendly.
+
+Selective state space per head h (head dim P, state dim N):
+
+    S_t = a_t · S_{t-1} + (Δ_t x_t) B_tᵀ          (P × N state)
+    y_t = S_t C_t + D_h · x_t
+
+with a_t = exp(-exp(A_log_h) · Δ_t), Δ_t = softplus(dt_raw + dt_bias).
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split
+into chunks of Q steps; within a chunk the contribution is a masked
+(Q × Q) matmul (the "duality" — attention-like, runs on the MXU), and
+chunk states are carried by a short lax.scan (T/Q steps).  O(T·Q) time,
+O(T) memory — this is the sub-quadratic path that makes long_500k viable.
+
+Decode is the O(1) recurrence on a (B, H, P, N) state cache.
+B/C are shared across heads (single group, G=1), as in Mamba-2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.shardctx import constrain
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig, n_layers: int, dtype) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    d_in, h, n = ssm_dims(cfg)
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    p = {
+        # packs [z gate (d_in), x (d_in), B (n), C (n), dt (h)]
+        "in_proj": dense_init(
+            ks[0], (n_layers, d, 2 * d_in + 2 * n + h), in_axis=1, dtype=dtype
+        ),
+        "conv_w": dense_init(
+            ks[1], (n_layers, cfg.conv_kernel, conv_dim), in_axis=1, dtype=dtype
+        ),
+        "conv_b": jnp.zeros((n_layers, conv_dim), dtype),
+        "A_log": jnp.zeros((n_layers, h), jnp.float32),
+        "D": jnp.ones((n_layers, h), jnp.float32),
+        "dt_bias": jnp.zeros((n_layers, h), jnp.float32),
+        "out_norm": jnp.zeros((n_layers, d_in), dtype),
+        "out_proj": dense_init(ks[2], (n_layers, d_in, d), in_axis=1, dtype=dtype),
+    }
+    s = {
+        "in_proj": ("stack", "fsdp", "mlp"),
+        "conv_w": ("stack", None, "mlp"),
+        "conv_b": ("stack", "mlp"),
+        "A_log": ("stack", None),
+        "D": ("stack", None),
+        "dt_bias": ("stack", None),
+        "out_norm": ("stack", "mlp"),
+        "out_proj": ("stack", "mlp", "fsdp"),
+    }
+    return p, s
+
+
+def _split_proj(proj: jnp.ndarray, cfg: ModelConfig):
+    d_in, h, n = ssm_dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : 2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray):
+    """Depthwise causal conv over time. xbc (B, T, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + bias[None, None, :])
+
+
+def ssd_chunked(
+    xh: jnp.ndarray,    # (B, T, H, P)  Δ-scaled inputs  (x̄ = Δ·x)
+    la: jnp.ndarray,    # (B, T, H)     log decay  (log a_t, ≤ 0)
+    Bm: jnp.ndarray,    # (B, T, N)
+    Cm: jnp.ndarray,    # (B, T, N)
+    chunk: int,
+    s0: jnp.ndarray = None,  # (B, H, P, N) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk-parallel SSD. Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    b, t, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // q
+    xh = xh.reshape(b, nc, q, h, p)
+    la = la.reshape(b, nc, q, h)
+    Bm = Bm.reshape(b, nc, q, n)
+    Cm = Cm.reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(la, axis=2)                      # (B, NC, Q, H) Σ log a
+    # intra-chunk: y_i = Σ_{j<=i} (C_i·B_j) exp(cum_i - cum_j) x̄_j
+    G = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)         # (B, NC, Q, Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,NC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    M = G[..., None] * jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xh)
+
+    # chunk summaries: S_c = Σ_j exp(cum_Q - cum_j) x̄_j B_jᵀ
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)           # (B, NC, Q, H)
+    S_c = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", tail, xh, Bm)
+    a_chunk = jnp.exp(cum[:, :, -1, :])               # (B, NC, H) total decay
+
+    def chunk_step(s_prev, inp):
+        s_c, a_c = inp                                # (B,H,P,N), (B,H)
+        s_new = a_c[..., None, None] * s_prev + s_c
+        return s_new, s_prev
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, p, n), xh.dtype)
+    s_final, s_prevs = jax.lax.scan(
+        chunk_step,
+        s0,
+        (S_c.transpose(1, 0, 2, 3, 4), a_chunk.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)        # (B, NC, H, P, N)
+
+    # inter-chunk: y_i += exp(cum_i) · C_i · S_prev
+    y_inter = jnp.einsum(
+        "bcih,bcin,bchpn->bcihp", jnp.exp(cum), Cm, s_prevs
+    )
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)
+    return y[:, :t], s_final
+
+
+def ssm_block(
+    pl: Dict, x: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Full Mamba-2 mixer for training/prefill. x (B, T, D) -> (B, T, D)."""
+    d_in, h, n = ssm_dims(cfg)
+    p_dim = cfg.ssm_head_dim
+    proj = jnp.einsum("btd,dk->btk", x, pl["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, pl["conv_w"].astype(x.dtype), pl["conv_b"].astype(x.dtype))
+    xs = xbc[..., :d_in]
+    Bm = xbc[..., d_in : d_in + n].astype(jnp.float32)
+    Cm = xbc[..., d_in + n :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + pl["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(pl["A_log"])[None, None, :] * dt                     # log decay
+    xh = xs.reshape(*xs.shape[:2], h, p_dim).astype(jnp.float32)
+    xh_bar = xh * dt[..., None]
+
+    y, _ = ssd_chunked(xh_bar, a, Bm, Cm, cfg.ssm_chunk)
+    y = y + pl["D"][None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), pl["out_norm"], cfg.norm_eps)  # gated norm
+    return jnp.einsum("btk,kd->btd", y, pl["out_proj"].astype(x.dtype))
+
+
+# ------------------------------------------------------------------ decode
+def ssm_decode_step(
+    pl: Dict,
+    x: jnp.ndarray,          # (B, 1, D)
+    state: Dict,             # {"s": (B,H,P,N), "conv": (B, K-1, C)}
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict]:
+    d_in, h, n = ssm_dims(cfg)
+    p_dim = cfg.ssm_head_dim
+    k = cfg.conv_kernel
+    proj = jnp.einsum("btd,dk->btk", x, pl["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    conv_hist = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, K, C)
+    xbc_t = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_hist, pl["conv_w"].astype(x.dtype))
+        + pl["conv_b"].astype(x.dtype)
+    )[:, None, :]
+    new_conv = conv_hist[:, 1:]
+
+    xs = xbc_t[..., :d_in]
+    Bm = xbc_t[..., d_in : d_in + n].astype(jnp.float32)[:, 0]     # (B,N)
+    Cm = xbc_t[..., d_in + n :].astype(jnp.float32)[:, 0]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + pl["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(pl["A_log"])[None, :] * dt)                        # (B,H)
+    xh = xs[:, 0].reshape(-1, h, p_dim).astype(jnp.float32)                 # (B,H,P)
+    xh_bar = xh * dt[..., None]
+
+    s = state["s"]
+    s = a[..., None, None] * s + jnp.einsum("bhp,bn->bhpn", xh_bar, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm) + pl["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), pl["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, pl["out_proj"].astype(x.dtype))
+    return out, {"s": s, "conv": new_conv}

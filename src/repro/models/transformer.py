@@ -1,0 +1,283 @@
+"""Decoder-only transformer LM (dense GQA / MoE / MLA families).
+
+Covers grok-1, deepseek-v2-lite (MLA+MoE), granite-3, qwen2, qwen3,
+starcoder2.  Layers are *scanned* (params stacked on a leading "stack"
+axis) so the HLO is O(1) in depth; the per-layer body is rematerialized
+(``jax.checkpoint``) under cfg.remat.
+
+Entry points (used by train/serve/dry-run):
+    init(key) / param_specs()
+    loss_fn(params, batch)                      train_step target
+    prefill(params, tokens) -> (logits, cache)  inference-prefill
+    decode_step(params, tokens, cache)          inference-decode
+    init_cache(batch, max_len) / cache_specs()
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models.shardctx import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        pd = _dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 4)
+        emb, emb_s = L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, pd)
+        if cfg.mla:
+            att, att_s = attn.init_mla(ks[1], cfg, cfg.n_layers, pd)
+        else:
+            att, att_s = attn.init_attention(ks[1], cfg, cfg.n_layers, pd)
+        if cfg.moe:
+            ffn, ffn_s = moe_mod.init_moe(ks[2], cfg, cfg.n_layers, pd)
+        else:
+            ffn, ffn_s = L.init_mlp(ks[2], cfg.n_layers, cfg.d_model, cfg.d_ff, pd)
+        params = {
+            "embed": emb,
+            "attn": att,
+            "ffn": ffn,
+            "ln1": jnp.zeros((cfg.n_layers, cfg.d_model), pd),
+            "ln2": jnp.zeros((cfg.n_layers, cfg.d_model), pd),
+            "ln_f": jnp.zeros((cfg.d_model,), pd),
+        }
+        self._specs = {
+            "embed": emb_s,
+            "attn": att_s,
+            "ffn": ffn_s,
+            "ln1": ("stack", None),
+            "ln2": ("stack", None),
+            "ln_f": (None,),
+        }
+        return params
+
+    def param_specs(self) -> Dict:
+        if not hasattr(self, "_specs"):
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._specs
+
+    # ------------------------------------------------------------ forward
+    def _layer(self, pl: Params, x, positions, window: int):
+        cfg = self.cfg
+        h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+        if cfg.mla:
+            q, c_kv, k_rope = attn.mla_project(pl["attn"], h, cfg, positions)
+            k, v = attn.mla_expand_kv(pl["attn"], c_kv, k_rope, h.dtype)
+            o = attn.flash_attention(q, k, v, causal=True, window=window)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+        else:
+            q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+            o = attn.flash_attention(q, k, v, causal=True, window=window)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+        x = x + o
+        h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            f = moe_mod.moe_ffn(pl["ffn"], h, cfg)
+        else:
+            f = L.swiglu_mlp(pl["ffn"], h)
+        x = x + f
+        return constrain(x, ("batch", None, None))
+
+    def forward(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        window = cfg.local_window
+
+        stacked = {
+            "attn": params["attn"], "ffn": params["ffn"],
+            "ln1": params["ln1"], "ln2": params["ln2"],
+        }
+
+        if cfg.scan_layers:
+            fn = lambda x, pl: (  # noqa: E731
+                self._maybe_remat(
+                    lambda xx, pp: self._layer(pp, xx, positions, window)
+                )(x, pl),
+                None,
+            )
+            x, _ = jax.lax.scan(fn, x, stacked)
+        else:
+            for i in range(cfg.n_layers):
+                pl = jax.tree.map(lambda a: a[i], stacked)
+                x = self._layer(pl, x, positions, window)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.unembed(params["embed"], x)
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        return fn
+
+    def loss_fn(self, params: Params, batch: Dict) -> jnp.ndarray:
+        logits = self.forward(params, batch["tokens"])
+        return L.softmax_cross_entropy(
+            logits, batch["labels"], batch.get("mask")
+        )
+
+    # ------------------------------------------------------------ serving
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        if cfg.mla:
+            r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+            return {
+                "ckv": jax.ShapeDtypeStruct((cfg.n_layers, batch, max_len, r), cd),
+                "krope": jax.ShapeDtypeStruct(
+                    (cfg.n_layers, batch, max_len, dr), cd
+                ),
+                "len": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        hd = cfg.resolved_head_dim
+        return {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), cd
+            ),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), cd
+            ),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_logical_specs(self) -> Dict:
+        if self.cfg.mla:
+            return {
+                "ckv": ("stack", "batch", "seq", None),
+                "krope": ("stack", "batch", "seq", None),
+                "len": (),
+            }
+        return {
+            "k": ("stack", "batch", "seq", "kv_heads", None),
+            "v": ("stack", "batch", "seq", "kv_heads", None),
+            "len": (),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            self.cache_specs(batch, max_len),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def prefill(self, params: Params, tokens: jnp.ndarray) -> Tuple:
+        """Forward over the prompt; returns (last-token logits, full cache)."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        stacked = {
+            "attn": params["attn"], "ffn": params["ffn"],
+            "ln1": params["ln1"], "ln2": params["ln2"],
+        }
+
+        def layer_with_cache(x, pl):
+            h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+            if cfg.mla:
+                q, c_kv, k_rope = attn.mla_project(pl["attn"], h, cfg, positions)
+                k, v = attn.mla_expand_kv(pl["attn"], c_kv, k_rope, h.dtype)
+                cache_out = {"ckv": c_kv, "krope": k_rope}
+            else:
+                q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+                cache_out = {"k": k, "v": v}
+            o = attn.flash_attention(
+                q, k, v, causal=True, window=cfg.local_window,
+                skip_masked_chunks=True,  # inference: no grad (§Perf H3)
+            )
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+            f = moe_mod.moe_ffn(pl["ffn"], h, cfg) if cfg.moe else L.swiglu_mlp(
+                pl["ffn"], h
+            )
+            return x + f, cache_out
+
+        def body(carry, pl):
+            return self._maybe_remat(layer_with_cache)(carry, pl)
+
+        x, caches = jax.lax.scan(body, x, stacked)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x[:, -1:])
+        caches["len"] = jnp.asarray(s, jnp.int32)
+        return logits, caches
+
+    def decode_step(
+        self, params: Params, tokens: jnp.ndarray, cache: Dict
+    ) -> Tuple[jnp.ndarray, Dict]:
+        """tokens (B, 1); cache from prefill/init. Appends one position."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b = tokens.shape[0]
+        pos = cache["len"]
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(pos[None], (b, 1))
+        stacked = {
+            "attn": params["attn"], "ffn": params["ffn"],
+            "ln1": params["ln1"], "ln2": params["ln2"],
+        }
+        layer_cache = {k: v for k, v in cache.items() if k != "len"}
+
+        def body(x, inp):
+            pl, lc = inp
+            h = L.rmsnorm(x, pl["ln1"], cfg.norm_eps)
+            if cfg.mla:
+                q, c_kv, k_rope = attn.mla_project(pl["attn"], h, cfg, positions)
+                ckv_c = jax.lax.dynamic_update_slice(
+                    lc["ckv"], c_kv.astype(lc["ckv"].dtype), (0, pos, 0)
+                )
+                kr_c = jax.lax.dynamic_update_slice(
+                    lc["krope"], k_rope.astype(lc["krope"].dtype), (0, pos, 0)
+                )
+                k, v = attn.mla_expand_kv(pl["attn"], ckv_c, kr_c, h.dtype)
+                o = attn.decode_attention(
+                    q, k, v, pos + 1, window=cfg.local_window
+                )
+                new_lc = {"ckv": ckv_c, "krope": kr_c}
+            else:
+                q, k, v = attn.qkv_project(pl["attn"], h, cfg, positions)
+                k_c = jax.lax.dynamic_update_slice(
+                    lc["k"], k.astype(lc["k"].dtype), (0, pos, 0, 0)
+                )
+                v_c = jax.lax.dynamic_update_slice(
+                    lc["v"], v.astype(lc["v"].dtype), (0, pos, 0, 0)
+                )
+                o = attn.decode_attention(
+                    q, k_c, v_c, pos + 1, window=cfg.local_window
+                )
+                new_lc = {"k": k_c, "v": v_c}
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["attn"]["wo"].astype(x.dtype))
+            x = x + o
+            h = L.rmsnorm(x, pl["ln2"], cfg.norm_eps)
+            f = moe_mod.moe_ffn(pl["ffn"], h, cfg) if cfg.moe else L.swiglu_mlp(
+                pl["ffn"], h
+            )
+            return x + f, new_lc
+
+        x, new_cache = jax.lax.scan(body, x, (stacked, layer_cache))
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x)
+        new_cache["len"] = pos + 1
+        return logits, new_cache

@@ -1,0 +1,280 @@
+"""Vision-language decoder (llama-3.2-vision family backbone).
+
+The modality frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (B, vision_tokens, d_model); the
+vision encoder itself is out of scope.  The language backbone is a
+decoder-only transformer in which every ``cross_attn_every``-th layer
+carries an additional tanh-gated cross-attention sub-layer over the
+vision context (llama-vision style).
+
+Scanned as super-blocks of ``cross_attn_every`` layers: (every-1) pure
+self-attn layers + 1 cross+self layer, so the HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.shardctx import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class VisionLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.cross_attn_every > 1
+        assert cfg.n_layers % cfg.cross_attn_every == 0
+        self.cfg = cfg
+        self.n_super = cfg.n_layers // cfg.cross_attn_every
+        self.n_self = cfg.cross_attn_every - 1  # self-only layers per block
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        pd = _dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 5)
+        emb, emb_s = L.init_embed(ks[0], cfg.vocab_size, cfg.d_model, pd)
+        n_total = self.n_super * cfg.cross_attn_every
+        att, att_s = attn.init_attention(ks[1], cfg, n_total, pd)
+        att = jax.tree.map(
+            lambda a: a.reshape(self.n_super, cfg.cross_attn_every, *a.shape[1:]),
+            att,
+        )
+        att_s = {k: ("stack", "stack") + tuple(v[1:]) for k, v in att_s.items()}
+        xatt, xatt_s = attn.init_cross_attention(ks[2], cfg, self.n_super, pd)
+        mlp, mlp_s = L.init_mlp(ks[3], n_total, cfg.d_model, cfg.d_ff, pd)
+        mlp = jax.tree.map(
+            lambda a: a.reshape(self.n_super, cfg.cross_attn_every, *a.shape[1:]),
+            mlp,
+        )
+        mlp_s = {k: ("stack", "stack") + tuple(v[1:]) for k, v in mlp_s.items()}
+        ce = cfg.cross_attn_every
+        self._specs = {
+            "embed": emb_s, "attn": att_s, "xattn": xatt_s, "mlp": mlp_s,
+            "ln1": ("stack", None, None), "ln2": ("stack", None, None),
+            "ln_x": ("stack", None), "ln_f": (None,),
+        }
+        return {
+            "embed": emb,
+            "attn": att,
+            "xattn": xatt,
+            "mlp": mlp,
+            "ln1": jnp.zeros((self.n_super, ce, cfg.d_model), pd),
+            "ln2": jnp.zeros((self.n_super, ce, cfg.d_model), pd),
+            "ln_x": jnp.zeros((self.n_super, cfg.d_model), pd),
+            "ln_f": jnp.zeros((cfg.d_model,), pd),
+        }
+
+    def param_specs(self) -> Dict:
+        if not hasattr(self, "_specs"):
+            jax.eval_shape(
+                self.init, jax.random.PRNGKey(0)
+            )
+        return self._specs
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        return fn
+
+    def _self_layer(self, pl_attn, ln1, ln2, pl_mlp, x, positions,
+                    decode_ctx=None, skip_chunks=False):
+        cfg = self.cfg
+        h = L.rmsnorm(x, ln1, cfg.norm_eps)
+        q, k, v = attn.qkv_project(pl_attn, h, cfg, positions)
+        if decode_ctx is None:
+            o = attn.flash_attention(q, k, v, causal=True,
+                                     skip_masked_chunks=skip_chunks)
+            new_kv = (k, v)
+        else:
+            k_cache, v_cache, pos = decode_ctx
+            k_c = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0)
+            )
+            v_c = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0)
+            )
+            o = attn.decode_attention(q, k_c, v_c, pos + 1)
+            new_kv = (k_c, v_c)
+        o = jnp.einsum("bshk,hkd->bsd", o, pl_attn["wo"].astype(x.dtype))
+        x = x + o
+        h = L.rmsnorm(x, ln2, cfg.norm_eps)
+        return x + L.swiglu_mlp(pl_mlp, h), new_kv
+
+    def forward(
+        self, params: Params, tokens: jnp.ndarray, vision: jnp.ndarray
+    ) -> jnp.ndarray:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        vision = vision.astype(cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        stacked = {
+            "attn": params["attn"], "xattn": params["xattn"], "mlp": params["mlp"],
+            "ln1": params["ln1"], "ln2": params["ln2"], "ln_x": params["ln_x"],
+        }
+
+        def super_block(x, pl):
+            # gated cross-attention sub-layer first (llama-vision ordering)
+            h = L.rmsnorm(x, pl["ln_x"], cfg.norm_eps)
+            x = x + attn.cross_attention(pl["xattn"], h, vision, cfg)
+            for j in range(cfg.cross_attn_every):
+                x, _ = self._self_layer(
+                    jax.tree.map(lambda a: a[j], pl["attn"]),
+                    pl["ln1"][j], pl["ln2"][j],
+                    jax.tree.map(lambda a: a[j], pl["mlp"]),
+                    x, positions,
+                )
+            return constrain(x, ("batch", None, None))
+
+        fn = lambda x, pl: (self._maybe_remat(super_block)(x, pl), None)  # noqa: E731
+        x, _ = jax.lax.scan(fn, x, stacked)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.unembed(params["embed"], x)
+
+    def loss_fn(self, params: Params, batch: Dict) -> jnp.ndarray:
+        logits = self.forward(params, batch["tokens"], batch["vision_embeds"])
+        return L.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    # ------------------------------------------------------------ serving
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        hd = cfg.resolved_head_dim
+        ce = cfg.cross_attn_every
+        sv = cfg.vision_tokens
+        return {
+            "k": jax.ShapeDtypeStruct(
+                (self.n_super, ce, batch, max_len, cfg.n_kv_heads, hd), cd
+            ),
+            "v": jax.ShapeDtypeStruct(
+                (self.n_super, ce, batch, max_len, cfg.n_kv_heads, hd), cd
+            ),
+            # vision K/V are static per request; cached once at prefill
+            "xk": jax.ShapeDtypeStruct(
+                (self.n_super, batch, sv, cfg.n_kv_heads, hd), cd
+            ),
+            "xv": jax.ShapeDtypeStruct(
+                (self.n_super, batch, sv, cfg.n_kv_heads, hd), cd
+            ),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def cache_logical_specs(self) -> Dict:
+        return {
+            "k": ("stack", None, "batch", "seq", "kv_heads", None),
+            "v": ("stack", None, "batch", "seq", "kv_heads", None),
+            "xk": ("stack", "batch", "seq", "kv_heads", None),
+            "xv": ("stack", "batch", "seq", "kv_heads", None),
+            "len": (),
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            self.cache_specs(batch, max_len),
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def prefill(
+        self, params: Params, tokens: jnp.ndarray, vision: jnp.ndarray
+    ) -> Tuple:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b, s = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        vision = vision.astype(cd)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        stacked = {
+            "attn": params["attn"], "xattn": params["xattn"], "mlp": params["mlp"],
+            "ln1": params["ln1"], "ln2": params["ln2"], "ln_x": params["ln_x"],
+        }
+
+        def super_block(x, pl):
+            h = L.rmsnorm(x, pl["ln_x"], cfg.norm_eps)
+            xk = jnp.einsum(
+                "bsd,dhk->bshk", vision, pl["xattn"]["wk"].astype(x.dtype)
+            )
+            xv = jnp.einsum(
+                "bsd,dhk->bshk", vision, pl["xattn"]["wv"].astype(x.dtype)
+            )
+            q = jnp.einsum("bsd,dhk->bshk", h, pl["xattn"]["wq"].astype(x.dtype))
+            o = attn.flash_attention(q, xk, xv, causal=False)
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["xattn"]["wo"].astype(x.dtype))
+            x = x + jnp.tanh(pl["xattn"]["gate"]).astype(x.dtype) * o
+            ks, vs = [], []
+            for j in range(cfg.cross_attn_every):
+                x, (k, v) = self._self_layer(
+                    jax.tree.map(lambda a: a[j], pl["attn"]),
+                    pl["ln1"][j], pl["ln2"][j],
+                    jax.tree.map(lambda a: a[j], pl["mlp"]),
+                    x, positions, skip_chunks=True,
+                )
+                ks.append(k)
+                vs.append(v)
+            return x, {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                       "xk": xk, "xv": xv}
+
+        def body(carry, pl):
+            return self._maybe_remat(super_block)(carry, pl)
+
+        x, caches = jax.lax.scan(body, x, stacked)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x[:, -1:])
+        caches["len"] = jnp.asarray(s, jnp.int32)
+        return logits, caches
+
+    def decode_step(
+        self, params: Params, tokens: jnp.ndarray, cache: Dict
+    ) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        b = tokens.shape[0]
+        pos = cache["len"]
+        x = L.embed_tokens(params["embed"], tokens, cd)
+        positions = jnp.broadcast_to(pos[None], (b, 1))
+        stacked = {
+            "attn": params["attn"], "xattn": params["xattn"], "mlp": params["mlp"],
+            "ln1": params["ln1"], "ln2": params["ln2"], "ln_x": params["ln_x"],
+        }
+        layer_cache = {k: cache[k] for k in ("k", "v", "xk", "xv")}
+
+        def body(x, inp):
+            pl, lc = inp
+            h = L.rmsnorm(x, pl["ln_x"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, pl["xattn"]["wq"].astype(x.dtype))
+            sv = lc["xk"].shape[1]
+            o = attn.decode_attention(q, lc["xk"], lc["xv"], jnp.asarray(sv))
+            o = jnp.einsum("bshk,hkd->bsd", o, pl["xattn"]["wo"].astype(x.dtype))
+            x = x + jnp.tanh(pl["xattn"]["gate"]).astype(x.dtype) * o
+            new_k, new_v = [], []
+            for j in range(cfg.cross_attn_every):
+                x, (k_c, v_c) = self._self_layer(
+                    jax.tree.map(lambda a: a[j], pl["attn"]),
+                    pl["ln1"][j], pl["ln2"][j],
+                    jax.tree.map(lambda a: a[j], pl["mlp"]),
+                    x, positions,
+                    decode_ctx=(lc["k"][j], lc["v"][j], pos),
+                )
+                new_k.append(k_c)
+                new_v.append(v_c)
+            return x, {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                       "xk": lc["xk"], "xv": lc["xv"]}
+
+        x, new_cache = jax.lax.scan(body, x, (stacked, layer_cache))
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x)
+        new_cache["len"] = pos + 1
+        return logits, new_cache

@@ -1,0 +1,132 @@
+"""Batched serving engine: continuous prefill + decode over a model zoo
+member (used by examples/serve_merged.py and the serving tests).
+
+Minimal-but-real structure: a request queue, a fixed decode batch with
+slot recycling, greedy/temperature sampling, and jitted prefill/decode
+steps.  The decode cache is allocated once at engine start (static
+shapes => one compilation), requests claim slots and free them at EOS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model,
+        params,
+        batch_slots: int = 4,
+        max_len: int = 256,
+        rng_seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cfg = model.cfg
+        self._decode = jax.jit(model.decode_step)
+        self._key = jax.random.PRNGKey(rng_seed)
+        # one shared cache batch; slot i belongs to at most one request
+        self.cache = model.init_cache(batch_slots, max_len)
+        self._slot_req: List[Optional[Request]] = [None] * batch_slots
+
+    # -- single-request prefill (per-slot caches are merged by batch dim) --
+    def _prefill_slot(self, slot: int, req: Request) -> int:
+        """Prefill one request and splice its cache row into the engine
+        cache at ``slot``.  The batch axis of each cache leaf is detected
+        structurally (engine dim == slots where the single-request dim is
+        1); other dims are zero-padded up to the engine shapes."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = self.model.prefill(self.params, toks)
+        # first generated token comes from the prefill logits
+        req.out_tokens.append(self._sample(req, np.asarray(logits[0, 0])))
+        new_cache = {}
+        for k, big in self.cache.items():
+            if k == "len":
+                new_cache[k] = cache1[k]
+                continue
+            small = cache1[k]
+            batch_ax = tuple(
+                big.shape[ax] == self.slots and small.shape[ax] == 1
+                for ax in range(big.ndim)
+            )
+            pads = [
+                (0, (1 if batch_ax[ax] else big.shape[ax]) - small.shape[ax])
+                for ax in range(big.ndim)
+            ]
+            small = jnp.pad(small, pads)
+            start = tuple(slot if a else 0 for a in batch_ax)
+            new_cache[k] = jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), start
+            )
+        self.cache = new_cache
+        return int(cache1["len"])
+
+    def _sample(self, req: Request, logits: np.ndarray) -> int:
+        if req.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            return int(jax.random.categorical(
+                sub, jnp.asarray(logits) / req.temperature
+            ))
+        return int(np.argmax(logits))
+
+    def submit(self, req: Request) -> bool:
+        for slot, owner in enumerate(self._slot_req):
+            if owner is None:
+                self._slot_req[slot] = req
+                req._slot = slot  # type: ignore[attr-defined]
+                req._len = self._prefill_slot(slot, req)  # type: ignore
+                return True
+        return False
+
+    def step(self) -> None:
+        """One decode step for every active slot (batched)."""
+        active = [r for r in self._slot_req if r is not None]
+        if not active:
+            return
+        # engine caches share a scalar len; per-slot lens tracked host-side.
+        # For simplicity all active requests advance together from the max
+        # len (correctness: shorter prompts were left-padded into the cache).
+        cur = max(getattr(r, "_len") for r in active)
+        tok = np.zeros((self.slots, 1), np.int32)
+        for r in active:
+            tok[getattr(r, "_slot"), 0] = r.out_tokens[-1]
+        cache = dict(self.cache)
+        cache["len"] = jnp.asarray(cur, jnp.int32)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tok), cache
+        )
+        logits = np.asarray(logits[:, 0], np.float32)
+        for r in active:
+            slot = getattr(r, "_slot")
+            r.out_tokens.append(self._sample(r, logits[slot]))
+            setattr(r, "_len", cur + 1)
+            if len(r.out_tokens) >= r.max_new_tokens or cur + 1 >= self.max_len:
+                r.done = True
+                self._slot_req[slot] = None
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> None:
+        pending = list(requests)
+        steps = 0
+        while (pending or any(self._slot_req)) and steps < max_steps:
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.step()
+            steps += 1

@@ -1,0 +1,15 @@
+"""Storage substrate: block-granular tensor files, snapshots, I/O stats."""
+from repro.store.iostats import GLOBAL_STATS, IOStats, measure
+from repro.store.snapshot import SnapshotStore, StagingWriter
+from repro.store.tensorstore import CheckpointStore, ModelReader, load_model_arrays
+
+__all__ = [
+    "GLOBAL_STATS",
+    "IOStats",
+    "measure",
+    "SnapshotStore",
+    "StagingWriter",
+    "CheckpointStore",
+    "ModelReader",
+    "load_model_arrays",
+]

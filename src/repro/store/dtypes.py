@@ -1,0 +1,44 @@
+"""Dtype registry — numpy <-> on-disk names, including bfloat16.
+
+numpy has no native bfloat16; jax ships ``ml_dtypes`` which provides it.
+Checkpoints store dtype *names* so manifests stay backend-neutral.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:  # ml_dtypes is a hard dependency of jax, so this always succeeds here.
+    import ml_dtypes
+
+    bfloat16 = np.dtype(ml_dtypes.bfloat16)
+    float8_e4m3 = np.dtype(ml_dtypes.float8_e4m3fn)
+    _EXTRA = {"bfloat16": bfloat16, "float8_e4m3fn": float8_e4m3}
+except ImportError:  # pragma: no cover - jax always brings ml_dtypes
+    _EXTRA = {}
+
+_CANONICAL = {
+    "float32": np.dtype(np.float32),
+    "float16": np.dtype(np.float16),
+    "float64": np.dtype(np.float64),
+    "int8": np.dtype(np.int8),
+    "uint8": np.dtype(np.uint8),
+    "int16": np.dtype(np.int16),
+    "int32": np.dtype(np.int32),
+    "int64": np.dtype(np.int64),
+    "bool": np.dtype(np.bool_),
+    **_EXTRA,
+}
+
+
+def to_np_dtype(name: str) -> np.dtype:
+    if name not in _CANONICAL:
+        raise ValueError(f"unknown checkpoint dtype {name!r}")
+    return _CANONICAL[name]
+
+
+def dtype_name(dt) -> str:
+    dt = np.dtype(dt)
+    for name, cand in _CANONICAL.items():
+        if dt == cand:
+            return name
+    raise ValueError(f"unsupported checkpoint dtype {dt!r}")

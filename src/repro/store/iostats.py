@@ -1,0 +1,133 @@
+"""Byte-accurate I/O accounting.
+
+Every physical read/write in the storage layer is tagged with a *category*
+mirroring the paper's cost decomposition (§3.2):
+
+    base    — reads of the base model          (C_base)
+    expert  — reads of expert checkpoints      (C_expert, the O(K) term)
+    out     — writes of the merged output      (C_out)
+    meta    — catalog / manifest / hash I/O    (C_meta)
+
+The benchmark harness reads these counters to reproduce the paper's
+tables; the executor's budget-soundness property test asserts
+``expert_bytes_read <= B`` directly against them.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from collections import defaultdict
+from typing import Dict, Iterator
+
+CATEGORIES = ("base", "expert", "out", "meta", "analyze", "other")
+
+
+@dataclasses.dataclass
+class Counter:
+    bytes: int = 0
+    calls: int = 0
+
+    def add(self, nbytes: int) -> None:
+        self.bytes += nbytes
+        self.calls += 1
+
+
+class IOStats:
+    """Thread-safe tagged byte counters."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.read: Dict[str, Counter] = defaultdict(Counter)
+        self.written: Dict[str, Counter] = defaultdict(Counter)
+
+    # -- recording -----------------------------------------------------
+    def record_read(self, category: str, nbytes: int) -> None:
+        with self._lock:
+            self.read[category].add(nbytes)
+
+    def record_write(self, category: str, nbytes: int) -> None:
+        with self._lock:
+            self.written[category].add(nbytes)
+
+    # -- queries (paper cost terms) -------------------------------------
+    def bytes_read(self, category: str) -> int:
+        return self.read[category].bytes
+
+    def bytes_written(self, category: str) -> int:
+        return self.written[category].bytes
+
+    @property
+    def c_base(self) -> int:
+        return self.bytes_read("base")
+
+    @property
+    def c_expert(self) -> int:
+        return self.bytes_read("expert")
+
+    @property
+    def c_out(self) -> int:
+        return self.bytes_written("out")
+
+    @property
+    def c_meta(self) -> int:
+        return (
+            self.bytes_read("meta")
+            + self.bytes_written("meta")
+            + self.bytes_read("other")
+            + self.bytes_written("other")
+        )
+
+    @property
+    def c_analyze(self) -> int:
+        """One-time ANALYZE reads — amortized across iterative merges,
+        reported separately from the per-merge budgeted expert reads."""
+        return self.bytes_read("analyze")
+
+    @property
+    def c_total(self) -> int:
+        """Total I/O volume — C_base + C_expert + C_out + C_meta (§3.2)."""
+        return self.c_base + self.c_expert + self.c_out + self.c_meta
+
+    def snapshot(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {
+                "read": {k: dataclasses.asdict(v) for k, v in self.read.items()},
+                "written": {k: dataclasses.asdict(v) for k, v in self.written.items()},
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.read.clear()
+            self.written.clear()
+
+    def delta_since(self, before: Dict[str, Dict[str, int]]) -> Dict[str, int]:
+        now = self.snapshot()
+
+        def _get(snap, kind, cat):
+            return snap[kind].get(cat, {}).get("bytes", 0)
+
+        return {
+            "base_read": _get(now, "read", "base") - _get(before, "read", "base"),
+            "expert_read": _get(now, "read", "expert") - _get(before, "read", "expert"),
+            "out_written": _get(now, "written", "out") - _get(before, "written", "out"),
+            "meta": (
+                sum(_get(now, k, c) for k in ("read", "written") for c in ("meta", "other"))
+                - sum(_get(before, k, c) for k in ("read", "written") for c in ("meta", "other"))
+            ),
+        }
+
+
+#: Process-global stats used by default; benchmarks may create private ones.
+GLOBAL_STATS = IOStats()
+
+
+@contextlib.contextmanager
+def measure(stats: IOStats = GLOBAL_STATS) -> Iterator[Dict[str, int]]:
+    """``with measure() as d: ...`` — fills ``d`` with the I/O delta."""
+    before = stats.snapshot()
+    out: Dict[str, int] = {}
+    try:
+        yield out
+    finally:
+        out.update(stats.delta_since(before))

@@ -1,0 +1,213 @@
+"""Snapshots: staged writes + atomic publish (paper §2.2, §5.3).
+
+Invariant (Immutability and Atomic Visibility): a merge either publishes a
+complete snapshot ``sid`` with manifest ``man(sid)``, or publishes nothing.
+The publish point is a single ``os.replace`` of the manifest file — POSIX
+rename atomicity gives us the transactional guarantee without a WAL.
+
+Layout under the workspace root:
+
+    models/                  # CheckpointStore root (bases, experts, snapshots)
+    staging/txn-<token>/     # invisible until publish
+    manifests/<sid>.json     # existence == committed
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+import uuid
+from typing import Dict, List, Mapping, Optional
+
+import numpy as np
+
+from repro.store import dtypes
+from repro.store.iostats import GLOBAL_STATS, IOStats
+from repro.store.tensorstore import MODEL_MANIFEST, TENSOR_DIR, CheckpointStore
+
+
+class StagingWriter:
+    """Streams output blocks sequentially per tensor into a staging dir.
+
+    The executor (Algorithm 2) materializes every output block in plan
+    order; this writer appends them, maintaining streaming hashes so
+    ``ValidateHashes`` never needs to re-read the data files.
+    """
+
+    def __init__(self, staging_dir: str, stats: IOStats):
+        self.dir = staging_dir
+        self.stats = stats
+        os.makedirs(os.path.join(staging_dir, TENSOR_DIR), exist_ok=True)
+        self.specs: Dict[str, Dict] = {}
+        self._open_name: Optional[str] = None
+        self._open_file = None
+        self._open_hash = None
+        self._block_hashes: List[str] = []
+        self._written = 0
+        self._next_block = 0
+        self._tensor_count = 0
+        self.aborted = False
+
+    # -- per-tensor streaming ------------------------------------------------
+    def begin_tensor(self, tensor_id: str, shape, dtype) -> None:
+        if self._open_name is not None:
+            raise RuntimeError(f"tensor {self._open_name} still open")
+        fname = os.path.join(TENSOR_DIR, f"{self._tensor_count:05d}.bin")
+        self._tensor_count += 1
+        self._open_name = tensor_id
+        self._open_file = open(os.path.join(self.dir, fname), "wb")
+        self._open_hash = hashlib.blake2b(digest_size=16)
+        self._block_hashes = []
+        self._written = 0
+        self._next_block = 0
+        self.specs[tensor_id] = {
+            "shape": list(shape),
+            "dtype": dtypes.dtype_name(dtype),
+            "file": fname,
+            "nbytes": 0,
+            "hash": "",
+            "block_hashes": self._block_hashes,
+        }
+
+    def write_block(self, tensor_id: str, block_idx: int, block: np.ndarray) -> None:
+        if tensor_id != self._open_name:
+            raise RuntimeError(f"tensor {tensor_id} is not the open tensor")
+        if block_idx != self._next_block:
+            raise RuntimeError(
+                f"blocks must stream in order: expected {self._next_block}, "
+                f"got {block_idx}"
+            )
+        raw = np.ascontiguousarray(block).tobytes()
+        self._open_file.write(raw)
+        self._open_hash.update(raw)
+        self._block_hashes.append(
+            hashlib.blake2b(raw, digest_size=8).hexdigest()
+        )
+        self._written += len(raw)
+        self._next_block += 1
+        self.stats.record_write("out", len(raw))
+
+    def finish_tensor(self, tensor_id: str) -> None:
+        if tensor_id != self._open_name:
+            raise RuntimeError(f"tensor {tensor_id} is not the open tensor")
+        self._open_file.close()
+        spec = self.specs[tensor_id]
+        spec["nbytes"] = self._written
+        spec["hash"] = self._open_hash.hexdigest()
+        self._open_name = None
+        self._open_file = None
+
+    # -- validation (Algorithm 2 step 2: S.ValidateHashes) ---------------------
+    def validate_hashes(self) -> None:
+        """Re-read staged bytes and compare against streaming hashes —
+        catches torn writes / disk corruption before publish."""
+        if self._open_name is not None:
+            raise RuntimeError(f"tensor {self._open_name} never finished")
+        for tensor_id, spec in self.specs.items():
+            path = os.path.join(self.dir, spec["file"])
+            h = hashlib.blake2b(digest_size=16)
+            n = 0
+            with open(path, "rb") as f:
+                while True:
+                    chunk = f.read(1 << 20)
+                    if not chunk:
+                        break
+                    h.update(chunk)
+                    n += len(chunk)
+            self.stats.record_read("meta", n)
+            if n != spec["nbytes"] or h.hexdigest() != spec["hash"]:
+                raise IOError(f"hash validation failed for staged tensor {tensor_id}")
+
+    def abort(self) -> None:
+        if self._open_file is not None:
+            self._open_file.close()
+            self._open_file = None
+            self._open_name = None
+        shutil.rmtree(self.dir, ignore_errors=True)
+        self.aborted = True
+
+
+class SnapshotStore:
+    """Workspace-level snapshot management with atomic publish."""
+
+    def __init__(self, workspace: str, stats: Optional[IOStats] = None):
+        self.workspace = workspace
+        self.stats = stats or GLOBAL_STATS
+        self.models = CheckpointStore(os.path.join(workspace, "models"), self.stats)
+        self.staging_root = os.path.join(workspace, "staging")
+        self.manifest_root = os.path.join(workspace, "manifests")
+        os.makedirs(self.staging_root, exist_ok=True)
+        os.makedirs(self.manifest_root, exist_ok=True)
+
+    # -- staging ------------------------------------------------------------
+    def open_staging_writer(self) -> StagingWriter:
+        token = uuid.uuid4().hex[:12]
+        return StagingWriter(
+            os.path.join(self.staging_root, f"txn-{token}"), self.stats
+        )
+
+    # -- atomic publish (paper §5.3) ---------------------------------------
+    def atomic_publish(self, writer: StagingWriter, manifest: Dict) -> str:
+        """Publish a staged snapshot. Returns sid. All-or-nothing."""
+        sid = manifest["sid"]
+        if self.is_published(sid):
+            raise ValueError(f"snapshot {sid} already published")
+        # 1. finalize the staged model dir with its MODEL.json
+        model_doc = {
+            "model_id": sid,
+            "meta": {"snapshot": True, "plan_id": manifest.get("plan_id")},
+            "tensors": {
+                name: {k: v for k, v in spec.items() if k != "block_hashes"}
+                for name, spec in writer.specs.items()
+            },
+        }
+        raw_model = json.dumps(model_doc, indent=1).encode()
+        with open(os.path.join(writer.dir, MODEL_MANIFEST), "wb") as f:
+            f.write(raw_model)
+            f.flush()
+            os.fsync(f.fileno())
+        self.stats.record_write("meta", len(raw_model))
+        # 2. move staged dir into the model store (same fs => atomic rename)
+        final_dir = os.path.join(self.models.root, sid)
+        os.replace(writer.dir, final_dir)
+        # 3. publish point: manifest file appears atomically
+        manifest = dict(manifest)
+        manifest["output_root"] = final_dir
+        manifest["created_at"] = time.time()
+        raw = json.dumps(manifest, indent=1, default=str).encode()
+        tmp = os.path.join(self.manifest_root, f".{sid}.tmp")
+        with open(tmp, "wb") as f:
+            f.write(raw)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(self.manifest_root, f"{sid}.json"))
+        self.stats.record_write("meta", len(raw))
+        return sid
+
+    # -- queries ----------------------------------------------------------
+    def is_published(self, sid: str) -> bool:
+        return os.path.exists(os.path.join(self.manifest_root, f"{sid}.json"))
+
+    def manifest(self, sid: str) -> Dict:
+        path = os.path.join(self.manifest_root, f"{sid}.json")
+        with open(path, "rb") as f:
+            raw = f.read()
+        self.stats.record_read("meta", len(raw))
+        return json.loads(raw)
+
+    def list_snapshots(self) -> List[str]:
+        return sorted(
+            f[: -len(".json")]
+            for f in os.listdir(self.manifest_root)
+            if f.endswith(".json")
+        )
+
+    def gc_staging(self) -> int:
+        """Remove orphaned staging dirs (crash recovery). Returns count."""
+        n = 0
+        for d in os.listdir(self.staging_root):
+            shutil.rmtree(os.path.join(self.staging_root, d), ignore_errors=True)
+            n += 1
+        return n

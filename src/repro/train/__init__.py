@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, data pipeline, fault-tolerant loop."""
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.train_state import TrainState, init_train_state, make_train_step

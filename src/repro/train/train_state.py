@@ -1,0 +1,50 @@
+"""Train state + jit-able train/eval step builders."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import grad_compress
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    ef: Optional[Any] = None  # error-feedback state (grad compression)
+
+
+def init_train_state(
+    model, rng, grad_compression: bool = False
+) -> TrainState:
+    params = model.init(rng)
+    ef = grad_compress.init_error_feedback(params) if grad_compression else None
+    return TrainState(params=params, opt=init_opt_state(params), ef=ef)
+
+
+def make_train_step(
+    model, opt_cfg: AdamWConfig, grad_compression: bool = False
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state, metrics); jit/lower-able."""
+
+    def train_step(state: TrainState, batch: Dict):
+        loss, grads = jax.value_and_grad(model.loss_fn)(state.params, batch)
+        ef = state.ef
+        if grad_compression:
+            grads, ef = grad_compress.compress_decompress(grads, ef)
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, state.params, grads, state.opt
+        )
+        metrics = {"loss": loss, **om}
+        return TrainState(new_params, new_opt, ef), metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable[[Any, Dict], jnp.ndarray]:
+    def eval_step(params, batch):
+        return model.loss_fn(params, batch)
+
+    return eval_step

@@ -1,0 +1,64 @@
+"""Block math: unit + hypothesis property tests."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import blocks as blk
+
+
+def test_num_blocks_exact():
+    assert blk.num_blocks(0, 1024) == 0
+    assert blk.num_blocks(1, 1024) == 1
+    assert blk.num_blocks(1024, 1024) == 1
+    assert blk.num_blocks(1025, 1024) == 2
+
+
+def test_block_range_tail():
+    r = blk.block_range(1000, 0, 600)
+    assert (r.offset, r.nbytes) == (0, 600)
+    r = blk.block_range(1000, 1, 600)
+    assert (r.offset, r.nbytes) == (600, 400)
+    with pytest.raises(IndexError):
+        blk.block_range(1000, 2, 600)
+
+
+def test_block_id_roundtrip():
+    b = blk.BlockId("model::x", "tensor/a", 7)
+    assert blk.BlockId.parse(str(b)) == b
+
+
+@given(
+    nbytes=st.integers(min_value=0, max_value=1 << 22),
+    block=st.integers(min_value=1, max_value=1 << 18),
+)
+@settings(max_examples=200, deadline=None)
+def test_partition_covers_exactly(nbytes, block):
+    """Partition(T;s) tiles the tensor bytes exactly, no gaps/overlap."""
+    ranges = blk.partition(nbytes, block)
+    assert sum(r.nbytes for r in ranges) == nbytes
+    pos = 0
+    for r in ranges:
+        assert r.offset == pos
+        assert r.nbytes > 0
+        pos = r.end
+    assert pos == nbytes
+
+
+@given(
+    nbytes=st.integers(min_value=1, max_value=1 << 20),
+    block=st.integers(min_value=1, max_value=1 << 16),
+    data=st.data(),
+)
+@settings(max_examples=100, deadline=None)
+def test_coalesce_preserves_bytes(nbytes, block, data):
+    """Coalesced runs cover exactly the selected blocks' bytes."""
+    ranges = blk.partition(nbytes, block)
+    sel = data.draw(st.lists(st.sampled_from(range(len(ranges))),
+                             unique=True, min_size=1,
+                             max_size=min(len(ranges), 64)))
+    picked = [ranges[i] for i in sel]
+    runs = blk.coalesce_ranges(picked)
+    assert sum(n for _, n in runs) == sum(r.nbytes for r in picked)
+    # runs are disjoint, sorted, and non-adjacent (maximal)
+    for (o1, n1), (o2, _n2) in zip(runs, runs[1:]):
+        assert o1 + n1 < o2

@@ -1,0 +1,70 @@
+"""Catalog relations: CRUD, persistence, plan reuse."""
+import os
+
+from repro.core.catalog import Catalog
+from repro.store.iostats import IOStats
+
+
+def test_block_meta_roundtrip(tmp_path):
+    cat = Catalog(str(tmp_path / "c.sqlite"), IOStats())
+    rows = [
+        ("m", "t", 4096, 0, 4096, "h0", 1.0, 2.0, 0.1, 42, 0.5, 0.9),
+        ("m", "t", 4096, 1, 1000, "h1", 1.5, 2.5, 0.2, -7, None, None),
+    ]
+    cat.upsert_block_meta(rows)
+    got = cat.block_metas("m", 4096)
+    assert len(got) == 2
+    assert got[0][0] == "t" and got[0][1] == 0 and got[0][2] == 4096
+    assert got[1][8] is None  # l2_delta nullable
+    cat.close()
+
+
+def test_analysis_marker_and_persistence(tmp_path):
+    path = str(tmp_path / "c.sqlite")
+    cat = Catalog(path, IOStats())
+    assert not cat.has_analysis("m", 4096)
+    cat.mark_analyzed("m", 4096, "base")
+    assert cat.has_analysis("m", 4096)
+    assert not cat.has_analysis("m", 8192)  # per-granularity
+    cat.close()
+    # survives reopen (persistent catalog, G3)
+    cat2 = Catalog(path, IOStats())
+    assert cat2.has_analysis("m", 4096)
+    cat2.close()
+
+
+def test_plan_record_and_reuse(tmp_path):
+    cat = Catalog(str(tmp_path / "c.sqlite"), IOStats())
+    payload = {"selection": {"e0": {"t": [0, 1]}}, "theta": {}}
+    cat.record_plan("p1", "base", ["e0", "e1"], "ties", 1000, "digest", 900,
+                    payload)
+    got = cat.get_plan("p1")
+    assert got["expert_ids"] == ["e0", "e1"]
+    assert got["payload"]["selection"]["e0"]["t"] == [0, 1]
+    # reuse hits on identical (base, experts, op, budget)
+    hit = cat.find_reusable_plan("base", ["e0", "e1"], "ties", 1000)
+    assert hit and hit["plan_id"] == "p1"
+    assert cat.find_reusable_plan("base", ["e0"], "ties", 1000) is None
+    assert cat.find_reusable_plan("base", ["e0", "e1"], "dare", 1000) is None
+    assert cat.find_reusable_plan("base", ["e0", "e1"], "ties", 999) is None
+    cat.close()
+
+
+def test_touch_map_and_coverage(tmp_path):
+    cat = Catalog(str(tmp_path / "c.sqlite"), IOStats())
+    cat.record_touch_map("s1", {"t": [(0, 3), (7, 9)]})
+    assert cat.touch_map("s1") == {"t": [(0, 3), (7, 9)]}
+    cat.record_coverage("s1", [("t", 0, "e0,e1"), ("t", 1, "e0")])
+    cov = cat.coverage("s1")
+    assert ("t", 0, "e0,e1") in cov
+    cat.close()
+
+
+def test_manifest_record(tmp_path):
+    cat = Catalog(str(tmp_path / "c.sqlite"), IOStats())
+    cat.record_manifest("s1", "p1", "base", ["e0"], "avg", 500, 480, "/out")
+    man = cat.get_manifest("s1")
+    assert man["c_expert_run"] == 480
+    assert cat.list_manifests() == ["s1"]
+    assert cat.catalog_nbytes() > 0
+    cat.close()

@@ -1,0 +1,105 @@
+"""Sharded merge execution vs. the streaming engine + plan partitioning."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import distributed as dist
+from repro.core.api import MergePipe
+from repro.core.plan import MergePlan
+
+
+@pytest.fixture
+def aligned_ws(tmp_path):
+    """Workspace whose tensors are exact block multiples (W=256 f32)."""
+    mp = MergePipe(str(tmp_path), block_size=1024)
+    rng = np.random.default_rng(3)
+    base = {
+        "a/w": rng.normal(size=(8, 256)).astype(np.float32),
+        "b/w": rng.normal(size=(5, 256)).astype(np.float32),
+    }
+    deltas = [
+        {k: 0.05 * rng.normal(size=v.shape).astype(np.float32)
+         for k, v in base.items()}
+        for _ in range(3)
+    ]
+    mp.register_model("base", base)
+    for i, d in enumerate(deltas):
+        mp.register_model(f"e{i}", d, kind="delta")
+    yield mp, base, deltas
+    mp.close()
+
+
+@pytest.mark.parametrize("op,theta", [
+    ("ta", {"lam": 0.5}),
+    ("avg", {}),
+    ("ties", {"trim_frac": 0.4}),
+    ("dare", {"density": 0.5, "seed": 11}),
+])
+def test_sharded_equals_streaming(aligned_ws, op, theta):
+    mp, base, deltas = aligned_ws
+    ids = [f"e{i}" for i in range(3)]
+    res = mp.merge("base", ids, op=op, theta=theta, budget=0.6,
+                   reuse_plan=False)
+    streamed = mp.load(res.sid)
+    plan = MergePlan.from_payload(
+        mp.catalog.get_plan(res.manifest["plan_id"])["payload"]
+    )
+    w = plan.block_size // 4
+    base_blocks, metas = dist.pack_arrays(base, w)
+    expert_blocks = np.stack([dist.pack_arrays(d, w)[0] for d in deltas])
+    nb = base_blocks.shape[0]
+    sel = dist.selection_mask(plan, metas, w, nb)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("all",))
+    step = dist.build_merge_step(mesh, op, plan.theta, kind="delta",
+                                 donate=False)
+    args = [base_blocks, expert_blocks, sel]
+    if op == "dare":
+        args.append(dist.dare_masks_packed(plan, metas, w, nb))
+    out = dist.unpack_arrays(np.asarray(step(*args)), metas)
+    for k in out:
+        np.testing.assert_allclose(out[k], streamed[k], rtol=1e-5, atol=1e-6)
+
+
+def test_merge_step_hlo_has_no_collectives(aligned_ws):
+    """Block-sharded merging is embarrassingly parallel: the compiled
+    sharded merge contains zero collectives (DESIGN.md §5)."""
+    mp, base, deltas = aligned_ws
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    step = dist.build_merge_step(mesh, "ties", {"trim_frac": 0.3},
+                                 kind="delta", donate=False)
+    w = 256
+    base_blocks, metas = dist.pack_arrays(base, w)
+    eb = np.stack([dist.pack_arrays(d, w)[0] for d in deltas])
+    sel = np.ones((3, base_blocks.shape[0]), bool)
+    txt = step.lower(base_blocks, eb, sel).compile().as_text()
+    for coll in ("all-reduce", "all-gather", "all-to-all",
+                 "collective-permute", "reduce-scatter"):
+        assert coll not in txt
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    arrays = {
+        "x": rng.normal(size=(7, 33)).astype(np.float32),
+        "y": rng.normal(size=(130,)).astype(np.float32),
+        "ints": np.arange(5, dtype=np.int32),  # excluded (non-float)
+    }
+    blocks, metas = dist.pack_arrays(arrays, 64)
+    assert blocks.shape[1] == 64
+    out = dist.unpack_arrays(blocks, metas)
+    np.testing.assert_array_equal(out["x"], arrays["x"])
+    np.testing.assert_array_equal(out["y"], arrays["y"])
+    assert "ints" not in out
+
+
+def test_shard_plan_by_host_budget_split(populated):
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    pr = mp.plan(base, ids, "ties", budget=0.5, reuse=False)
+    buckets = dist.shard_plan_by_host(pr.plan, n_hosts=4)
+    total = sum(b["bytes"] for b in buckets)
+    assert total == pr.plan.total_selected_blocks() * pr.plan.block_size
+    hi = max(b["bytes"] for b in buckets)
+    lo = min(b["bytes"] for b in buckets)
+    assert hi - lo <= pr.plan.block_size  # balanced within one block

@@ -1,0 +1,194 @@
+"""Execution engine: budget soundness, naive equivalence, lineage,
+batched-vs-stream equivalence, O(K) -> budgeted scaling."""
+import numpy as np
+import pytest
+
+from repro.core.api import MergePipe
+from repro.core.naive import naive_merge
+from repro.store.iostats import IOStats, measure
+
+from conftest import make_models
+
+
+def test_budget_soundness_runtime(populated, stats):
+    """Realized expert reads <= B, measured at the storage layer."""
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    budget_b = mp.resolve_budget(ids, 0.4)
+    with measure(stats) as io:
+        res = mp.merge(base, ids, "ties", budget=budget_b)
+    assert io["expert_read"] <= budget_b
+    assert res.stats["c_expert_run"] <= res.stats["c_expert_hat"] <= budget_b
+
+
+@pytest.mark.parametrize("op,theta", [
+    ("avg", {}),
+    ("ta", {"lam": 0.7}),
+    ("ties", {"trim_frac": 0.3}),
+    ("dare", {"density": 0.5, "seed": 3}),
+])
+def test_full_budget_large_block_equals_naive(tmp_path, op, theta):
+    """With budget=100% and block >= tensor size, blockwise == tensorwise:
+    MergePipe output is bit-identical to the naive pipeline for all ops."""
+    stats = IOStats()
+    mp = MergePipe(str(tmp_path), block_size=1 << 20, stats=stats)
+    base, experts = make_models()
+    mp.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        mp.register_model(f"e{i}", e)
+        ids.append(f"e{i}")
+    res = mp.merge("base", ids, op, theta=theta, budget=None)
+    ours = mp.load(res.sid)
+    nid = naive_merge(mp.snapshots.models, "base", ids, op, theta)
+    theirs = mp.load(nid)
+    for k in ours:
+        np.testing.assert_array_equal(ours[k], theirs[k])
+    mp.close()
+
+
+def test_avg_ta_equal_naive_any_blocksize(populated):
+    """Linear operators are block-decomposable: equality holds at any
+    block granularity."""
+    mp, base, ids, *_ = populated
+    for op, theta in [("avg", {}), ("ta", {"lam": 0.5})]:
+        res = mp.merge(base, ids, op, theta=theta, budget=None,
+                       reuse_plan=False)
+        ours = mp.load(res.sid)
+        nid = naive_merge(mp.snapshots.models, base, ids, op, theta)
+        theirs = mp.load(nid)
+        for k in ours:
+            np.testing.assert_allclose(ours[k], theirs[k], rtol=1e-6)
+
+
+def test_output_is_complete_checkpoint(populated):
+    """Even under a tiny budget the output has every tensor, full shape."""
+    mp, base, ids, base_arrs, _ = populated
+    res = mp.merge(base, ids, "ties", budget=0.05)
+    out = mp.load(res.sid)
+    assert set(out) == set(base_arrs)
+    for k in out:
+        assert out[k].shape == base_arrs[k].shape
+
+
+def test_unselected_blocks_pass_through_base(populated):
+    mp, base, ids, base_arrs, _ = populated
+    res = mp.merge(base, ids, "ties", budget=0.10)
+    out = mp.load(res.sid)
+    touch = mp.catalog.touch_map(res.sid)
+    for tensor, ranges in touch.items():
+        touched = set()
+        for s, e in ranges:
+            touched.update(range(s, e))
+        flat_out = out[tensor].reshape(-1)
+        flat_base = base_arrs[tensor].reshape(-1)
+        n_elem_per_block = mp.block_size // 4
+        n_blocks = -(-flat_out.size * 4 // mp.block_size)
+        for b in range(n_blocks):
+            if b in touched:
+                continue
+            lo, hi = b * n_elem_per_block, min((b + 1) * n_elem_per_block,
+                                               flat_out.size)
+            np.testing.assert_array_equal(flat_out[lo:hi], flat_base[lo:hi])
+
+
+def test_int_tensors_pass_through(workspace):
+    mp = workspace
+    base = {"w": np.ones((256,), np.float32), "ids": np.arange(64, dtype=np.int32)}
+    mp.register_model("base", base)
+    mp.register_model("e0", {"w": np.full((256,), 2.0, np.float32),
+                             "ids": np.arange(64, dtype=np.int32) + 5})
+    res = mp.merge("base", ["e0"], "ta", budget=None)
+    out = mp.load(res.sid)
+    np.testing.assert_array_equal(out["ids"], base["ids"])  # untouched
+    assert not np.allclose(out["w"], base["w"])             # merged
+
+
+def test_batched_compute_matches_stream(populated):
+    mp, base, ids, *_ = populated
+    for op, theta in [("ties", {"trim_frac": 0.3}),
+                      ("dare", {"density": 0.5, "seed": 1}),
+                      ("avg", {}), ("ta", {"lam": 0.9})]:
+        r1 = mp.merge(base, ids, op, theta=theta, budget=0.5,
+                      compute="stream", sid=f"s-{op}")
+        r2 = mp.merge(base, ids, op, theta=theta, budget=0.5,
+                      compute="batched", sid=f"b-{op}")
+        a, b = mp.load(r1.sid), mp.load(r2.sid)
+        for k in a:
+            np.testing.assert_allclose(a[k], b[k], rtol=2e-6, atol=2e-6)
+
+
+def test_coalesce_identical_output_and_bytes(populated, stats):
+    mp, base, ids, *_ = populated
+    with measure(stats) as io1:
+        r1 = mp.merge(base, ids, "ties", budget=0.4, coalesce=True,
+                      sid="co", reuse_plan=False)
+    with measure(stats) as io2:
+        r2 = mp.merge(base, ids, "ties", budget=0.4, coalesce=False,
+                      sid="noco", reuse_plan=True)
+    a, b = mp.load("co"), mp.load("noco")
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert io1["expert_read"] == io2["expert_read"]  # same bytes moved
+
+
+def test_expert_io_scaling(tmp_path):
+    """I1 (Fig 2/4): naive expert I/O grows O(K); MergePipe stays at B."""
+    stats = IOStats()
+    mp = MergePipe(str(tmp_path), block_size=4096, stats=stats)
+    base, experts = make_models(n_experts=8)
+    mp.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        mp.register_model(f"e{i}", e)
+        ids.append(f"e{i}")
+    mp.ensure_analyzed("base", ids)
+    budget = mp.resolve_budget(ids[:2], 1.0)  # = 2 experts' worth of bytes
+    naive_io, ours_io = [], []
+    for k in (2, 4, 8):
+        with measure(stats) as io:
+            naive_merge(mp.snapshots.models, "base", ids[:k], "ties",
+                        {"trim_frac": 0.3})
+        naive_io.append(io["expert_read"])
+        with measure(stats) as io:
+            mp.merge("base", ids[:k], "ties", theta={"trim_frac": 0.3},
+                     budget=budget, reuse_plan=False)
+        ours_io.append(io["expert_read"])
+    assert naive_io[2] == pytest.approx(4 * naive_io[0], rel=0.01)  # O(K)
+    assert max(ours_io) <= budget                                    # budgeted
+    mp.close()
+
+
+def test_dare_reexecution_bitwise_deterministic(populated):
+    mp, base, ids, *_ = populated
+    r1 = mp.merge(base, ids, "dare", theta={"density": 0.5, "seed": 9},
+                  budget=0.5, sid="d1")
+    r2 = mp.merge(base, ids, "dare", theta={"density": 0.5, "seed": 9},
+                  budget=0.5, sid="d2")
+    a, b = mp.load("d1"), mp.load("d2")
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_delta_and_adapter_experts(workspace):
+    """DeltaIterator kinds: full/delta/adapter give consistent TA merges."""
+    mp = workspace
+    rng = np.random.default_rng(0)
+    base = {"w": rng.normal(size=(64, 48)).astype(np.float32)}
+    delta = 0.05 * rng.normal(size=(64, 48)).astype(np.float32)
+    A = rng.normal(size=(4, 48)).astype(np.float32)
+    B = rng.normal(size=(64, 4)).astype(np.float32)
+    mp.register_model("base", base)
+    mp.register_model("full", {"w": base["w"] + delta})
+    mp.register_model("delta", {"w": delta}, kind="delta")
+    mp.register_model("adapter", {"w::lora_A": A, "w::lora_B": B},
+                      kind="adapter", scale=0.1)
+    r_full = mp.merge("base", ["full"], "ta", budget=None, sid="f")
+    r_delta = mp.merge("base", ["delta"], "ta", budget=None, sid="d")
+    np.testing.assert_allclose(
+        mp.load("f")["w"], mp.load("d")["w"], rtol=1e-5, atol=1e-6
+    )
+    r_ad = mp.merge("base", ["adapter"], "ta", budget=None, sid="a")
+    np.testing.assert_allclose(
+        mp.load("a")["w"], base["w"] + 0.1 * (B @ A), rtol=1e-4, atol=1e-5
+    )

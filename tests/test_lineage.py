@@ -1,0 +1,45 @@
+"""Lineage & explainability: explain(), chains, coverage semantics."""
+import numpy as np
+
+
+def test_explain_fields(populated):
+    mp, base, ids, *_ = populated
+    res = mp.merge(base, ids, "ties", theta={"trim_frac": 0.3}, budget=0.4)
+    ex = mp.explain(res.sid)
+    assert ex["base_id"] == base
+    assert ex["expert_ids"] == ids
+    assert ex["op"] == "ties"
+    assert ex["budget_respected"]
+    assert ex["touched_blocks"] > 0
+    assert set(ex["per_expert_touched_blocks"]) <= set(ids)
+    assert ex["plan_id"].startswith("plan-")
+    # planner may apply a bounded θ adjustment under budget pressure
+    # (§4.4); the realized value is recorded and within ±20% of request
+    assert 0.8 * 0.3 <= ex["theta"]["trim_frac"] <= 0.3
+    if ex["theta"]["trim_frac"] != 0.3:
+        assert ex["decisions"], "θ adjustment must be recorded"
+
+
+def test_lineage_chain_through_iterative_merges(populated):
+    """Merged snapshot used as the next merge's base -> walkable chain."""
+    mp, base, ids, *_ = populated
+    r1 = mp.merge(base, ids[:2], "ta", budget=0.6, sid="gen1")
+    mp.analyze("gen1")  # snapshots are models: analyzable, mergeable
+    r2 = mp.merge("gen1", ids[2:], "ta", budget=0.6, sid="gen2")
+    chain = mp.lineage("gen2")
+    assert [m["sid"] for m in chain] == ["gen2", "gen1"]
+    assert chain[0]["base_id"] == "gen1"
+
+
+def test_coverage_matches_touch(populated):
+    mp, base, ids, *_ = populated
+    res = mp.merge(base, ids, "dare", theta={"density": 0.5}, budget=0.3)
+    cov = mp.catalog.coverage(res.sid)
+    touch = mp.catalog.touch_map(res.sid)
+    touched = {(t, b) for t, ranges in touch.items()
+               for s, e in ranges for b in range(s, e)}
+    covered = {(t, b) for t, b, _ in cov}
+    assert covered == touched
+    # every coverage entry names real experts
+    for _, _, eset in cov:
+        assert set(eset.split(",")) <= set(ids)

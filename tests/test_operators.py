@@ -1,0 +1,103 @@
+"""Merge operators: semantics + hypothesis properties."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra.numpy import arrays
+
+from repro.core import operators as ops
+
+
+def test_avg_is_mean_of_models():
+    x0 = np.zeros(8, np.float32)
+    D = np.stack([np.full(8, 3.0), np.full(8, 6.0)]).astype(np.float32)
+    out = ops.apply_operator(x0, D, "avg", {})
+    np.testing.assert_allclose(out, np.full(8, 3.0))  # mean(0,3,6)=3
+
+
+def test_ta_scales_sum():
+    x0 = np.ones(4, np.float32)
+    D = np.stack([np.full(4, 1.0), np.full(4, 2.0)]).astype(np.float32)
+    out = ops.apply_operator(x0, D, "ta", {"lam": 0.5})
+    np.testing.assert_allclose(out, 1 + 0.5 * 3.0)
+
+
+def test_ties_sign_election():
+    """Conflicting signs: minority sign is excluded from the mean."""
+    x0 = np.zeros(4, np.float32)
+    D = np.stack([
+        np.array([+1.0, +1.0, +2.0, -1.0]),
+        np.array([+2.0, -0.1, +4.0, -2.0]),
+        np.array([-0.1, +1.5, +6.0, +0.1]),
+    ]).astype(np.float32)
+    out = ops.apply_operator(x0, D, "ties", {"trim_frac": 1.0, "lam": 1.0})
+    # col 0: majority +, mean(1,2)=1.5 ; col 2: all +, mean=4
+    assert out[0] == pytest.approx(1.5)
+    assert out[2] == pytest.approx(4.0)
+    assert out[3] == pytest.approx(-1.5)  # majority -, mean(-1,-2)
+
+
+def test_ties_trim_keeps_top_fraction():
+    x0 = np.zeros(10, np.float32)
+    d = np.array([[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]],
+                 np.float32)
+    out = ops.apply_operator(x0, d, "ties", {"trim_frac": 0.2, "lam": 1.0})
+    assert np.count_nonzero(out) == 2  # keeps only the top-2 magnitudes
+    assert out[-1] == pytest.approx(1.0)
+
+
+def test_dare_mask_prefix_property():
+    """Philox masks: first n entries identical regardless of width."""
+    m1 = ops.dare_mask(7, 2, "t", 5, 100, 0.5)
+    m2 = ops.dare_mask(7, 2, "t", 5, 200, 0.5)
+    np.testing.assert_array_equal(m1, m2[:100])
+    # distinct (expert, tensor, block) -> distinct streams
+    assert not np.array_equal(m1, ops.dare_mask(7, 3, "t", 5, 100, 0.5))
+    assert not np.array_equal(m1, ops.dare_mask(7, 2, "t", 6, 100, 0.5))
+
+
+def test_dare_unbiased_expectation():
+    """E[mask*d/p] = d: with many elements the mean survives."""
+    rng = np.random.default_rng(0)
+    n = 200_000
+    d = np.ones((1, n), np.float32)
+    mask = ops.dare_mask(1, 0, "t", 0, n, 0.3)[None]
+    out = ops.apply_operator(
+        np.zeros(n, np.float32), d, "dare",
+        {"density": 0.3, "lam": 1.0, "_masks": mask},
+    )
+    assert out.mean() == pytest.approx(1.0, rel=0.02)
+
+
+@given(
+    x0=arrays(np.float32, 32, elements=st.floats(-10, 10, width=32)),
+    k=st.integers(1, 4),
+)
+@settings(max_examples=50, deadline=None)
+def test_property_zero_deltas_identity(x0, k):
+    """∀ ops: zero deltas -> output == base (operator neutrality)."""
+    D = np.zeros((k, 32), np.float32)
+    for op, theta in [("avg", {}), ("ta", {}),
+                      ("ties", {"trim_frac": 0.5})]:
+        out = ops.apply_operator(x0, D, op, theta)
+        np.testing.assert_allclose(out, x0, atol=1e-6)
+
+
+@given(
+    data=st.data(),
+    k=st.integers(1, 4),
+    n=st.integers(4, 64),
+)
+@settings(max_examples=50, deadline=None)
+def test_property_ta_linear_in_lam(data, k, n):
+    D = data.draw(arrays(np.float32, (k, n),
+                         elements=st.floats(-5, 5, width=32)))
+    x0 = np.zeros(n, np.float32)
+    o1 = ops.apply_operator(x0, D, "ta", {"lam": 1.0})
+    o2 = ops.apply_operator(x0, D, "ta", {"lam": 2.0})
+    np.testing.assert_allclose(o2, 2 * o1, rtol=1e-5, atol=1e-5)
+
+
+def test_unknown_operator_rejected():
+    with pytest.raises(KeyError):
+        ops.get_operator("slerp")

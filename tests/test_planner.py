@@ -1,0 +1,121 @@
+"""Planner: budget feasibility, monotonicity, fallback, determinism."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import cost as cost_model
+from repro.core.planner import plan_merge
+
+
+def _naive(mp, ids):
+    return cost_model.naive_expert_cost(mp.catalog, ids)
+
+
+def test_unbounded_plan_selects_everything(populated):
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    pr = mp.plan(base, ids, "ta", budget=None)
+    assert pr.plan.c_expert_hat == _naive(mp, ids)
+
+
+def test_budget_feasible_by_construction(populated):
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    naive = _naive(mp, ids)
+    for frac in (0.1, 0.33, 0.5, 0.9):
+        pr = mp.plan(base, ids, "ties", budget=frac, reuse=False)
+        assert pr.plan.c_expert_hat <= int(frac * naive)
+
+
+def test_budget_monotonic(populated):
+    """Fig 6 property: admitted cost grows monotonically with budget."""
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    costs = [
+        mp.plan(base, ids, "ties", budget=f, reuse=False).plan.c_expert_hat
+        for f in (0.1, 0.25, 0.5, 0.75, 1.0)
+    ]
+    assert costs == sorted(costs)
+
+
+def test_plan_reuse(populated):
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    p1 = mp.plan(base, ids, "ties", budget=0.5)
+    p2 = mp.plan(base, ids, "ties", budget=0.5)
+    assert p2.stats["reused"]
+    assert p2.plan.plan_id == p1.plan.plan_id
+    assert p2.plan.digest() == p1.plan.digest()
+
+
+def test_determinism(populated):
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    a = mp.plan(base, ids, "dare", budget=0.4, reuse=False).plan
+    b = mp.plan(base, ids, "dare", budget=0.4, reuse=False).plan
+    assert a.selection == b.selection
+    assert a.digest() == b.digest()
+
+
+def test_salience_ordering(workspace):
+    """High-delta expert blocks are admitted before low-delta ones."""
+    mp = workspace
+    rng = np.random.default_rng(0)
+    base = {"t": rng.normal(size=(4096,)).astype(np.float32)}
+    hot = {"t": base["t"] + 1.0}                      # large delta
+    cold = {"t": base["t"] + 1e-4}                    # tiny delta
+    mp.register_model("base", base)
+    mp.register_model("hot", hot)
+    mp.register_model("cold", cold)
+    mp.ensure_analyzed("base", ["hot", "cold"])
+    # budget for exactly half the candidate bytes
+    naive = _naive(mp, ["hot", "cold"])
+    pr = mp.plan("base", ["hot", "cold"], "ta", budget=naive // 2, reuse=False)
+    hot_blocks = sum(len(v) for v in pr.plan.selection["hot"].values())
+    cold_blocks = sum(len(v) for v in pr.plan.selection["cold"].values())
+    assert hot_blocks > cold_blocks
+
+
+def test_tensor_fallback_for_unanalyzed_expert(populated):
+    """§4.5: missing BlockMeta -> whole-tensor selection + recorded event."""
+    mp, base, ids, _base_arrs, experts = populated
+    mp.ensure_analyzed(base, ids[:2])  # analyze only 2 of 3
+    # register tensor metadata for the third without block analysis
+    import json
+
+    from repro.store.tensorstore import load_model_arrays
+
+    arrs = load_model_arrays(mp.snapshots.models, ids[2], category="meta")
+    mp.catalog.upsert_tensor_meta(
+        ids[2],
+        [(k, json.dumps(list(v.shape)), str(v.dtype), v.nbytes)
+         for k, v in arrs.items()],
+    )
+    pr = mp.plan(base, ids, "ta", budget=None, reuse=False)
+    assert pr.plan.granularity in ("mixed", "tensor")
+    assert any(e["expert"] == ids[2] for e in pr.plan.fallback_events)
+
+
+def test_theta_adjustment_recorded(populated):
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    pr = mp.plan(base, ids, "dare", theta={"density": 0.5}, budget=0.3,
+                 reuse=False)
+    if pr.plan.decisions:  # adjustment is bounded and recorded
+        d = pr.plan.decisions[0]
+        assert d["theta_adjust"] == "density"
+        assert 0.8 * 0.5 <= d["to"] <= 0.5
+
+
+@given(frac=st.floats(min_value=0.01, max_value=1.0))
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+def test_property_budget_soundness_planner(populated, frac):
+    """∀ budgets: Ĉ_expert(π) <= B (Definition 4.2)."""
+    mp, base, ids, *_ = populated
+    mp.ensure_analyzed(base, ids)
+    naive = _naive(mp, ids)
+    budget = max(1, int(frac * naive))
+    pr = mp.plan(base, ids, "ties", budget=budget, reuse=False)
+    assert pr.plan.c_expert_hat <= budget

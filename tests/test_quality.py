@@ -1,0 +1,61 @@
+"""Correctness & quality preservation (paper §6.8, Table 7 analog):
+parameter deviation vs. the full-read output shrinks as budget grows."""
+import numpy as np
+
+from repro.core.api import MergePipe
+
+from conftest import make_models
+
+
+def _rel_l2(a, b):
+    num = den = 0.0
+    for k in a:
+        num += float(np.sum((a[k] - b[k]) ** 2))
+        den += float(np.sum(b[k] ** 2))
+    return (num ** 0.5) / (den ** 0.5)
+
+
+def test_deviation_decreases_with_budget(tmp_path):
+    mp = MergePipe(str(tmp_path), block_size=2048)
+    base, experts = make_models(n_experts=5, scale=0.05)
+    mp.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        mp.register_model(f"e{i}", e)
+        ids.append(f"e{i}")
+    full = mp.load(
+        mp.merge("base", ids, "ties", theta={"trim_frac": 0.3},
+                 budget=None, sid="full").sid
+    )
+    errs = []
+    for frac in (0.3, 0.6, 0.9):
+        out = mp.load(
+            mp.merge("base", ids, "ties", theta={"trim_frac": 0.3},
+                     budget=frac, sid=f"b{frac}", reuse_plan=False).sid
+        )
+        errs.append(_rel_l2(out, full))
+    # monotone non-increasing deviation; small at high budget
+    assert errs[0] >= errs[1] >= errs[2]
+    assert errs[2] < 0.05
+    # touched ratio increases with budget
+    ratios = []
+    for frac in (0.3, 0.6, 0.9):
+        ex = mp.explain(f"b{frac}")
+        ratios.append(ex["touched_blocks"])
+    assert ratios == sorted(ratios)
+    mp.close()
+
+
+def test_budgeted_output_stays_close_to_full(tmp_path):
+    """Rel l2 error at 50% budget stays ~1e-2 for realistic delta scales
+    (paper reports 1e-3..1e-2 range at B=0.5)."""
+    mp = MergePipe(str(tmp_path), block_size=2048)
+    base, experts = make_models(n_experts=4, scale=0.01)
+    mp.register_model("base", base)
+    ids = [mp.register_model(f"e{i}", e) for i, e in enumerate(experts)]
+    full = mp.load(mp.merge("base", ids, "ta", theta={"lam": 0.3},
+                            budget=None, sid="f").sid)
+    half = mp.load(mp.merge("base", ids, "ta", theta={"lam": 0.3},
+                            budget=0.5, sid="h", reuse_plan=False).sid)
+    assert _rel_l2(half, full) < 0.02
+    mp.close()

@@ -1,0 +1,117 @@
+"""Storage layer: tensor files, partial reads, I/O accounting, snapshots."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.store.iostats import IOStats, measure
+from repro.store.snapshot import SnapshotStore
+from repro.store.tensorstore import CheckpointStore
+
+
+def test_roundtrip_and_partial_reads(tmp_path):
+    stats = IOStats()
+    store = CheckpointStore(str(tmp_path), stats)
+    rng = np.random.default_rng(0)
+    arrs = {
+        "a": rng.normal(size=(32, 48)).astype(np.float32),
+        "b": rng.integers(0, 100, size=(7,)).astype(np.int32),
+    }
+    store.write_model("m", arrs)
+    with store.open_model("m") as r:
+        np.testing.assert_array_equal(r.read_tensor("a", "base"), arrs["a"])
+        np.testing.assert_array_equal(r.read_tensor("b", "base"), arrs["b"])
+        # partial block read moves only the block's bytes
+        before = stats.c_expert
+        blkv = r.read_block("a", 1, 1024, "expert")
+        assert stats.c_expert - before == 1024
+        np.testing.assert_array_equal(
+            blkv, arrs["a"].reshape(-1)[256:512]
+        )
+
+
+def test_bfloat16_roundtrip(tmp_path):
+    import ml_dtypes
+
+    store = CheckpointStore(str(tmp_path))
+    x = np.arange(100, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    store.write_model("m", {"x": x})
+    with store.open_model("m") as r:
+        got = r.read_tensor("x", "base")
+        assert got.dtype == np.dtype(ml_dtypes.bfloat16)
+        np.testing.assert_array_equal(got, x)
+
+
+def test_coalesced_reads_match_individual(tmp_path):
+    stats = IOStats()
+    store = CheckpointStore(str(tmp_path), stats)
+    x = np.random.default_rng(1).normal(size=(4096,)).astype(np.float32)
+    store.write_model("m", {"x": x})
+    with store.open_model("m") as r:
+        sel = [0, 1, 2, 5, 9, 10]
+        out = r.read_blocks_coalesced("x", sel, 1024, "expert")
+        for b in sel:
+            np.testing.assert_array_equal(
+                out[b], r.read_block("x", b, 1024, "expert")
+            )
+        # adjacent blocks 0,1,2 and 9,10 became single reads
+        assert stats.read["expert"].calls == 3 + len(sel)
+
+
+def test_iostats_categories_and_measure():
+    stats = IOStats()
+    with measure(stats) as d:
+        stats.record_read("base", 100)
+        stats.record_read("expert", 50)
+        stats.record_write("out", 25)
+    assert d["base_read"] == 100
+    assert d["expert_read"] == 50
+    assert d["out_written"] == 25
+    assert stats.c_total == 175
+
+
+def test_staging_atomic_publish(tmp_path):
+    snaps = SnapshotStore(str(tmp_path))
+    w = snaps.open_staging_writer()
+    x = np.arange(64, dtype=np.float32)
+    w.begin_tensor("t", x.shape, x.dtype)
+    w.write_block("t", 0, x)
+    w.finish_tensor("t")
+    w.validate_hashes()
+    assert snaps.list_snapshots() == []  # invisible pre-publish
+    sid = snaps.atomic_publish(w, {
+        "sid": "s1", "plan_id": "p", "base_id": "b", "expert_ids": [],
+        "op": "ta", "budget_b": -1, "c_expert_run": 0,
+    })
+    assert sid == "s1"
+    assert snaps.is_published("s1")
+    with snaps.models.open_model("s1") as r:
+        np.testing.assert_array_equal(r.read_tensor("t", "base"), x)
+    # immutability: double publish refused
+    w2 = snaps.open_staging_writer()
+    w2.begin_tensor("t", x.shape, x.dtype)
+    w2.write_block("t", 0, x)
+    w2.finish_tensor("t")
+    with pytest.raises(ValueError):
+        snaps.atomic_publish(w2, {"sid": "s1", "plan_id": "p"})
+    w2.abort()
+
+
+def test_abort_leaves_nothing(tmp_path):
+    snaps = SnapshotStore(str(tmp_path))
+    w = snaps.open_staging_writer()
+    w.begin_tensor("t", (4,), np.float32)
+    w.write_block("t", 0, np.zeros(4, np.float32))
+    w.finish_tensor("t")
+    w.abort()
+    assert snaps.list_snapshots() == []
+    assert os.listdir(snaps.staging_root) == []
+
+
+def test_out_of_order_block_write_rejected(tmp_path):
+    snaps = SnapshotStore(str(tmp_path))
+    w = snaps.open_staging_writer()
+    w.begin_tensor("t", (1024,), np.float32)
+    with pytest.raises(RuntimeError):
+        w.write_block("t", 1, np.zeros(256, np.float32))
+    w.abort()
