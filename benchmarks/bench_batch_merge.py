@@ -1,0 +1,92 @@
+"""Batched multi-merge vs. sequential one-shot merging (API v2).
+
+Measures the paper's "expert reads are the optimization target" insight
+lifted from one merge to a workload: a J-job budget sweep over the same
+K experts executed (a) sequentially through the legacy one-shot path —
+every job re-reads its selected expert blocks — and (b) as one Session
+batch with the cross-job shared read schedule, where each selected
+expert block is physically read once and fans out to every job.
+
+Reports the expert bytes read by both modes and the reduction factor.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+
+from repro.api import MergeSpec, Session
+from repro.store.iostats import measure
+
+from benchmarks.harness import Csv, build_zoo, cleanup, fresh_dir
+
+
+def _sweep_budgets(n_jobs: int):
+    # spread budgets over (0, 1]: heavier jobs overlap lighter ones
+    return [round((j + 1) / n_jobs, 3) for j in range(n_jobs)]
+
+
+def run(ks=(8,), job_counts=(3, 5, 8), op="ties") -> None:
+    csv = Csv("batch_merge", [
+        "K", "jobs", "seq_expert_mb", "batch_expert_mb", "reduction_x",
+        "seq_wall_s", "batch_wall_s", "cache_hits",
+    ])
+    for k in ks:
+        for j in job_counts:
+            budgets = _sweep_budgets(j)
+            # -- (a) sequential legacy one-shot merges --------------------
+            ws = fresh_dir("batch-seq")
+            try:
+                mp, base, ids = build_zoo(ws, k)
+                mp.ensure_analyzed(base, ids)
+                with measure(mp.stats) as seq_io:
+                    t0 = time.time()
+                    with warnings.catch_warnings():
+                        warnings.simplefilter("ignore", DeprecationWarning)
+                        for i, frac in enumerate(budgets):
+                            mp.merge(base, ids, op,
+                                     theta={"trim_frac": 0.3},
+                                     budget=frac, sid=f"job{i}",
+                                     reuse_plan=False)
+                    seq_wall = time.time() - t0
+                mp.close()
+            finally:
+                cleanup(ws)
+
+            # -- (b) one batch with shared expert reads -------------------
+            ws = fresh_dir("batch-shared")
+            try:
+                mp, base, ids = build_zoo(ws, k)
+                sess = Session(ws, block_size=mp.block_size, stats=mp.stats)
+                sess.ensure_analyzed(base, ids)
+                for i, frac in enumerate(budgets):
+                    sess.submit(
+                        MergeSpec.build(base, ids, op=op,
+                                        theta={"trim_frac": 0.3},
+                                        budget=f"{frac * 100:g}%",
+                                        reuse_plan=False),
+                        sid=f"job{i}",
+                    )
+                with measure(sess.stats) as batch_io:
+                    t0 = time.time()
+                    results = sess.run_all(shared_reads=True)
+                    batch_wall = time.time() - t0
+                batch = results[0].stats["batch"]
+                # shared schedule must beat per-job reads
+                assert batch_io["expert_read"] <= seq_io["expert_read"]
+                sess.close()
+                mp.close()
+            finally:
+                cleanup(ws)
+
+            csv.row(
+                k, j,
+                seq_io["expert_read"] / 1e6,
+                batch_io["expert_read"] / 1e6,
+                seq_io["expert_read"] / max(batch_io["expert_read"], 1),
+                seq_wall, batch_wall,
+                batch["cache"]["hits"],
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ import argparse
 import time
 
 from benchmarks import (
+    bench_batch_merge,
     bench_blocksize,
     bench_conflict_ablation,
     bench_budget,
@@ -50,6 +51,9 @@ ALL = {
     "conflict_ablation": lambda fast: bench_conflict_ablation.run(
         k=4 if fast else 6),
     "roofline": lambda fast: bench_roofline.run(),
+    "batch_merge": lambda fast: bench_batch_merge.run(
+        ks=(4,) if fast else (8,),
+        job_counts=(3,) if fast else (3, 5, 8)),
 }
 
 

@@ -1,5 +1,11 @@
-"""Budget sweep: the paper's Fig 6 interactively — how the expert-read
-budget trades I/O for output fidelity, on one workspace.
+"""Budget sweep (API v2): the paper's Fig 6 interactively — how the
+expert-read budget trades I/O for output fidelity — run as ONE batch.
+
+The whole sweep is submitted to a Session and planned together: every
+expert block is physically read once and fans out to every sweep point
+that selected it, so the J-point sweep pays roughly the bytes of its
+*largest* budget instead of the sum of all budgets (O(K) instead of
+O(K·J) expert reads).
 
     PYTHONPATH=src python examples/budget_sweep.py
 """
@@ -8,7 +14,7 @@ import time
 
 import numpy as np
 
-from repro.core import MergePipe
+from repro.api import MergeSpec, Session
 from repro.store.iostats import IOStats, measure
 
 
@@ -19,35 +25,54 @@ def main() -> None:
             for k, s in shapes.items()}
     stats = IOStats()
     with tempfile.TemporaryDirectory() as ws:
-        mp = MergePipe(ws, block_size=32 * 1024, stats=stats)
-        mp.register_model("base", base)
+        sess = Session(ws, block_size=32 * 1024, stats=stats)
+        sess.register_model("base", base)
         ids = []
         for i in range(10):
             ex = {k: v + 0.05 * rng.normal(size=v.shape).astype(np.float32)
                   for k, v in base.items()}
-            ids.append(mp.register_model(f"e{i}", ex))
-        full = mp.load(mp.merge("base", ids, "ties",
-                                theta={"trim_frac": 0.3},
-                                budget=None, sid="full").sid)
+            ids.append(sess.register_model(f"e{i}", ex))
 
-        print(f"{'budget':>8s} {'expert MB':>10s} {'wall s':>8s} "
-              f"{'rel-l2 vs full':>14s} {'blocks':>7s}")
-        for frac in (0.1, 0.25, 0.5, 0.75, 1.0):
-            with measure(stats) as io:
-                t0 = time.time()
-                res = mp.merge("base", ids, "ties",
-                               theta={"trim_frac": 0.3},
-                               budget=frac, sid=f"b{frac}",
-                               reuse_plan=False)
-                wall = time.time() - t0
-            out = mp.load(res.sid)
+        full = sess.load(
+            sess.run(
+                MergeSpec.build("base", ids, op="ties",
+                                theta={"trim_frac": 0.3}, name="full")
+            ).sid
+        )
+
+        # submit the whole sweep, execute as one shared-read batch
+        fracs = (0.1, 0.25, 0.5, 0.75, 1.0)
+        handles = [
+            sess.submit(
+                MergeSpec.build("base", ids, op="ties",
+                                theta={"trim_frac": 0.3},
+                                budget=f"{int(frac * 100)}%",
+                                reuse_plan=False),
+                sid=f"b{frac}",
+            )
+            for frac in fracs
+        ]
+        with measure(stats) as io:
+            t0 = time.time()
+            results = sess.run_all(shared_reads=True)
+            wall = time.time() - t0
+
+        batch = results[0].stats["batch"]
+        print(f"{'budget':>8s} {'planned MB':>10s} {'rel-l2 vs full':>14s} "
+              f"{'blocks':>7s}")
+        for frac, h in zip(fracs, handles):
+            out = sess.load(h.sid)
             num = sum(float(np.sum((out[k] - full[k]) ** 2)) for k in out)
             den = sum(float(np.sum(full[k] ** 2)) for k in out)
-            ex = mp.explain(res.sid)
-            print(f"{frac:>8.0%} {io['expert_read']/1e6:>10.2f} "
-                  f"{wall:>8.2f} {(num/den)**0.5:>14.2e} "
-                  f"{ex['touched_blocks']:>7d}")
-        mp.close()
+            ex = sess.explain(h.sid)
+            print(f"{frac:>8.0%} {h.result.stats['c_expert_hat']/1e6:>10.2f} "
+                  f"{(num/den)**0.5:>14.2e} {ex['touched_blocks']:>7d}")
+        print(f"\nbatch wall       : {wall:.2f}s")
+        print(f"expert MB read   : {io['expert_read']/1e6:.2f} "
+              f"(sequential would read {batch['c_expert_hat_sum']/1e6:.2f})")
+        print(f"sharing factor   : {batch['sharing_factor']:.2f}x "
+              f"({batch['cache']['hits']} cached block reads)")
+        sess.close()
 
 
 if __name__ == "__main__":

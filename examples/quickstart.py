@@ -1,5 +1,6 @@
-"""MergePipe quickstart: register models, plan under a budget, merge,
-audit the lineage — the paper's Fig 3 workflow in 40 lines.
+"""MergePipe quickstart (API v2): register models, declare a MergeSpec
+with a typed budget, run it, audit the lineage — the paper's Fig 3
+workflow in 40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +9,7 @@ import tempfile
 
 import numpy as np
 
-from repro.core import MergePipe
+from repro.api import MergeSpec, Session
 from repro.store.iostats import IOStats, measure
 
 
@@ -27,31 +28,43 @@ def main() -> None:
 
     stats = IOStats()
     with tempfile.TemporaryDirectory() as ws:
-        mp = MergePipe(ws, block_size=64 * 1024, stats=stats)
-        mp.register_model("base", base)
-        ids = [mp.register_model(f"expert-{i}", e)
+        sess = Session(ws, block_size=64 * 1024, stats=stats)
+        sess.register_model("base", base)
+        ids = [sess.register_model(f"expert-{i}", e)
                for i, e in enumerate(experts)]
 
-        # ANALYZE once (cached in the catalog), then merge under a budget
-        # of 40% of the naive full-read expert bytes.
+        # Declare the merge: typed budget ("40%" of the naive full-read
+        # expert bytes — no int/float ambiguity), schema-checked theta.
+        spec = MergeSpec.build(
+            "base", ids, op="ties",
+            theta={"trim_frac": 0.3, "lam": 1.0},
+            budget="40%",
+        )
         with measure(stats) as io:
-            result = mp.merge(
-                "base", ids, op="ties",
-                theta={"trim_frac": 0.3, "lam": 1.0},
-                budget=0.4,
-            )
+            result = sess.run(spec)
+        naive = sum(sum(a.nbytes for a in e.values()) for e in experts)
         print(f"committed snapshot: {result.sid}")
         print(f"expert bytes read : {io['expert_read']:,} "
-              f"(naive would read {sum(e['embed'].nbytes * 0 + sum(a.nbytes for a in e.values()) for e in experts):,})")
+              f"(naive would read {naive:,})")
         print(f"base/out bytes    : {io['base_read']:,} / {io['out_written']:,}")
 
-        # the audit record: what was merged, which blocks, which experts
-        print(json.dumps(mp.explain(result.sid), indent=2, default=str)[:1200])
+        # the audit record: what was merged, which blocks, which experts,
+        # which declarative spec produced it
+        print(json.dumps(sess.explain(result.sid), indent=2, default=str)[:1200])
 
-        merged = mp.load(result.sid)
+        # merge graphs are specs too: TIES over a DARE sub-merge
+        sub = MergeSpec.build("base", ids[:2], op="dare",
+                              theta={"density": 0.5, "seed": 1}, name="sub")
+        graph = MergeSpec.build("base", [sub, ids[2]], op="ties",
+                                theta={"trim_frac": 0.3}, name="graph")
+        sess.run(graph)
+        print("merge graph lineage:",
+              json.dumps(sess.merge_graph("graph"), indent=2))
+
+        merged = sess.load(result.sid)
         print("merged tensors:", {k: v.shape for k, v in merged.items()})
-        assert mp.verify(result.sid)
-        mp.close()
+        assert sess.verify(result.sid)
+        sess.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""repro.api — the declarative MergePipe API (v2).
+
+Public surface:
+
+    BudgetSpec    typed expert-read budgets ("30%", "2GiB", bytes, ...)
+    OperatorSpec  schema-validated operator + θ
+    MergeSpec     composable merge-graph node (inputs may be MergeSpecs)
+    Session       batch submit()/run_all() with cross-job shared reads
+    JobHandle     a submitted job and (after run_all) its result
+    load_spec_file  parse a YAML/JSON spec document into MergeSpecs
+
+The legacy one-shot facade (:class:`repro.core.api.MergePipe`) delegates
+here and remains supported; new code should target this layer.
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+from repro.api.budget import BudgetSpec
+from repro.api.session import JobHandle, Session
+from repro.api.spec import MergeSpec, OperatorSpec
+
+__all__ = [
+    "BudgetSpec",
+    "OperatorSpec",
+    "MergeSpec",
+    "Session",
+    "JobHandle",
+    "load_spec_file",
+]
+
+
+def load_spec_file(path: str) -> List[MergeSpec]:
+    """Load one or many MergeSpecs from a YAML or JSON document.
+
+    Accepted shapes: a single spec mapping, a list of spec mappings, or
+    ``{"jobs": [...]}``.  YAML needs PyYAML; JSON always works.
+    """
+    with open(path, "r", encoding="utf-8") as f:
+        raw = f.read()
+    if path.endswith((".yaml", ".yml")):
+        try:
+            import yaml
+        except ImportError as e:  # pragma: no cover
+            raise RuntimeError(
+                f"PyYAML is required to load {path}; install pyyaml or use JSON"
+            ) from e
+        doc = yaml.safe_load(raw)
+    else:
+        doc = json.loads(raw)
+    if isinstance(doc, dict) and "jobs" in doc:
+        doc = doc["jobs"]
+    if isinstance(doc, dict):
+        doc = [doc]
+    if not isinstance(doc, list):
+        raise ValueError(f"spec document {path} must be a mapping or list")
+    return [MergeSpec.from_dict(d) for d in doc]

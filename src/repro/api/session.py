@@ -1,0 +1,469 @@
+"""Session — batched multi-merge planning and execution (API v2).
+
+A :class:`Session` owns one workspace (snapshot store + catalog +
+transaction manager) and accepts declarative :class:`~repro.api.spec.MergeSpec`
+jobs:
+
+    sess = Session(workspace)
+    sess.submit(spec_a)
+    sess.submit(spec_b)
+    results = sess.run_all()
+
+``run_all`` plans the whole job set together (:func:`repro.core.planner.plan_batch`)
+and executes it with a **cross-job read schedule**: every expert model is
+opened once behind a :class:`~repro.store.blockcache.CachingModelReader`,
+so one physical scan of each selected expert block feeds every job that
+selected it.  A J-job sweep over the same K experts thus pays ``O(K)``
+expert reads instead of the legacy one-shot path's ``O(K·J)``.
+
+Merge *graphs* (specs whose inputs are themselves specs) execute as a
+DAG in depth order; intermediate snapshots are analyzed and fed forward,
+and every node records its spec and parent edges in the catalog so
+``explain()``/``merge_graph()`` can reconstruct the full lineage.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api.budget import BudgetLike, BudgetSpec
+from repro.api.spec import MergeSpec
+from repro.core import blocks as blk
+from repro.core import cost as cost_model
+from repro.core.catalog import Catalog
+from repro.core.executor import MergeResult, execute_merge
+from repro.core.lineage import explain as _explain
+from repro.core.lineage import lineage_chain, merge_graph, verify_snapshot
+from repro.core.planner import BatchJob, plan_batch
+from repro.core.sketch import analyze_model
+from repro.core.transactions import TransactionManager
+from repro.store.blockcache import CacheBudget, CachingModelReader
+from repro.store.iostats import GLOBAL_STATS, IOStats
+from repro.store.snapshot import SnapshotStore
+from repro.store.tensorstore import load_model_arrays
+
+
+class JobHandle:
+    """A submitted merge job: spec + (after run_all) its committed result."""
+
+    def __init__(self, spec: MergeSpec, sid: Optional[str] = None):
+        self.spec = spec
+        self.requested_sid = sid
+        self.sid: Optional[str] = None
+        self.result: Optional[MergeResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def __repr__(self) -> str:  # pragma: no cover
+        state = self.sid if self.done else "pending"
+        return f"JobHandle({self.spec.spec_id}, {state})"
+
+
+class _Node:
+    """One DAG node scheduled for execution (deduped by spec_id)."""
+
+    def __init__(self, spec: MergeSpec, sid_hint: Optional[str]):
+        self.spec = spec
+        self.sid_hint = sid_hint
+        self.sid: Optional[str] = None
+        self.result: Optional[MergeResult] = None
+
+
+#: default bound on the shared-read block cache per run_all level; misses
+#: beyond the cap stream uncached (sharing degrades, memory stays bounded)
+DEFAULT_CACHE_MAX_BYTES = 1 << 30
+
+
+class Session:
+    """Workspace-scoped entry point for the declarative v2 API."""
+
+    def __init__(
+        self,
+        workspace: str,
+        block_size: int = blk.DEFAULT_BLOCK_SIZE,
+        stats: Optional[IOStats] = None,
+        recover: bool = True,
+    ):
+        self.workspace = workspace
+        self.block_size = block_size
+        self.stats = stats or GLOBAL_STATS
+        os.makedirs(workspace, exist_ok=True)
+        self.snapshots = SnapshotStore(workspace, self.stats)
+        self.catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), self.stats)
+        self.txn = TransactionManager(self.snapshots, self.catalog)
+        if recover:
+            self.txn.recover()
+        self._queue: List[JobHandle] = []
+
+    @classmethod
+    def _from_parts(
+        cls,
+        snapshots: SnapshotStore,
+        catalog: Catalog,
+        txn: TransactionManager,
+        block_size: int,
+        stats: IOStats,
+    ) -> "Session":
+        """Internal: wrap an existing substrate (legacy facade delegation)
+        without re-opening stores or re-running recovery."""
+        sess = cls.__new__(cls)
+        sess.workspace = snapshots.workspace
+        sess.block_size = block_size
+        sess.stats = stats
+        sess.snapshots = snapshots
+        sess.catalog = catalog
+        sess.txn = txn
+        sess._queue = []
+        return sess
+
+    # ------------------------------------------------------------ ingestion
+    def register_model(
+        self,
+        model_id: str,
+        arrays: Mapping[str, np.ndarray],
+        kind: str = "full",
+        scale: float = 1.0,
+        analyze: bool = False,
+        base_id: Optional[str] = None,
+    ) -> str:
+        meta: Dict[str, Any] = {"kind": kind}
+        if kind == "adapter":
+            meta["scale"] = scale
+        self.snapshots.models.write_model(model_id, arrays, meta=meta)
+        if analyze:
+            self.analyze(model_id, base_id=base_id)
+        return model_id
+
+    def analyze(
+        self, model_id: str, base_id: Optional[str] = None, force: bool = False
+    ) -> Dict:
+        return analyze_model(
+            self.catalog,
+            self.snapshots.models,
+            model_id,
+            self.block_size,
+            base_id=base_id,
+            force=force,
+        )
+
+    def ensure_analyzed(self, base_id: str, expert_ids: Sequence[str]) -> None:
+        self.analyze(base_id)
+        for e in expert_ids:
+            self.analyze(e, base_id=base_id)
+
+    # ---------------------------------------------------------------- batch
+    def submit(
+        self, spec: Union[MergeSpec, Dict], sid: Optional[str] = None
+    ) -> JobHandle:
+        """Queue a merge job (spec object or its dict form) for run_all."""
+        if isinstance(spec, dict):
+            spec = MergeSpec.from_dict(spec)
+        handle = JobHandle(spec, sid=sid)
+        self._queue.append(handle)
+        return handle
+
+    def run_all(
+        self,
+        shared_reads: bool = True,
+        shared_budget: BudgetLike = None,
+        compute: str = "stream",
+        coalesce: bool = True,
+        analyze: bool = True,
+        cache_max_bytes: Union[int, None, str] = "auto",
+    ) -> List[MergeResult]:
+        """Plan and execute every queued job, sharing expert block reads.
+
+        ``shared_budget`` optionally pools the *union* expert-read bytes
+        of each DAG level (see :func:`repro.core.planner.plan_batch`);
+        fractions resolve against the naive cost of the level's distinct
+        expert set.  ``cache_max_bytes`` bounds the per-level shared-read
+        cache (``"auto"`` = 1 GiB, ``None`` = unbounded); blocks beyond
+        the cap stream uncached, trading sharing for bounded memory.
+        Returns results in submission order.
+        """
+        if cache_max_bytes == "auto":
+            cache_max_bytes = DEFAULT_CACHE_MAX_BYTES
+        jobs = list(self._queue)
+        if not jobs:
+            return []
+
+        # -- 1. expand spec DAGs, dedupe shared subgraphs by content ------
+        nodes: Dict[str, _Node] = {}
+        alias_roots: List[_Node] = []
+        handle_nodes: Dict[int, _Node] = {}
+        for handle in jobs:
+            for spec in handle.spec.walk():
+                node = nodes.get(spec.spec_id)
+                if node is None:
+                    nodes[spec.spec_id] = node = _Node(spec, spec.name)
+            root = nodes[handle.spec.spec_id]
+            if handle.requested_sid:
+                if root.sid_hint and root.sid_hint != handle.requested_sid:
+                    # same content already claimed under another sid: the
+                    # user asked for a distinct snapshot — execute again
+                    # under its own name (children still dedupe).
+                    root = _Node(handle.spec, handle.requested_sid)
+                    alias_roots.append(root)
+                else:
+                    root.sid_hint = handle.requested_sid
+            handle_nodes[id(handle)] = root
+
+        # -- 2. validate target snapshot ids before any work --------------
+        # (the queue is only consumed after the batch completes, so a
+        # rejected or failed batch can be fixed and rerun without
+        # resubmitting)
+        all_nodes = [*nodes.values(), *alias_roots]
+        claimed: Dict[str, _Node] = {}
+        for node in all_nodes:
+            hint = node.sid_hint
+            if not hint:
+                continue
+            other = claimed.get(hint)
+            if other is not None and other is not node:
+                raise ValueError(
+                    f"two different merge jobs target snapshot id {hint!r} "
+                    f"(specs {other.spec.spec_id} and {node.spec.spec_id})"
+                )
+            claimed[hint] = node
+            if self.snapshots.is_published(hint):
+                # incremental composition: if the committed snapshot was
+                # produced by this exact spec, adopt it instead of
+                # re-executing (or failing) — graphs can be built up
+                # across run_all calls.
+                man = self.catalog.get_manifest(hint)
+                plan = (
+                    self.catalog.get_plan(man["plan_id"]) if man else None
+                )
+                committed_spec = (plan or {}).get("payload", {}).get("spec_id")
+                if committed_spec == node.spec.spec_id:
+                    node.sid = hint
+                    # stats keep the executor's standard shape so legacy
+                    # callers reading seconds/plan/etc. keep working
+                    node.result = MergeResult(
+                        hint, man,
+                        {"seconds": 0.0, "c_expert_run": 0,
+                         "c_expert_hat": (plan or {}).get("c_expert_hat", 0),
+                         "realized_expert_blocks": 0,
+                         "compute": compute, "coalesce": coalesce,
+                         "reused_snapshot": True,
+                         "plan": {"reused": True, "plan_seconds": 0.0}},
+                    )
+                    continue
+                raise ValueError(
+                    f"snapshot {hint!r} already published in this workspace "
+                    f"by a different spec; pick a fresh sid/name"
+                )
+
+        # -- 3. execute level by level (children before parents) ----------
+        by_level: Dict[int, List[_Node]] = {}
+        for node in all_nodes:
+            if node.result is None:  # adopted snapshots skip execution
+                by_level.setdefault(node.spec.depth(), []).append(node)
+        for level in sorted(by_level):
+            self._run_level(
+                by_level[level],
+                nodes,
+                shared_reads=shared_reads,
+                shared_budget=shared_budget,
+                compute=compute,
+                coalesce=coalesce,
+                analyze=analyze,
+                cache_max_bytes=cache_max_bytes,
+            )
+
+        # -- 4. hand results back in submission order ---------------------
+        # (the queue is consumed only now: a mid-batch execution failure
+        # leaves every job queued for a retry, where completed named
+        # nodes are adopted instead of re-executed)
+        results: List[MergeResult] = []
+        for handle in jobs:
+            node = handle_nodes[id(handle)]
+            handle.sid = node.sid
+            handle.result = node.result
+            results.append(node.result)
+        self._queue = self._queue[len(jobs):]
+        return results
+
+    def _resolve_input(self, inp: Union[str, MergeSpec], nodes: Dict[str, _Node]) -> str:
+        if isinstance(inp, MergeSpec):
+            sid = nodes[inp.spec_id].sid
+            if sid is None:
+                raise RuntimeError(
+                    f"child spec {inp.spec_id} not yet executed (cycle?)"
+                )
+            return sid
+        return inp
+
+    def _run_level(
+        self,
+        level_nodes: List[_Node],
+        nodes: Dict[str, _Node],
+        shared_reads: bool,
+        shared_budget: BudgetLike,
+        compute: str,
+        coalesce: bool,
+        analyze: bool,
+        cache_max_bytes: Optional[int],
+    ) -> Dict:
+        # deterministic order: by spec content digest, then requested sid
+        # (identical specs executing under distinct names)
+        level_nodes = sorted(
+            level_nodes, key=lambda n: (n.spec.spec_id, n.sid_hint or "")
+        )
+
+        pool_spec = (
+            BudgetSpec.parse(shared_budget) if shared_budget is not None else None
+        )
+        pool_is_fraction = pool_spec is not None and pool_spec.kind == "fraction"
+
+        batch_jobs: List[BatchJob] = []
+        resolved: List[Dict[str, Any]] = []
+        for node in level_nodes:
+            spec = node.spec
+            base_id = self._resolve_input(spec.base, nodes)
+            expert_ids = [self._resolve_input(e, nodes) for e in spec.experts]
+            if analyze:
+                self.ensure_analyzed(base_id, expert_ids)
+            # merge-graph lineage: any input that is itself a committed
+            # merge snapshot becomes a DAG edge of this node.
+            parent_sids = [
+                i
+                for i in [base_id, *expert_ids]
+                if self.catalog.get_manifest(i) is not None
+            ]
+            self.catalog.record_spec(
+                spec.spec_id, spec.name, spec.op, spec.to_dict()
+            )
+            naive = None
+            if spec.budget.kind == "fraction":
+                naive = cost_model.naive_expert_cost(self.catalog, expert_ids)
+            budget_b = spec.budget.resolve(naive)
+            batch_jobs.append(
+                BatchJob(
+                    base_id=base_id,
+                    expert_ids=expert_ids,
+                    op=spec.op,
+                    theta=spec.theta,
+                    budget_b=budget_b,
+                    conflict_aware=spec.conflict_aware,
+                    reuse=spec.reuse_plan,
+                    spec_id=spec.spec_id,
+                    parent_sids=parent_sids,
+                )
+            )
+            resolved.append({"base_id": base_id, "expert_ids": expert_ids})
+
+        pool_b = None
+        if pool_spec is not None:
+            # The pool caps the level's UNION read schedule, so a
+            # fractional pool resolves against the naive cost of the
+            # level's distinct expert set — not the per-job sum.
+            naive_union = None
+            if pool_is_fraction:
+                distinct = sorted({e for r in resolved for e in r["expert_ids"]})
+                naive_union = cost_model.naive_expert_cost(self.catalog, distinct)
+            pool_b = pool_spec.resolve(naive_union)
+
+        bp = plan_batch(
+            self.catalog,
+            batch_jobs,
+            block_size=self.block_size,
+            shared_budget_b=pool_b,
+        )
+
+        # -- shared expert readers: one open (cached) reader per model ----
+        expert_readers = None
+        cache_readers: Dict[str, CachingModelReader] = {}
+        if shared_reads and len(level_nodes) > 1:
+            all_experts = sorted(
+                {e for r in resolved for e in r["expert_ids"]}
+            )
+            # one byte budget for the whole level: the cap bounds the
+            # combined footprint across all expert readers
+            cache_budget = CacheBudget(cache_max_bytes)
+            cache_readers = {
+                e: CachingModelReader(
+                    self.snapshots.models.open_model(e),
+                    budget=cache_budget,
+                )
+                for e in all_experts
+            }
+            expert_readers = cache_readers
+
+        try:
+            for node, pr in zip(level_nodes, bp.results):
+                result = execute_merge(
+                    pr.plan,
+                    self.snapshots,
+                    self.catalog,
+                    sid=node.sid_hint,
+                    txn=self.txn,
+                    compute=compute,
+                    coalesce=coalesce,
+                    expert_readers=expert_readers,
+                )
+                result.stats["plan"] = pr.stats
+                node.sid = result.sid
+                node.result = result
+        finally:
+            for r in cache_readers.values():
+                r.close()
+
+        stats = dict(bp.stats)
+        if cache_readers:
+            stats["cache"] = {
+                "hits": sum(r.hits for r in cache_readers.values()),
+                "misses": sum(r.misses for r in cache_readers.values()),
+                "bytes_saved": sum(
+                    r.bytes_saved for r in cache_readers.values()
+                ),
+            }
+        if len(level_nodes) > 1:
+            for node in level_nodes:
+                node.result.stats["batch"] = stats
+        return stats
+
+    # ------------------------------------------------------------- one-shot
+    def run(
+        self,
+        spec: Union[MergeSpec, Dict],
+        sid: Optional[str] = None,
+        compute: str = "stream",
+        coalesce: bool = True,
+        analyze: bool = True,
+    ) -> MergeResult:
+        """Submit one spec (possibly a whole merge graph) and execute it."""
+        handle = self.submit(spec, sid=sid)
+        self.run_all(
+            shared_reads=True, compute=compute, coalesce=coalesce,
+            analyze=analyze,
+        )
+        assert handle.result is not None
+        return handle.result
+
+    # ---------------------------------------------------------------- audit
+    def explain(self, sid: str) -> Dict:
+        return _explain(self.catalog, self.snapshots, sid)
+
+    def merge_graph(self, sid: str) -> Dict:
+        return merge_graph(self.catalog, sid)
+
+    def lineage(self, sid: str):
+        return lineage_chain(self.catalog, sid)
+
+    def verify(self, sid: str) -> bool:
+        return verify_snapshot(self.snapshots, sid)
+
+    # ----------------------------------------------------------------- data
+    def load(self, model_id: str) -> Dict[str, np.ndarray]:
+        return load_model_arrays(self.snapshots.models, model_id)
+
+    def list_snapshots(self):
+        return self.snapshots.list_snapshots()
+
+    def close(self) -> None:
+        self.catalog.close()

@@ -12,8 +12,12 @@ Layers (paper section in parens):
     transactions    staging + atomic publish + recovery        (§5.3)
     lineage         explain / audit / verify                   (§2.2)
     naive           stateless O(K) baseline pipeline           (§6.1)
-    api             MergePipe facade
+    api             MergePipe facade (legacy v1 shim)
     distributed     shard_map sharded merge (beyond-paper)
+
+The declarative v2 surface (typed budgets, composable merge graphs,
+batched multi-merge sessions with cross-job shared expert reads) lives
+in :mod:`repro.api`; the v1 facade delegates to it.
 """
 from repro.core.blocks import DEFAULT_BLOCK_SIZE, BlockId
 

@@ -1,24 +1,38 @@
-"""MergePipe public API — the facade over catalog / planner / executor.
+"""MergePipe legacy facade (API v1) — a thin shim over :mod:`repro.api`.
 
-Typical use::
+.. deprecated::
+    This one-shot interface predates the declarative v2 layer.  New code
+    should use :class:`repro.api.Session` with typed
+    :class:`repro.api.MergeSpec` / :class:`repro.api.BudgetSpec` objects,
+    which add composable merge graphs (merge-of-merges as a DAG) and
+    batched multi-merge planning with cross-job shared expert reads::
 
-    mp = MergePipe("/path/workspace")
-    mp.register_model("base", base_arrays)
-    mp.register_model("expert-0", ex0, kind="full")
-    mp.analyze("base")
-    mp.analyze("expert-0", base_id="base")
-    result = mp.merge("base", ["expert-0"], op="ties",
-                      theta={"trim_frac": 0.2}, budget=0.3)
-    arrays = mp.load(result.sid)
-    mp.explain(result.sid)
+        from repro.api import Session, MergeSpec
 
-``budget`` accepts absolute bytes (int) or a fraction of the naive
-full-read expert cost (float in (0, 1]); ``None`` = unbounded (the
-faithful full-read configuration).
+        sess = Session("/path/workspace")
+        sess.register_model("base", base_arrays)
+        sess.register_model("expert-0", ex0)
+        spec = MergeSpec.build("base", ["expert-0"], op="ties",
+                               theta={"trim_frac": 0.2}, budget="30%")
+        result = sess.run(spec)
+
+    See ``docs/API.md`` for the migration guide.
+
+The legacy surface is kept working verbatim: :meth:`MergePipe.merge`
+emits a :class:`DeprecationWarning` and delegates to a v2 session over
+the same workspace, producing bit-identical outputs and I/O accounting.
+
+Legacy ``budget`` semantics (still honored here): absolute bytes (int)
+or a fraction of the naive full-read expert cost (float in (0, 1]);
+``None`` = unbounded.  Note the footgun this implies — ``budget=1``
+means *1 byte* while ``budget=1.0`` means *100%*; ``resolve_budget``
+now warns on the ambiguous ``1`` and suggests the typed
+``BudgetSpec`` / ``"100%"`` notation.
 """
 from __future__ import annotations
 
 import os
+import warnings
 from typing import Any, Dict, Mapping, Optional, Sequence, Union
 
 import numpy as np
@@ -96,14 +110,16 @@ class MergePipe:
 
     # ----------------------------------------------------------------- PLAN
     def resolve_budget(
-        self, expert_ids: Sequence[str], budget: Union[None, int, float]
+        self, expert_ids: Sequence[str], budget: Union[None, int, float, str]
     ) -> Optional[int]:
-        if budget is None:
-            return None
-        if isinstance(budget, float) and 0 < budget <= 1.0:
+        """Resolve a legacy (or typed) budget to a concrete byte cap."""
+        from repro.api.budget import BudgetSpec
+
+        spec = BudgetSpec.from_legacy(budget)
+        naive = None
+        if spec.kind == "fraction":
             naive = cost_model.naive_expert_cost(self.catalog, expert_ids)
-            return int(budget * naive)
-        return int(budget)
+        return spec.resolve(naive)
 
     def plan(
         self,
@@ -156,16 +172,41 @@ class MergePipe:
         conflict_aware: bool = True,
         reuse_plan: bool = True,
     ) -> MergeResult:
-        """ANALYZE (cached) -> PLAN -> EXECUTE -> COMMIT."""
-        if analyze:
-            self.ensure_analyzed(base_id, expert_ids)
-        pr = self.plan(
-            base_id, expert_ids, op, theta=theta, budget=budget,
-            conflict_aware=conflict_aware, reuse=reuse_plan,
+        """ANALYZE (cached) -> PLAN -> EXECUTE -> COMMIT.
+
+        .. deprecated:: delegates to the declarative v2 layer
+           (:class:`repro.api.Session`); use that directly for merge
+           graphs and batched multi-merge execution.
+        """
+        warnings.warn(
+            "MergePipe.merge is deprecated; use repro.api.Session with a "
+            "MergeSpec (see docs/API.md)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        result = self.execute(pr.plan, sid=sid, compute=compute, coalesce=coalesce)
-        result.stats["plan"] = pr.stats
-        return result
+        from repro.api.budget import BudgetSpec
+        from repro.api.spec import MergeSpec, OperatorSpec
+
+        spec = MergeSpec(
+            base=base_id,
+            experts=list(expert_ids),
+            operator=OperatorSpec(op, dict(theta or {}), strict=False),
+            budget=BudgetSpec.from_legacy(budget),
+            conflict_aware=conflict_aware,
+            reuse_plan=reuse_plan,
+        )
+        return self.session().run(
+            spec, sid=sid, compute=compute, coalesce=coalesce, analyze=analyze
+        )
+
+    def session(self) -> "Any":
+        """A v2 :class:`repro.api.Session` sharing this workspace's
+        catalog, snapshot store, transaction manager, and stats."""
+        from repro.api.session import Session
+
+        return Session._from_parts(
+            self.snapshots, self.catalog, self.txn, self.block_size, self.stats
+        )
 
     def execute(
         self,

@@ -81,6 +81,20 @@ CREATE TABLE IF NOT EXISTS plan (
     payload    TEXT NOT NULL,
     created_at REAL NOT NULL
 );
+CREATE TABLE IF NOT EXISTS merge_spec (
+    spec_id    TEXT PRIMARY KEY,
+    name       TEXT,
+    op         TEXT NOT NULL,
+    payload    TEXT NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS dag_edge (
+    sid        TEXT NOT NULL,
+    input_sid  TEXT NOT NULL,
+    role       TEXT NOT NULL,
+    ord        INTEGER NOT NULL,
+    PRIMARY KEY (sid, input_sid, role)
+);
 CREATE TABLE IF NOT EXISTS manifest (
     sid        TEXT PRIMARY KEY,
     plan_id    TEXT NOT NULL,
@@ -288,6 +302,62 @@ class Catalog:
         )
         row = cur.fetchone()
         return self.get_plan(row[0]) if row else None
+
+    # ------------------------------------------------------------- MergeSpec
+    def record_spec(
+        self, spec_id: str, name: Optional[str], op: str, payload: Dict
+    ) -> None:
+        """Persist a declarative MergeSpec (API v2) for audit / replay."""
+        self._conn().execute(
+            "INSERT OR REPLACE INTO merge_spec VALUES (?,?,?,?,?)",
+            (spec_id, name, op, json.dumps(payload), time.time()),
+        )
+        self._conn().commit()
+        self._meta_io(1, row_bytes=len(json.dumps(payload)) + 64)
+
+    def get_spec(self, spec_id: str) -> Optional[Dict]:
+        cur = self._conn().execute(
+            "SELECT spec_id, name, op, payload, created_at "
+            "FROM merge_spec WHERE spec_id=?",
+            (spec_id,),
+        )
+        row = cur.fetchone()
+        if row is None:
+            return None
+        return {
+            "spec_id": row[0],
+            "name": row[1],
+            "op": row[2],
+            "payload": json.loads(row[3]),
+            "created_at": row[4],
+        }
+
+    # --------------------------------------------------------------- DagEdge
+    def record_dag_edges(
+        self, sid: str, edges: Sequence[Tuple[str, str]]
+    ) -> None:
+        """edges: (input_sid, role) — merge-graph parents of snapshot sid."""
+        rows = [(sid, i, r, k) for k, (i, r) in enumerate(edges)]
+        self._conn().executemany(
+            "INSERT OR REPLACE INTO dag_edge VALUES (?,?,?,?)", rows
+        )
+        self._conn().commit()
+        self._meta_io(len(rows), row_bytes=64)
+
+    def dag_parents(self, sid: str) -> List[Tuple[str, str]]:
+        """Inputs of sid that are themselves merge snapshots: (input_sid, role)."""
+        cur = self._conn().execute(
+            "SELECT input_sid, role FROM dag_edge WHERE sid=? ORDER BY ord",
+            (sid,),
+        )
+        return [(r[0], r[1]) for r in cur.fetchall()]
+
+    def dag_children(self, input_sid: str) -> List[str]:
+        """Snapshots that consumed input_sid as a merge-graph input."""
+        cur = self._conn().execute(
+            "SELECT DISTINCT sid FROM dag_edge WHERE input_sid=?", (input_sid,)
+        )
+        return [r[0] for r in cur.fetchall()]
 
     # --------------------------------------------------------------- Manifest
     def record_manifest(

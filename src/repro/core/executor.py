@@ -70,8 +70,17 @@ def execute_merge(
     compute: str = "stream",
     validate: bool = True,
     enforce_budget: bool = True,
+    expert_readers: Optional[Dict[str, object]] = None,
 ) -> MergeResult:
-    """Run Algorithm 2 for plan π and return the committed snapshot."""
+    """Run Algorithm 2 for plan π and return the committed snapshot.
+
+    ``expert_readers`` optionally injects pre-opened (possibly caching)
+    readers keyed by expert id — the API v2 batch session passes shared
+    :class:`~repro.store.blockcache.CachingModelReader` instances here so
+    one physical scan of an expert block fans out to every job in the
+    batch that selected it.  Injected readers are owned by the caller
+    and are NOT closed on return.
+    """
     t0 = time.time()
     stats: IOStats = snapshots.stats
     expert_read_before = stats.c_expert
@@ -82,6 +91,12 @@ def execute_merge(
         from repro.kernels import ops as kernel_ops  # lazy: jax import
     elif compute != "stream":
         raise ValueError(f"unknown compute mode {compute!r}")
+    owns_expert_readers = expert_readers is None
+    if expert_readers is not None:
+        # validate before any transaction/reader state exists
+        missing = [e for e in plan.expert_ids if e not in expert_readers]
+        if missing:
+            raise KeyError(f"injected expert_readers missing {missing}")
 
     # -- Transaction and staging -----------------------------------------
     writer = txn.begin()
@@ -89,9 +104,10 @@ def execute_merge(
     coverage_rows: List[Tuple[str, int, str]] = []
 
     base_reader = snapshots.models.open_model(plan.base_id)
-    expert_readers = {
-        e: snapshots.models.open_model(e) for e in plan.expert_ids
-    }
+    if expert_readers is None:
+        expert_readers = {
+            e: snapshots.models.open_model(e) for e in plan.expert_ids
+        }
     theta = dict(plan.theta)
     seed = int(theta.get("seed", 0))
     is_dare = plan.op.lower() == "dare"
@@ -186,14 +202,23 @@ def execute_merge(
             sid, {t: _ranges_from_indices(ix) for t, ix in touch.items()}
         )
         catalog.record_coverage(sid, coverage_rows)
+        if plan.parent_sids:
+            catalog.record_dag_edges(
+                sid,
+                [
+                    (p, "base" if p == plan.base_id else "expert")
+                    for p in plan.parent_sids
+                ],
+            )
         txn.commit()
     except Exception:
         txn.abort()
         raise
     finally:
         base_reader.close()
-        for r in expert_readers.values():
-            r.close()
+        if owns_expert_readers:
+            for r in expert_readers.values():
+                r.close()
 
     run_stats = {
         "seconds": time.time() - t0,

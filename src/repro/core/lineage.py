@@ -32,6 +32,14 @@ def explain(catalog: Catalog, snapshots: SnapshotStore, sid: str) -> Dict:
 
     touched_blocks = sum(e - s for ranges in touch.values() for s, e in ranges)
     file_manifest = snapshots.manifest(sid)
+
+    # API v2 merge-graph provenance: DAG edges to inputs that are
+    # themselves merge snapshots, and the declarative spec (if any).
+    parents = [
+        {"sid": p, "role": role} for p, role in catalog.dag_parents(sid)
+    ]
+    spec_id = (plan or {}).get("payload", {}).get("spec_id")
+    spec = catalog.get_spec(spec_id) if spec_id else None
     return {
         "sid": sid,
         "base_id": man["base_id"],
@@ -51,6 +59,9 @@ def explain(catalog: Catalog, snapshots: SnapshotStore, sid: str) -> Dict:
         "plan_digest": file_manifest.get("plan_digest"),
         "fallback_events": (plan or {}).get("payload", {}).get("fallback_events"),
         "decisions": (plan or {}).get("payload", {}).get("decisions"),
+        "parents": parents,
+        "spec_id": spec_id,
+        "spec": (spec or {}).get("payload") if spec else None,
         "output_root": man["output_root"],
         "created_at": man["created_at"],
     }
@@ -70,6 +81,31 @@ def lineage_chain(catalog: Catalog, sid: str) -> List[Dict]:
         chain.append(man)
         cur = man["base_id"]
     return chain
+
+
+def merge_graph(catalog: Catalog, sid: str) -> Dict:
+    """Recursively expand the merge DAG rooted at ``sid``.
+
+    Returns a nested record ``{sid, op, base_id, expert_ids, parents: [...]}``
+    where ``parents`` recurses into inputs that were produced by merges in
+    the same graph (dag_edge rows).  Plain model inputs terminate the
+    recursion.
+    """
+    man = catalog.get_manifest(sid)
+    if man is None:
+        raise KeyError(f"snapshot {sid!r} not committed")
+    node = {
+        "sid": sid,
+        "op": man["op"],
+        "base_id": man["base_id"],
+        "expert_ids": man["expert_ids"],
+        "parents": [],
+    }
+    for parent_sid, role in catalog.dag_parents(sid):
+        child = merge_graph(catalog, parent_sid)
+        child["role"] = role
+        node["parents"].append(child)
+    return node
 
 
 def verify_snapshot(snapshots: SnapshotStore, sid: str) -> bool:

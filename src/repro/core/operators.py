@@ -25,8 +25,10 @@ counter, so re-executing a plan reproduces the output bit-for-bit
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
-from typing import Callable, Dict, Optional
+import warnings
+from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
@@ -35,9 +37,101 @@ OperatorFn = Callable[[np.ndarray, np.ndarray, Dict], np.ndarray]
 _REGISTRY: Dict[str, OperatorFn] = {}
 
 
-def register(name: str):
+@dataclasses.dataclass(frozen=True)
+class ThetaParam:
+    """Schema entry for one θ key: type plus an optional range (lower
+    bound exclusive by default; ``lo_inclusive=True`` allows == lo)."""
+
+    type: type
+    lo: Optional[float] = None
+    hi: Optional[float] = None
+    lo_inclusive: bool = False
+
+    def check(self, key: str, value: Any) -> Any:
+        if self.type is float:
+            if not isinstance(value, (int, float)) or isinstance(value, bool):
+                raise ValueError(f"theta[{key!r}] must be a number, got {value!r}")
+            value = float(value)
+        elif self.type is int:
+            if not isinstance(value, int) or isinstance(value, bool):
+                raise ValueError(f"theta[{key!r}] must be an int, got {value!r}")
+        if self.lo is not None:
+            ok = value >= self.lo if self.lo_inclusive else value > self.lo
+            if not ok:
+                op = ">=" if self.lo_inclusive else ">"
+                raise ValueError(
+                    f"theta[{key!r}]={value} must be {op} {self.lo}"
+                )
+        if self.hi is not None and not (value <= self.hi):
+            raise ValueError(f"theta[{key!r}]={value} must be <= {self.hi}")
+        return value
+
+
+#: θ keys accepted by every operator (seed drives DARE-style determinism
+#: and is harmless elsewhere; lam is the common scaling knob).
+_COMMON_THETA: Dict[str, ThetaParam] = {
+    "lam": ThetaParam(float),
+    "seed": ThetaParam(int),
+}
+
+_THETA_SCHEMAS: Dict[str, Dict[str, ThetaParam]] = {}
+
+
+def register_theta_schema(name: str, schema: Dict[str, ThetaParam]) -> None:
+    _THETA_SCHEMAS[name.lower()] = {**_COMMON_THETA, **schema}
+
+
+def theta_schema(op: str) -> Dict[str, ThetaParam]:
+    try:
+        return _THETA_SCHEMAS[op.lower()]
+    except KeyError:
+        raise KeyError(
+            f"unknown merge operator {op!r}; known: {sorted(_THETA_SCHEMAS)}"
+        ) from None
+
+
+def validate_theta(
+    op: str, theta: Optional[Dict[str, Any]], strict: bool = True
+) -> Dict[str, Any]:
+    """Validate θ against the operator's schema.
+
+    ``strict=True`` raises on unknown keys / out-of-range values (API v2);
+    ``strict=False`` only warns and passes values through unchanged
+    (legacy facade compatibility).
+    """
+    schema = theta_schema(op)
+    out: Dict[str, Any] = {}
+    for key, value in (theta or {}).items():
+        if key.startswith("_"):
+            raise ValueError(f"theta key {key!r} is reserved for the executor")
+        param = schema.get(key)
+        if param is None:
+            msg = (
+                f"operator {op!r} does not accept theta key {key!r}; "
+                f"known: {sorted(schema)}"
+            )
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=3)
+            out[key] = value
+            continue
+        try:
+            out[key] = param.check(key, value)
+        except ValueError:
+            if strict:
+                raise
+            warnings.warn(
+                f"theta[{key!r}]={value!r} is outside the schema for {op!r}",
+                stacklevel=3,
+            )
+            out[key] = value
+    return out
+
+
+def register(name: str, theta: Optional[Dict[str, ThetaParam]] = None):
     def deco(fn: OperatorFn) -> OperatorFn:
         _REGISTRY[name.lower()] = fn
+        register_theta_schema(name, theta or {})
         return fn
 
     return deco
@@ -86,7 +180,8 @@ def _ties_trim_mask(D: np.ndarray, trim_frac: float) -> np.ndarray:
     return absd >= thresh[:, None]
 
 
-@register("ties")
+@register("ties", theta={"trim_frac": ThetaParam(
+    float, lo=0.0, hi=1.0, lo_inclusive=True)})
 def ties_merge(x0f: np.ndarray, D: np.ndarray, theta: Dict) -> np.ndarray:
     """TIES: trim -> elect sign -> disjoint (sign-matched) mean -> scale."""
     trim_frac = float(theta.get("trim_frac", 0.2))
@@ -117,7 +212,7 @@ def dare_mask(
     return rng.random(n) < density
 
 
-@register("dare")
+@register("dare", theta={"density": ThetaParam(float, lo=0.0, hi=1.0)})
 def dare_merge(x0f: np.ndarray, D: np.ndarray, theta: Dict) -> np.ndarray:
     """DARE: random-drop deltas at rate (1-density), rescale 1/density, sum.
 

@@ -35,6 +35,10 @@ class MergePlan:
     granularity: str = "block"  # "block" | "tensor" (fallback §4.5)
     fallback_events: List[Dict] = dataclasses.field(default_factory=list)
     decisions: List[Dict] = dataclasses.field(default_factory=list)
+    #: API v2 provenance: declarative spec this plan was compiled from, and
+    #: input snapshots that are themselves merge outputs (merge-graph edges).
+    spec_id: Optional[str] = None
+    parent_sids: List[str] = dataclasses.field(default_factory=list)
 
     # ------------------------------------------------------------- queries
     def blocks_for(self, expert_id: str, tensor_id: str) -> List[int]:

@@ -19,6 +19,7 @@ Complexity: O(N_b log N_b) in the number of candidate blocks.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -61,15 +62,21 @@ def plan_merge(
     block_size: int = blk.DEFAULT_BLOCK_SIZE,
     conflict_aware: bool = True,
     reuse: bool = True,
+    spec_id: Optional[str] = None,
+    parent_sids: Optional[Sequence[str]] = None,
 ) -> PlannerResult:
     """Generate (or reuse) a budget-feasible merge plan.
 
     ``budget_b=None`` means unbounded (full-read plan — the faithful
-    "budget = 100%" configuration).
+    "budget = 100%" configuration).  ``spec_id`` / ``parent_sids`` stamp
+    API v2 provenance (declarative spec + merge-graph inputs) into the
+    plan; a reused plan with different provenance is re-recorded under a
+    fresh plan_id so lineage never aliases across specs.
     """
     t0 = time.time()
     theta = dict(theta or {})
     expert_ids = list(expert_ids)
+    parent_sids = list(parent_sids or [])
 
     base_rows = catalog.tensor_metas(base_id)
     if not base_rows:
@@ -84,6 +91,29 @@ def plan_merge(
         cached = catalog.find_reusable_plan(base_id, expert_ids, op, budget_b)
         if cached is not None:
             plan = MergePlan.from_payload(cached["payload"])
+            # Reuse is only sound at the same block granularity and with
+            # the same requested θ (the stored θ may carry bounded
+            # budget-pressure adjustments — revert those before comparing).
+            cached_theta = dict(plan.theta)
+            for d in plan.decisions:
+                if "theta_adjust" in d:
+                    cached_theta[d["theta_adjust"]] = d["from"]
+            if plan.block_size != block_size or cached_theta != theta:
+                cached = None
+        if cached is not None:
+            if plan.spec_id != spec_id or plan.parent_sids != parent_sids:
+                # same selection, new provenance: fork under a fresh id so
+                # each spec's lineage stays distinct in the catalog.
+                plan = dataclasses.replace(
+                    plan,
+                    plan_id=MergePlan.new_id(),
+                    spec_id=spec_id,
+                    parent_sids=parent_sids,
+                )
+                catalog.record_plan(
+                    plan.plan_id, base_id, expert_ids, op, plan.budget_b,
+                    plan.digest(), plan.c_expert_hat, plan.to_payload(),
+                )
             return PlannerResult(
                 plan,
                 {
@@ -230,6 +260,8 @@ def plan_merge(
         granularity=granularity,
         fallback_events=fallback_events,
         decisions=decisions,
+        spec_id=spec_id,
+        parent_sids=parent_sids,
     )
     # Feasibility (Definition 4.2) holds by construction; assert anyway.
     assert effective_budget is None or plan.c_expert_hat <= effective_budget, (
@@ -258,3 +290,175 @@ def plan_merge(
         "fallbacks": len(fallback_events),
     }
     return PlannerResult(plan, stats)
+
+
+# ===================================================================== batch
+@dataclasses.dataclass
+class BatchJob:
+    """One merge job in a multi-job planning request (API v2 session)."""
+
+    base_id: str
+    expert_ids: List[str]
+    op: str
+    theta: Optional[Dict[str, Any]] = None
+    budget_b: Optional[int] = None
+    conflict_aware: bool = True
+    reuse: bool = True
+    spec_id: Optional[str] = None
+    parent_sids: List[str] = dataclasses.field(default_factory=list)
+
+
+class BatchPlannerResult:
+    def __init__(self, results: List[PlannerResult], stats: Dict[str, Any]):
+        self.results = results
+        self.stats = stats
+
+
+def _selection_bytes(
+    catalog: Catalog,
+    plan: MergePlan,
+    block_bytes_cache: Dict[str, Dict[Tuple[str, int], int]],
+) -> Dict[Tuple[str, str, int], int]:
+    """Expand a plan's selection into {(expert, tensor, block): nbytes}.
+
+    Sizes come from the same BlockMeta rows the planner enumerated (this
+    also covers adapter experts, whose selection indexes base-shaped
+    delta blocks rather than their own factor tensors); experts planned
+    via the §4.5 tensor-level fallback derive sizes from TensorMeta.
+    """
+    out: Dict[Tuple[str, str, int], int] = {}
+    for e, per_t in plan.selection.items():
+        sizes = block_bytes_cache.get(e)
+        if sizes is None:
+            sizes = {
+                (r[0], r[1]): r[2]
+                for r in catalog.block_metas(e, plan.block_size)
+            }
+            block_bytes_cache[e] = sizes
+        tensor_sizes: Optional[Dict[str, int]] = None
+        for t, bs in per_t.items():
+            for b in bs:
+                nbytes = sizes.get((t, b))
+                if nbytes is None:
+                    # tensor-level fallback expert (no BlockMeta rows)
+                    if tensor_sizes is None:
+                        tensor_sizes = {
+                            r[0]: r[3] for r in catalog.tensor_metas(e)
+                        }
+                    total = tensor_sizes.get(t)
+                    if total is None or b >= blk.num_blocks(total, plan.block_size):
+                        continue
+                    nbytes = blk.block_range(total, b, plan.block_size).nbytes
+                out[(e, t, b)] = nbytes
+    return out
+
+
+def plan_batch(
+    catalog: Catalog,
+    jobs: Sequence[BatchJob],
+    block_size: int = blk.DEFAULT_BLOCK_SIZE,
+    shared_budget_b: Optional[int] = None,
+    max_pool_iters: int = 4,
+) -> BatchPlannerResult:
+    """Plan a *set* of merge jobs together (API v2 batch entry point).
+
+    Each job is planned with :func:`plan_merge` under its own budget; the
+    batch layer then computes the **shared read schedule**: the union of
+    selected ``(expert, tensor, block)`` keys across jobs, which is the
+    expert I/O a shared-cache execution actually pays (one scan of each
+    selected block feeds every job that selected it).
+
+    ``shared_budget_b`` is a pool constraint on that *union*: if the
+    union overflows the pool, every job's budget is scaled down
+    proportionally and the batch is re-planned (bounded fixed-point
+    iteration; decisions recorded in the stats).
+    """
+    t0 = time.time()
+    jobs = list(jobs)
+    budgets: List[Optional[int]] = [j.budget_b for j in jobs]
+    decisions: List[Dict[str, Any]] = []
+    block_bytes_cache: Dict[str, Dict[Tuple[str, int], int]] = {}
+
+    results: List[PlannerResult] = []
+    union_bytes = 0
+    sum_bytes = 0
+
+    def _plan_round(first: bool) -> None:
+        nonlocal results, union_bytes, sum_bytes
+        results = [
+            plan_merge(
+                catalog,
+                j.base_id,
+                j.expert_ids,
+                j.op,
+                theta=j.theta,
+                budget_b=budgets[i],
+                block_size=block_size,
+                conflict_aware=j.conflict_aware,
+                reuse=j.reuse and first,
+                spec_id=j.spec_id,
+                parent_sids=j.parent_sids,
+            )
+            for i, j in enumerate(jobs)
+        ]
+        union: Dict[Tuple[str, str, int], int] = {}
+        sum_bytes = 0
+        for pr in results:
+            sel = _selection_bytes(catalog, pr.plan, block_bytes_cache)
+            union.update(sel)
+            sum_bytes += pr.plan.c_expert_hat
+        union_bytes = sum(union.values())
+
+    for it in range(max(1, max_pool_iters)):
+        _plan_round(first=it == 0)
+        if shared_budget_b is None or union_bytes <= shared_budget_b:
+            break
+        if it == max(1, max_pool_iters) - 1:
+            break  # no further round would apply a scaling decision
+        # pool overflow: shrink each job's budget proportionally and replan
+        scale = shared_budget_b / max(union_bytes, 1)
+        new_budgets: List[Optional[int]] = []
+        for i, pr in enumerate(results):
+            cur = budgets[i] if budgets[i] is not None else pr.plan.c_expert_hat
+            new_budgets.append(max(0, int(cur * scale)))
+        decisions.append(
+            {
+                "pool_iteration": it,
+                "union_bytes": union_bytes,
+                "shared_budget_b": shared_budget_b,
+                "scale": scale,
+                "budgets": list(new_budgets),
+            }
+        )
+        budgets = new_budgets
+
+    if shared_budget_b is not None and union_bytes > shared_budget_b:
+        # Fixed point not reached (jobs select disjoint-ish blocks, so the
+        # union shrinks sublinearly).  Guaranteed fallback: split the pool
+        # across jobs proportionally to their current demand — then
+        # union <= Σ Ĉ_i <= Σ budget_i <= pool by construction.
+        hats = [pr.plan.c_expert_hat for pr in results]
+        total = max(sum(hats), 1)
+        budgets = [shared_budget_b * h // total for h in hats]
+        decisions.append(
+            {
+                "pool_final_split": True,
+                "union_bytes": union_bytes,
+                "shared_budget_b": shared_budget_b,
+                "budgets": list(budgets),
+            }
+        )
+        _plan_round(first=False)
+
+    stats = {
+        "jobs": len(jobs),
+        "plan_seconds": time.time() - t0,
+        "c_expert_hat_sum": sum_bytes,
+        "c_expert_hat_union": union_bytes,
+        "sharing_factor": (sum_bytes / union_bytes) if union_bytes else 1.0,
+        "shared_budget_b": shared_budget_b,
+        "pool_decisions": decisions,
+        "pool_respected": shared_budget_b is None
+        or union_bytes <= shared_budget_b,
+    }
+    return BatchPlannerResult(results, stats)

@@ -209,6 +209,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool) -> Dict[str, Any]:
     # --- cost analysis (per-device FLOPs / bytes) -------------------------
     try:
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+            ca = ca[0] if ca else {}
         cost = {
             "flops": ca.get("flops"),
             "bytes_accessed": ca.get("bytes accessed"),

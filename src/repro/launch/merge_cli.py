@@ -1,13 +1,26 @@
 """Merge launcher — MergePipe from the command line.
 
+One-shot flags (legacy surface, still supported)::
+
     PYTHONPATH=src python -m repro.launch.merge_cli \
         --workspace /tmp/ws --base base --experts e0 e1 e2 \
-        --op ties --budget 0.3 --theta trim_frac=0.2 lam=1.0
+        --op ties --budget 30% --theta trim_frac=0.2 lam=1.0
 
-Supports the paper's full surface: ANALYZE reuse, budget fractions or
-absolute bytes, plan inspection (--explain), the naive baseline
-(--naive) and the sharded executor (--sharded, merges across the local
-device mesh).
+Declarative spec files (API v2): ``--spec merges.yaml`` submits one or
+many :class:`repro.api.MergeSpec` documents — including nested merge
+graphs — and executes them as a batch with cross-job shared expert
+reads::
+
+    PYTHONPATH=src python -m repro.launch.merge_cli \
+        --workspace /tmp/ws --spec merges.yaml [--shared-budget 1GiB]
+
+Spec documents are a mapping, a list of mappings, or ``{"jobs": [...]}``;
+each mapping has ``base``, ``experts`` (model ids or nested specs),
+``op``, ``theta``, ``budget`` ("30%", "2GiB", bytes), and optional
+``name`` (used as the snapshot id).
+
+Also supports ANALYZE reuse, plan inspection (``--explain SID``) and the
+naive full-read baseline (``--naive``).
 """
 from __future__ import annotations
 
@@ -15,8 +28,7 @@ import argparse
 import json
 import time
 
-import numpy as np
-
+from repro.api import BudgetSpec, Session, load_spec_file
 from repro.core import MergePipe, naive_merge
 from repro.store.iostats import measure
 
@@ -32,15 +44,67 @@ def _parse_theta(pairs):
     return theta
 
 
+def _run_specs(args) -> None:
+    specs = load_spec_file(args.spec)
+    sess = Session(args.workspace, block_size=args.block_size)
+    handles = [sess.submit(s, sid=s.name) for s in specs]
+    cache_max = "auto"
+    if args.cache_max_bytes is not None:
+        cache_spec = BudgetSpec.parse(args.cache_max_bytes)
+        if cache_spec.kind == "fraction":
+            raise SystemExit(
+                "--cache-max-bytes is a memory size, not a fraction; "
+                "use bytes or a unit string like '2GiB'"
+            )
+        cache_max = cache_spec.resolve()
+    t0 = time.time()
+    with measure(sess.stats) as io:
+        results = sess.run_all(
+            shared_reads=not args.no_shared_reads,
+            shared_budget=args.shared_budget,
+            compute=args.compute,
+            cache_max_bytes=cache_max,
+        )
+    wall = time.time() - t0
+    for h, res in zip(handles, results):
+        print(f"[mergepipe] committed {res.sid}  "
+              f"(spec {h.spec.spec_id}, op={h.spec.op})  "
+              f"expert_read={res.stats['c_expert_run']/1e6:.1f} MB "
+              f"(planned {res.stats['c_expert_hat']/1e6:.1f} MB)")
+    batch = results[0].stats.get("batch") if results else None
+    if batch:
+        print(f"[batch] jobs={batch['jobs']}  "
+              f"union={batch['c_expert_hat_union']/1e6:.1f} MB  "
+              f"sum={batch['c_expert_hat_sum']/1e6:.1f} MB  "
+              f"sharing={batch['sharing_factor']:.2f}x")
+    print(
+        f"wall={wall:.2f}s  base_read={io['base_read']/1e6:.1f}MB  "
+        f"expert_read={io['expert_read']/1e6:.1f}MB  "
+        f"out_written={io['out_written']/1e6:.1f}MB  meta={io['meta']/1e6:.2f}MB"
+    )
+    sess.close()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workspace", required=True)
-    ap.add_argument("--base", required=True)
-    ap.add_argument("--experts", nargs="+", required=True)
+    ap.add_argument("--spec", default=None,
+                    help="YAML/JSON MergeSpec document (single spec, list, "
+                         "or {'jobs': [...]}); enables batch execution")
+    ap.add_argument("--shared-budget", default=None,
+                    help="pooled cap on the batch's union expert reads "
+                         "('1GiB', '50%%', bytes); --spec mode only")
+    ap.add_argument("--no-shared-reads", action="store_true",
+                    help="disable the cross-job block cache (--spec mode)")
+    ap.add_argument("--cache-max-bytes", default=None,
+                    help="bound on the shared-read cache ('2GiB', bytes; "
+                         "default 1GiB, 'unbounded' to disable the cap)")
+    ap.add_argument("--base", default=None)
+    ap.add_argument("--experts", nargs="+", default=None)
     ap.add_argument("--op", default="ties",
                     choices=["avg", "ta", "ties", "dare"])
     ap.add_argument("--budget", default=None,
-                    help="fraction (0,1] of naive expert bytes, or bytes")
+                    help="'30%%', '2GiB', absolute bytes, or a (0,1] fraction")
     ap.add_argument("--theta", nargs="*", help="k=v operator params")
     ap.add_argument("--block-size", type=int, default=128 * 1024)
     ap.add_argument("--sid", default=None)
@@ -52,16 +116,25 @@ def main() -> None:
                     help="print the audit record for a snapshot and exit")
     args = ap.parse_args()
 
-    mp = MergePipe(args.workspace, block_size=args.block_size)
     if args.explain:
+        mp = MergePipe(args.workspace, block_size=args.block_size)
         print(json.dumps(mp.explain(args.explain), indent=2, default=str))
         return
+    if args.spec:
+        _run_specs(args)
+        return
+    if not args.base or not args.experts:
+        raise SystemExit("--base/--experts are required without --spec")
 
+    mp = MergePipe(args.workspace, block_size=args.block_size)
     budget = None
     if args.budget is not None:
-        budget = float(args.budget)
-        if budget > 1:
-            budget = int(budget)
+        try:
+            budget = float(args.budget)
+            if budget > 1:
+                budget = int(budget)
+        except ValueError:
+            budget = args.budget  # "30%", "2GiB", ... (BudgetSpec notation)
     theta = _parse_theta(args.theta)
 
     t0 = time.time()

@@ -1,0 +1,381 @@
+"""API v2: golden equivalence with the legacy facade, batched shared
+reads, and merge-graph (DAG) lineage."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import BudgetSpec, MergeSpec, Session, load_spec_file
+from repro.core.api import MergePipe
+from repro.store.iostats import IOStats, measure
+
+from conftest import make_models
+
+
+def _fresh(tmp_path, tag, n_experts=3):
+    stats = IOStats()
+    sess = Session(str(tmp_path / tag), block_size=4096, stats=stats)
+    base, experts = make_models(n_experts=n_experts)
+    sess.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        sess.register_model(f"ex{i}", e)
+        ids.append(f"ex{i}")
+    return sess, stats, ids
+
+
+def _legacy_fresh(tmp_path, tag, n_experts=3):
+    stats = IOStats()
+    mp = MergePipe(str(tmp_path / tag), block_size=4096, stats=stats)
+    base, experts = make_models(n_experts=n_experts)
+    mp.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        mp.register_model(f"ex{i}", e)
+        ids.append(f"ex{i}")
+    return mp, stats, ids
+
+
+# ------------------------------------------------------- golden equivalence
+@pytest.mark.parametrize(
+    "op,theta",
+    [
+        ("avg", {}),
+        ("ties", {"trim_frac": 0.3, "lam": 1.0}),
+        ("dare", {"density": 0.5, "seed": 9}),
+    ],
+)
+def test_session_matches_legacy_bit_identical(tmp_path, op, theta):
+    """Session-built single merges are bit-identical (arrays AND IOStats)
+    to the legacy one-shot facade."""
+    # equal-length workspace names: manifest JSON embeds the output path,
+    # so path length must match for byte-identical meta accounting
+    mp, legacy_stats, ids = _legacy_fresh(tmp_path, "wsv1")
+    with measure(legacy_stats) as legacy_io:
+        with pytest.deprecated_call():
+            legacy_res = mp.merge("base", ids, op, theta=dict(theta),
+                                  budget=0.5, sid="out")
+    legacy_arrays = mp.load("out")
+    mp.close()
+
+    sess, v2_stats, ids2 = _fresh(tmp_path, "wsv2")
+    spec = MergeSpec.build("base", ids2, op=op, theta=dict(theta),
+                           budget="50%")
+    with measure(v2_stats) as v2_io:
+        v2_res = sess.run(spec, sid="out")
+    v2_arrays = sess.load("out")
+    sess.close()
+
+    # parameter-byte categories match exactly; meta differs only by the
+    # variable-length repr of embedded wall-clock timestamps
+    for cat in ("base_read", "expert_read", "out_written"):
+        assert legacy_io[cat] == v2_io[cat], cat
+    assert abs(legacy_io["meta"] - v2_io["meta"]) <= 16
+    assert legacy_res.stats["c_expert_run"] == v2_res.stats["c_expert_run"]
+    assert set(legacy_arrays) == set(v2_arrays)
+    for k in legacy_arrays:
+        assert np.array_equal(legacy_arrays[k], v2_arrays[k]), k
+
+
+# ------------------------------------------------------- batch shared reads
+def test_batch_reads_strictly_less_than_sequential(tmp_path):
+    """>=3 jobs over the same expert set: batched execution reads strictly
+    fewer expert bytes than the same jobs through the legacy path, with
+    bit-identical outputs."""
+    budgets = ["40%", "70%", "100%"]
+
+    mp, legacy_stats, ids = _legacy_fresh(tmp_path, "legacy")
+    with measure(legacy_stats) as seq_io:
+        for i, b in enumerate(budgets):
+            with pytest.deprecated_call():
+                mp.merge("base", ids, "ties", theta={"trim_frac": 0.3},
+                         budget=BudgetSpec.parse(b), sid=f"job{i}",
+                         reuse_plan=False)
+    legacy_out = {i: mp.load(f"job{i}") for i in range(len(budgets))}
+    mp.close()
+
+    sess, v2_stats, ids2 = _fresh(tmp_path, "v2")
+    handles = [
+        sess.submit(
+            MergeSpec.build("base", ids2, op="ties",
+                            theta={"trim_frac": 0.3}, budget=b,
+                            reuse_plan=False),
+            sid=f"job{i}",
+        )
+        for i, b in enumerate(budgets)
+    ]
+    with measure(v2_stats) as batch_io:
+        results = sess.run_all(shared_reads=True)
+
+    assert len(results) == 3 and all(h.done for h in handles)
+    assert batch_io["expert_read"] < seq_io["expert_read"]
+    # shared schedule reads exactly the union of per-job selections
+    batch = results[0].stats["batch"]
+    assert batch_io["expert_read"] == batch["c_expert_hat_union"]
+    assert batch["sharing_factor"] > 1.0
+    assert batch["cache"]["bytes_saved"] > 0
+    # outputs are unaffected by read sharing
+    for i in range(len(budgets)):
+        v2_out = sess.load(f"job{i}")
+        for k in legacy_out[i]:
+            assert np.array_equal(legacy_out[i][k], v2_out[k]), (i, k)
+    sess.close()
+
+
+def test_reuse_does_not_leak_stale_theta(tmp_path):
+    """Same (base, experts, op, budget) but different theta must NOT
+    reuse the cached plan's theta."""
+    sess, _stats, ids = _fresh(tmp_path, "theta")
+    lo = sess.run(MergeSpec.build("base", ids, op="ties",
+                                  theta={"trim_frac": 0.1}, budget="50%"),
+                  sid="lo")
+    hi = sess.run(MergeSpec.build("base", ids, op="ties",
+                                  theta={"trim_frac": 0.9}, budget="50%"),
+                  sid="hi")
+    # manifest theta may carry the planner's bounded (±20%) budget-pressure
+    # adjustment, but must derive from the respective requested value
+    assert 0.08 <= lo.manifest["theta"]["trim_frac"] <= 0.1
+    assert 0.72 <= hi.manifest["theta"]["trim_frac"] <= 0.9
+    a, b = sess.load("lo"), sess.load("hi")
+    assert any(not np.array_equal(a[k], b[k]) for k in a)
+    # identical resubmission still reuses the plan
+    again = sess.run(MergeSpec.build("base", ids, op="ties",
+                                     theta={"trim_frac": 0.9}, budget="50%"),
+                     sid="hi2")
+    assert again.stats["plan"]["reused"]
+    sess.close()
+
+
+def test_fractional_pool_with_unbounded_jobs(tmp_path):
+    """shared_budget='50%' must work when jobs set no per-job budget."""
+    sess, stats, ids = _fresh(tmp_path, "fpool")
+    sess.ensure_analyzed("base", ids)  # so naive below reads real metadata
+    # heterogeneous ops select different blocks — exercises the pool's
+    # guaranteed proportional-split fallback, not just the fixed point
+    for i, op in enumerate(("ties", "avg", "ta")):
+        theta = {"trim_frac": 0.3} if op == "ties" else {}
+        sess.submit(MergeSpec.build("base", ids, op=op, theta=theta,
+                                    reuse_plan=False),
+                    sid=f"u{i}")
+    naive = sum(r[3] for e in ids for r in sess.catalog.tensor_metas(e))
+    assert naive > 0
+    with measure(stats) as io:
+        results = sess.run_all(shared_budget="50%")
+    assert results[0].stats["batch"]["pool_respected"]
+    assert io["expert_read"] <= naive // 2
+    sess.close()
+
+
+def test_reuse_requires_same_block_size(tmp_path):
+    """A cached plan from another block_size must not be reused."""
+    stats = IOStats()
+    ws = str(tmp_path / "bs")
+    sess = Session(ws, block_size=4096, stats=stats)
+    base, experts = make_models()
+    sess.register_model("base", base)
+    ids = [sess.register_model(f"ex{i}", e) for i, e in enumerate(experts)]
+    r1 = sess.run(MergeSpec.build("base", ids, op="ties",
+                                  theta={"trim_frac": 0.3}, budget="50%"),
+                  sid="bs1")
+    sess.close()
+    sess2 = Session(ws, block_size=8192, stats=stats)
+    r2 = sess2.run(MergeSpec.build("base", ids, op="ties",
+                                   theta={"trim_frac": 0.3}, budget="50%"),
+                   sid="bs2")
+    assert r1.manifest["block_size"] == 4096
+    assert r2.manifest["block_size"] == 8192
+    assert not r2.stats["plan"]["reused"]
+    sess2.close()
+
+
+def test_conflicting_sids_rejected_before_any_work(tmp_path):
+    sess, _stats, ids = _fresh(tmp_path, "clash")
+    sess.submit(MergeSpec.build("base", ids, op="avg"), sid="X")
+    sess.submit(MergeSpec.build("base", ids, op="ta"), sid="X")
+    with pytest.raises(ValueError, match="target snapshot id 'X'"):
+        sess.run_all()
+    assert sess.list_snapshots() == []  # nothing partially committed
+    sess._queue.clear()  # abandon the conflicting batch
+    # reusing an already-published sid for a DIFFERENT spec fails upfront
+    sess.run(MergeSpec.build("base", ids, op="avg"), sid="done")
+    sess.submit(MergeSpec.build("base", ids, op="ta"), sid="done")
+    with pytest.raises(ValueError, match="different spec"):
+        sess.run_all()
+    sess.close()
+
+
+def test_same_content_different_names_both_commit(tmp_path):
+    sess, _stats, ids = _fresh(tmp_path, "names")
+    sess.submit(MergeSpec.build("base", ids, op="avg", name="snapA"))
+    sess.submit(MergeSpec.build("base", ids, op="avg", name="snapB"))
+    results = sess.run_all()
+    assert {r.sid for r in results} == {"snapA", "snapB"}
+    a, b = sess.load("snapA"), sess.load("snapB")
+    assert all(np.array_equal(a[k], b[k]) for k in a)
+    sess.close()
+
+
+def test_batch_respects_shared_budget_pool(tmp_path):
+    sess, stats, ids = _fresh(tmp_path, "pool")
+    for i in range(3):
+        sess.submit(
+            MergeSpec.build("base", ids, op="ties",
+                            theta={"trim_frac": 0.3}, budget="100%",
+                            reuse_plan=False),
+            sid=f"p{i}",
+        )
+    naive = sum(r[3] for e in ids for r in sess.catalog.tensor_metas(e))
+    pool = naive // 2
+    with measure(stats) as io:
+        results = sess.run_all(shared_budget=pool)
+    batch = results[0].stats["batch"]
+    assert batch["pool_respected"]
+    assert io["expert_read"] <= pool
+    assert batch["pool_decisions"]  # scaling actually happened
+    sess.close()
+
+
+# ------------------------------------------------------------- merge graphs
+def test_merge_graph_two_level_lineage(tmp_path):
+    """A two-level merge graph round-trips plan -> execute -> explain()
+    with correct parent lineage."""
+    sess, _stats, ids = _fresh(tmp_path, "graph")
+    sub = MergeSpec.build("base", ids[:2], op="dare",
+                          theta={"density": 0.5, "seed": 1}, name="sub")
+    top = MergeSpec.build("base", [sub, ids[2]], op="ties",
+                          theta={"trim_frac": 0.3}, budget="80%",
+                          name="top")
+    res = sess.run(top)
+    assert res.sid == "top"
+
+    ex = sess.explain("top")
+    assert {"sid": "sub", "role": "expert"} in ex["parents"]
+    assert ex["spec_id"] == top.spec_id
+    assert ex["spec"]["op"] == "ties"
+    assert "sub" in ex["expert_ids"]
+
+    # the child is itself a committed, explainable snapshot
+    sub_ex = sess.explain("sub")
+    assert sub_ex["op"] == "dare" and sub_ex["parents"] == []
+
+    # recursive DAG expansion
+    g = sess.merge_graph("top")
+    assert g["sid"] == "top" and g["op"] == "ties"
+    assert [p["sid"] for p in g["parents"]] == ["sub"]
+    assert g["parents"][0]["op"] == "dare"
+    assert g["parents"][0]["expert_ids"] == ids[:2]
+
+    # graph output verifies and loads
+    assert sess.verify("top")
+    arrays = sess.load("top")
+    assert all(np.isfinite(v).all() for v in arrays.values())
+    sess.close()
+
+
+def test_incremental_graph_composition_adopts_committed_child(tmp_path):
+    """A named sub-spec already committed in a prior run_all is adopted,
+    not re-executed and not an error."""
+    sess, stats, ids = _fresh(tmp_path, "incr")
+    sub = MergeSpec.build("base", ids[:2], op="avg", name="sub")
+    first = sess.run(sub)
+    assert first.sid == "sub"
+    with measure(stats) as io:
+        top = sess.run(MergeSpec.build("base", [sub, ids[2]], op="ties",
+                                       theta={"trim_frac": 0.3}, name="top"))
+    assert top.sid == "top"
+    assert {"sid": "sub", "role": "expert"} in sess.explain("top")["parents"]
+    # the sub-merge was adopted: only top's experts were read again
+    assert io["out_written"] > 0
+    # a *different* spec under the same name still fails
+    sess.submit(MergeSpec.build("base", ids, op="ta", name="sub"))
+    with pytest.raises(ValueError, match="different spec"):
+        sess.run_all()
+    sess.close()
+
+
+def test_queue_survives_failed_validation(tmp_path):
+    sess, _stats, ids = _fresh(tmp_path, "qkeep")
+    sess.submit(MergeSpec.build("base", ids, op="avg"), sid="X")
+    sess.submit(MergeSpec.build("base", ids, op="ta"), sid="X")
+    with pytest.raises(ValueError):
+        sess.run_all()
+    assert len(sess._queue) == 2  # nothing dropped; fix and rerun
+    sess._queue[1].requested_sid = "Y"
+    results = sess.run_all()
+    assert {r.sid for r in results} == {"X", "Y"}
+    sess.close()
+
+
+def test_ties_trim_frac_zero_is_valid():
+    from repro.api.spec import OperatorSpec
+
+    s = OperatorSpec("ties", {"trim_frac": 0.0})
+    assert s.theta["trim_frac"] == 0.0
+
+
+def test_shared_subgraph_dedupes_in_batch(tmp_path):
+    """The same sub-merge referenced by two jobs executes exactly once."""
+    sess, _stats, ids = _fresh(tmp_path, "dedupe")
+    sub = MergeSpec.build("base", ids[:2], op="avg", name="shared-sub")
+    sess.submit(MergeSpec.build("base", [sub, ids[2]], op="ties",
+                                theta={"trim_frac": 0.3}), sid="t1")
+    sess.submit(MergeSpec.build("base", [sub, ids[2]], op="avg"), sid="t2")
+    results = sess.run_all()
+    assert {r.sid for r in results} == {"t1", "t2"}
+    # one committed snapshot for the shared child, referenced by both
+    assert sess.catalog.dag_children("shared-sub") == ["t1", "t2"] or set(
+        sess.catalog.dag_children("shared-sub")
+    ) == {"t1", "t2"}
+    sess.close()
+
+
+# ------------------------------------------------------------ serialization
+def test_spec_dict_roundtrip():
+    sub = MergeSpec.build("base", ["e1", "e2"], op="dare",
+                          theta={"density": 0.5, "seed": 1}, name="sub")
+    top = MergeSpec.build("base", [sub, "e0"], op="ties",
+                          theta={"trim_frac": 0.2}, budget="30%",
+                          name="top")
+    doc = top.to_dict()
+    back = MergeSpec.from_dict(json.loads(json.dumps(doc)))
+    assert back.spec_id == top.spec_id
+    assert back.budget == BudgetSpec.parse("30%")
+    assert isinstance(back.experts[0], MergeSpec)
+    assert back.experts[0].spec_id == sub.spec_id
+
+
+def test_load_spec_file_json(tmp_path):
+    doc = {
+        "jobs": [
+            {"base": "base", "experts": ["e0", "e1"], "op": "avg"},
+            {
+                "base": "base",
+                "experts": [
+                    {"base": "base", "experts": ["e0"], "op": "ta",
+                     "theta": {"lam": 0.5}},
+                    "e1",
+                ],
+                "op": "ties",
+                "theta": {"trim_frac": 0.2},
+                "budget": "25%",
+            },
+        ]
+    }
+    p = tmp_path / "spec.json"
+    p.write_text(json.dumps(doc))
+    specs = load_spec_file(str(p))
+    assert len(specs) == 2
+    assert specs[1].budget.kind == "fraction"
+    assert isinstance(specs[1].experts[0], MergeSpec)
+
+
+def test_load_spec_file_yaml(tmp_path):
+    yaml = pytest.importorskip("yaml")
+    p = tmp_path / "spec.yaml"
+    p.write_text(
+        "name: out\nbase: base\nexperts: [e0, e1]\nop: ties\n"
+        "theta: {trim_frac: 0.2}\nbudget: 30%\n"
+    )
+    (spec,) = load_spec_file(str(p))
+    assert spec.name == "out" and spec.op == "ties"
+    assert spec.budget == BudgetSpec.parse("30%")

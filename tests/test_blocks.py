@@ -1,7 +1,15 @@
-"""Block math: unit + hypothesis property tests."""
-import hypothesis.strategies as st
+"""Block math: unit + hypothesis property tests.
+
+The property tests need ``hypothesis``; when it is absent (minimal
+container images) they skip cleanly instead of failing collection.
+"""
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
+)
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import blocks as blk
 

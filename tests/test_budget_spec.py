@@ -1,0 +1,116 @@
+"""BudgetSpec parsing/resolution + the legacy int/float budget footgun."""
+import numpy as np
+import pytest
+
+from repro.api import BudgetSpec
+from repro.api.spec import OperatorSpec
+
+
+# ------------------------------------------------------------------ parsing
+def test_parse_percent():
+    b = BudgetSpec.parse("30%")
+    assert b.kind == "fraction" and b.value == pytest.approx(0.3)
+    assert b.resolve(1000) == 300
+
+
+@pytest.mark.parametrize(
+    "text,expected",
+    [
+        ("2GiB", 2 * 2**30),
+        ("2GB", 2 * 10**9),
+        ("512KiB", 512 * 2**10),
+        ("512kb", 512 * 10**3),
+        ("1.5MiB", int(1.5 * 2**20)),
+        ("123", 123),
+        ("64B", 64),
+    ],
+)
+def test_parse_sizes(text, expected):
+    b = BudgetSpec.parse(text)
+    assert b.kind == "bytes"
+    assert b.resolve() == expected
+
+
+def test_parse_python_numbers():
+    assert BudgetSpec.parse(4096).kind == "bytes"
+    assert BudgetSpec.parse(4096).resolve() == 4096
+    assert BudgetSpec.parse(0.5).kind == "fraction"
+    assert BudgetSpec.parse(None).is_unbounded
+    assert BudgetSpec.parse(None).resolve() is None
+
+
+def test_parse_rejects_ambiguity():
+    with pytest.raises(ValueError):
+        BudgetSpec.parse(1.5)  # float > 1: bytes or percent? refuse
+    with pytest.raises(ValueError):
+        BudgetSpec.parse("0.3")  # bare float string: refuse, suggest %
+    with pytest.raises(ValueError):
+        BudgetSpec.parse("150%")
+    with pytest.raises(TypeError):
+        BudgetSpec.parse(True)
+    with pytest.raises(ValueError):
+        BudgetSpec.parse("lots")
+    with pytest.raises(ValueError):
+        BudgetSpec.parse("5ib")  # 'ib' is not a unit
+
+
+def test_fraction_needs_naive_cost():
+    with pytest.raises(ValueError):
+        BudgetSpec.parse("50%").resolve()
+
+
+def test_roundtrip_json():
+    for b in (BudgetSpec.parse("30%"), BudgetSpec.parse("2GiB"),
+              BudgetSpec.unbounded()):
+        assert BudgetSpec.parse(b.to_json()) == b
+
+
+# ------------------------------------------- legacy resolve_budget semantics
+def test_legacy_budget_one_int_is_one_byte(populated):
+    """budget=1 (int) means ONE BYTE — warned, not reinterpreted."""
+    mp, base, ids, _, _ = populated
+    mp.ensure_analyzed(base, ids)
+    with pytest.warns(UserWarning, match="ONE BYTE"):
+        assert mp.resolve_budget(ids, 1) == 1
+
+
+def test_legacy_budget_one_float_is_full(populated):
+    """budget=1.0 (float) means 100% of the naive expert cost."""
+    mp, base, ids, _, _ = populated
+    mp.ensure_analyzed(base, ids)
+    naive = sum(
+        r[3] for e in ids for r in mp.catalog.tensor_metas(e)
+    )
+    assert mp.resolve_budget(ids, 1.0) == naive
+    assert mp.resolve_budget(ids, 0.5) == naive // 2
+
+
+def test_legacy_budget_none_unbounded(populated):
+    mp, base, ids, _, _ = populated
+    assert mp.resolve_budget(ids, None) is None
+
+
+def test_legacy_budget_accepts_v2_strings(populated):
+    mp, base, ids, _, _ = populated
+    mp.ensure_analyzed(base, ids)
+    assert mp.resolve_budget(ids, "4KiB") == 4096
+
+
+# --------------------------------------------------------- operator schemas
+def test_operator_spec_validates_theta():
+    s = OperatorSpec("ties", {"trim_frac": 0.2, "lam": 1})
+    assert s.theta["lam"] == 1.0  # coerced to float
+    with pytest.raises(ValueError):
+        OperatorSpec("ties", {"trim_frac": 1.5})
+    with pytest.raises(ValueError):
+        OperatorSpec("ties", {"density": 0.5})  # dare-only key
+    with pytest.raises(ValueError):
+        OperatorSpec("avg", {"_masks": np.ones(3)})  # reserved
+    with pytest.raises(KeyError):
+        OperatorSpec("slerp", {})
+
+
+def test_operator_spec_lenient_mode_warns():
+    with pytest.warns(UserWarning, match="does not accept"):
+        s = OperatorSpec("ties", {"unknown_knob": 3}, strict=False)
+    assert s.theta["unknown_knob"] == 3

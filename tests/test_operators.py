@@ -1,9 +1,13 @@
 """Merge operators: semantics + hypothesis properties."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis.extra.numpy import arrays
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
+)
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis.extra.numpy import arrays  # noqa: E402
 
 from repro.core import operators as ops
 

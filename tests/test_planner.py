@@ -1,8 +1,12 @@
 """Planner: budget feasibility, monotonicity, fallback, determinism."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
+)
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.core import cost as cost_model
 from repro.core.planner import plan_merge
