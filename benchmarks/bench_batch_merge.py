@@ -68,7 +68,7 @@ def run(ks=(8,), job_counts=(3, 5, 8), op="ties") -> None:
                     )
                 with measure(sess.stats) as batch_io:
                     t0 = time.time()
-                    results = sess.run_all(shared_reads=True)
+                    results = sess.run_all(shared_reads=True, compute="stream")  # pin: isolate shared-read effect from the engine choice
                     batch_wall = time.time() - t0
                 batch = results[0].stats["batch"]
                 # shared schedule must beat per-job reads

@@ -19,6 +19,7 @@ from benchmarks import (
     bench_merge_compute,
     bench_operators,
     bench_overheads,
+    bench_pipeline,
     bench_planner_scale,
     bench_quality,
     bench_roofline,
@@ -54,6 +55,11 @@ ALL = {
     "batch_merge": lambda fast: bench_batch_merge.run(
         ks=(4,) if fast else (8,),
         job_counts=(3,) if fast else (3, 5, 8)),
+    "pipeline": lambda fast: bench_pipeline.run(
+        ks=(4,) if fast else (8,),
+        depths=(2,) if fast else (1, 2, 4),
+        repeats=1 if fast else 2,
+        include_batched=not fast),
 }
 
 

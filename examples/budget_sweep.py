@@ -54,7 +54,7 @@ def main() -> None:
         ]
         with measure(stats) as io:
             t0 = time.time()
-            results = sess.run_all(shared_reads=True)
+            results = sess.run_all(shared_reads=True, compute="stream")  # same engine as the sequential baseline
             wall = time.time() - t0
 
         batch = results[0].stats["batch"]

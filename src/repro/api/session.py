@@ -33,7 +33,7 @@ from repro.api.spec import MergeSpec
 from repro.core import blocks as blk
 from repro.core import cost as cost_model
 from repro.core.catalog import Catalog
-from repro.core.executor import MergeResult, execute_merge
+from repro.core.executor import MergeResult, PipelineConfig, execute_merge
 from repro.core.lineage import explain as _explain
 from repro.core.lineage import lineage_chain, merge_graph, verify_snapshot
 from repro.core.planner import BatchJob, plan_batch
@@ -170,10 +170,11 @@ class Session:
         self,
         shared_reads: bool = True,
         shared_budget: BudgetLike = None,
-        compute: str = "stream",
+        compute: str = "pipelined",
         coalesce: bool = True,
         analyze: bool = True,
         cache_max_bytes: Union[int, None, str] = "auto",
+        pipeline: Optional[PipelineConfig] = None,
     ) -> List[MergeResult]:
         """Plan and execute every queued job, sharing expert block reads.
 
@@ -183,6 +184,11 @@ class Session:
         expert set.  ``cache_max_bytes`` bounds the per-level shared-read
         cache (``"auto"`` = 1 GiB, ``None`` = unbounded); blocks beyond
         the cap stream uncached, trading sharing for bounded memory.
+
+        ``compute`` defaults to the overlapped ``"pipelined"`` engine
+        (prefetch → windowed vectorized compute → write-behind,
+        bit-identical to ``"stream"``; see docs/EXECUTION.md); ``pipeline``
+        optionally tunes its window/queue-depth knobs.
         Returns results in submission order.
         """
         if cache_max_bytes == "auto":
@@ -273,6 +279,7 @@ class Session:
                 coalesce=coalesce,
                 analyze=analyze,
                 cache_max_bytes=cache_max_bytes,
+                pipeline=pipeline,
             )
 
         # -- 4. hand results back in submission order ---------------------
@@ -308,6 +315,7 @@ class Session:
         coalesce: bool,
         analyze: bool,
         cache_max_bytes: Optional[int],
+        pipeline: Optional[PipelineConfig] = None,
     ) -> Dict:
         # deterministic order: by spec content digest, then requested sid
         # (identical specs executing under distinct names)
@@ -405,6 +413,7 @@ class Session:
                     compute=compute,
                     coalesce=coalesce,
                     expert_readers=expert_readers,
+                    pipeline=pipeline,
                 )
                 result.stats["plan"] = pr.stats
                 node.sid = result.sid
@@ -432,15 +441,16 @@ class Session:
         self,
         spec: Union[MergeSpec, Dict],
         sid: Optional[str] = None,
-        compute: str = "stream",
+        compute: str = "pipelined",
         coalesce: bool = True,
         analyze: bool = True,
+        pipeline: Optional[PipelineConfig] = None,
     ) -> MergeResult:
         """Submit one spec (possibly a whole merge graph) and execute it."""
         handle = self.submit(spec, sid=sid)
         self.run_all(
             shared_reads=True, compute=compute, coalesce=coalesce,
-            analyze=analyze,
+            analyze=analyze, pipeline=pipeline,
         )
         assert handle.result is not None
         return handle.result

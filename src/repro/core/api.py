@@ -40,7 +40,7 @@ import numpy as np
 from repro.core import blocks as blk
 from repro.core import cost as cost_model
 from repro.core.catalog import Catalog
-from repro.core.executor import MergeResult, execute_merge
+from repro.core.executor import MergeResult, PipelineConfig, execute_merge
 from repro.core.lineage import explain as _explain
 from repro.core.lineage import lineage_chain, verify_snapshot
 from repro.core.plan import MergePlan
@@ -171,6 +171,7 @@ class MergePipe:
         analyze: bool = True,
         conflict_aware: bool = True,
         reuse_plan: bool = True,
+        pipeline: Optional[PipelineConfig] = None,
     ) -> MergeResult:
         """ANALYZE (cached) -> PLAN -> EXECUTE -> COMMIT.
 
@@ -196,7 +197,8 @@ class MergePipe:
             reuse_plan=reuse_plan,
         )
         return self.session().run(
-            spec, sid=sid, compute=compute, coalesce=coalesce, analyze=analyze
+            spec, sid=sid, compute=compute, coalesce=coalesce,
+            analyze=analyze, pipeline=pipeline,
         )
 
     def session(self) -> "Any":
@@ -214,10 +216,11 @@ class MergePipe:
         sid: Optional[str] = None,
         compute: str = "stream",
         coalesce: bool = True,
+        pipeline: Optional[PipelineConfig] = None,
     ) -> MergeResult:
         return execute_merge(
             plan, self.snapshots, self.catalog, sid=sid, txn=self.txn,
-            compute=compute, coalesce=coalesce,
+            compute=compute, coalesce=coalesce, pipeline=pipeline,
         )
 
     # ---------------------------------------------------------------- audit

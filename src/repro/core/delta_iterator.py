@@ -17,9 +17,21 @@ selected blocks become one sequential read — beyond-paper optimization;
 set ``coalesce=False`` for the paper-faithful per-block I/O pattern).
 Both paths move exactly the same expert bytes; only the syscall pattern
 differs, so budget accounting is identical.
+
+Two materialization modes:
+
+* **lazy** (default) — the first ``pull`` reads the tensor's whole
+  realized selection per expert (the stream/batched executor paths);
+* **windowed** — the pipelined executor calls ``prefetch(blocks)`` ahead
+  of compute (from its reader pool) and ``release_blocks(blocks)`` /
+  ``release_adapters()`` behind it, so resident expert blocks stay
+  bounded by the pipeline window instead of the tensor's full selection.
+  ``pull`` then serves from the window cache only and performs **no I/O
+  on the compute thread**.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -40,6 +52,7 @@ class _ExpertTensorSource:
         selected: Sequence[int],
         block_size: int,
         coalesce: bool,
+        windowed: bool = False,
     ):
         self.reader = reader
         self.tensor_id = tensor_id
@@ -48,10 +61,16 @@ class _ExpertTensorSource:
         self.kind = reader.meta.get("kind", "full")
         self.scale = float(reader.meta.get("scale", 1.0))
         self.selected = list(selected)
+        self._selected_set = frozenset(self.selected)
         self.coalesce = coalesce
+        self.windowed = windowed
         self._cache: Dict[int, np.ndarray] = {}
         self._adapter_delta: Optional[np.ndarray] = None
         self._prefetched = False
+        #: serializes adapter materialization when the pipelined engine
+        #: stages several windows of this tensor concurrently (the block
+        #: sets are disjoint, but the factor read must happen once)
+        self._adapter_lock = threading.Lock()
 
     # ---------------------------------------------------------------- kinds
     def _prefetch_direct(self) -> None:
@@ -80,15 +99,81 @@ class _ExpertTensorSource:
         self._adapter_delta = delta.reshape(-1).astype(self.base_spec.dtype)
         self._prefetched = True
 
+    # ------------------------------------------------- windowed prefetch
+    def prefetch(self, blocks: Sequence[int]) -> int:
+        """Read the plan-selected subset of ``blocks`` ahead of compute.
+
+        Called from the pipelined executor's reader pool (never from the
+        compute thread).  Returns the number of expert blocks now newly
+        resident, so the engine can account in-flight memory.  Adapter
+        experts materialize their (tiny-factor) Δ-tensor on first touch
+        and count as one resident unit thereafter.
+        """
+        want = [
+            b for b in blocks if b in self._selected_set and b not in self._cache
+        ]
+        if not want:
+            return 0
+        if self.kind == "adapter":
+            with self._adapter_lock:
+                if self._prefetched:
+                    return 0
+                self._materialize_adapter()
+            return 1
+        if self.coalesce:
+            self._cache.update(
+                self.reader.read_blocks_coalesced(
+                    self.tensor_id, want, self.block_size, "expert"
+                )
+            )
+        else:
+            for b in want:
+                self._cache[b] = self.reader.read_block(
+                    self.tensor_id, b, self.block_size, "expert"
+                )
+        self._prefetched = True
+        return len(want)
+
+    def release_blocks(self, blocks: Sequence[int]) -> int:
+        """Drop exactly these cached blocks (one retired window; windows
+        are disjoint, so concurrent staging of other windows is unaffected).
+        The adapter Δ-tensor is kept until the tensor finishes — it is
+        materialized once per tensor and sliced by every window — and is
+        retired via :meth:`release_adapter`."""
+        if self.kind == "adapter":
+            return 0
+        n = 0
+        for b in blocks:
+            if self._cache.pop(b, None) is not None:
+                n += 1
+        return n
+
+    def release_adapter(self) -> int:
+        """Drop the materialized adapter Δ-tensor (tensor complete).
+        Returns the resident units retired (matching what ``prefetch``
+        charged), so the engine's residency gauge balances."""
+        if self._adapter_delta is None:
+            return 0
+        self._adapter_delta = None
+        return 1
+
+    def resident_blocks(self) -> int:
+        return len(self._cache) + (1 if self._adapter_delta is not None else 0)
+
     def has_tensor(self) -> bool:
         if self.kind == "adapter":
             return f"{self.tensor_id}::lora_A" in self.reader.specs
         return self.tensor_id in self.reader.specs
 
     def pull(self, block_idx: int) -> Optional[np.ndarray]:
-        if block_idx not in self.selected:
+        if block_idx not in self._selected_set:
             return None
         if not self._prefetched:
+            if self.windowed:
+                raise RuntimeError(
+                    f"windowed source for {self.tensor_id}: block {block_idx} "
+                    f"pulled before prefetch (pipeline ordering bug)"
+                )
             if self.kind == "adapter":
                 self._materialize_adapter()
             else:
@@ -101,7 +186,13 @@ class _ExpertTensorSource:
             lo = rng.offset // itemsize
             hi = rng.end // itemsize
             return self._adapter_delta[lo:hi]
-        return self._cache.get(block_idx)
+        arr = self._cache.get(block_idx)
+        if arr is None and self.windowed:
+            raise RuntimeError(
+                f"windowed source for {self.tensor_id}: selected block "
+                f"{block_idx} not resident (released early or never prefetched)"
+            )
+        return arr
 
 
 class DeltaIterator:
@@ -114,6 +205,7 @@ class DeltaIterator:
         base_reader: ModelReader,
         expert_readers: Dict[str, ModelReader],
         coalesce: bool = True,
+        windowed: bool = False,
     ):
         self.tensor_id = tensor_id
         self.plan = plan
@@ -132,9 +224,31 @@ class DeltaIterator:
                 sel,
                 self.block_size,
                 coalesce,
+                windowed=windowed,
             )
             if src.has_tensor():
                 self._sources.append((ei, e, src))
+
+    # ------------------------------------------------- windowed prefetch
+    def prefetch_source(self, source_pos: int, blocks: Sequence[int]) -> int:
+        """Prefetch one expert source's share of a window (the pipelined
+        engine fans sources out over its reader pool as separate tasks)."""
+        return self._sources[source_pos][2].prefetch(blocks)
+
+    @property
+    def n_sources(self) -> int:
+        return len(self._sources)
+
+    def release_blocks(self, blocks: Sequence[int]) -> int:
+        """Retire a completed window: drop exactly its resident blocks."""
+        return sum(src.release_blocks(blocks) for _, _, src in self._sources)
+
+    def release_adapters(self) -> int:
+        """Retire materialized adapter Δ-tensors (tensor complete)."""
+        return sum(src.release_adapter() for _, _, src in self._sources)
+
+    def resident_blocks(self) -> int:
+        return sum(src.resident_blocks() for _, _, src in self._sources)
 
     def pull(
         self, block_idx: int, base_block: np.ndarray

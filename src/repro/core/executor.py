@@ -10,16 +10,32 @@ The engine enforces a planner-produced plan π:
     immutable snapshot with full lineage (touch maps + per-block expert
     coverage).
 
-Two compute paths apply the operator:
-  ``stream``  — per-block numpy apply (paper-faithful CPU streaming);
-  ``batched`` — stacks same-width blocks and calls the jitted kernel
-                wrappers in :mod:`repro.kernels.ops` (TPU-native path;
-                beyond-paper optimization, bit-identical results are
-                asserted in tests).
+Three compute paths apply the operator:
+  ``stream``    — per-block numpy apply (paper-faithful CPU streaming);
+  ``batched``   — stacks same-width blocks and calls the jitted kernel
+                  wrappers in :mod:`repro.kernels.ops` (TPU-native path;
+                  beyond-paper optimization, tolerance-level equivalent);
+  ``pipelined`` — the overlapped streaming engine (default for the v2
+                  Session/CLI): a prefetch stage reads base + plan-selected
+                  expert blocks ahead of compute over a small thread pool,
+                  a compute stage drains bounded windows and applies the
+                  operator vectorized per (K_sel, width) group, and a
+                  write-behind stage streams finished blocks into the
+                  staging writer — so wall-time approaches
+                  max(read, compute, write) instead of their sum, with
+                  resident memory bounded by the window (no whole-tensor
+                  buffering).  Outputs are **bit-identical** to ``stream``
+                  and expert I/O follows the plan's realized read set
+                  exactly, so budget soundness accounting is unchanged.
+                  See docs/EXECUTION.md.
 """
 from __future__ import annotations
 
+import dataclasses
+import queue
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -27,11 +43,11 @@ import numpy as np
 from repro.core import blocks as blk
 from repro.core.catalog import Catalog
 from repro.core.delta_iterator import DeltaIterator
-from repro.core.operators import apply_operator, dare_mask
+from repro.core.operators import apply_operator, dare_mask_batch
 from repro.core.plan import MergePlan
 from repro.core.transactions import TransactionManager
 from repro.store.iostats import IOStats
-from repro.store.snapshot import SnapshotStore
+from repro.store.snapshot import SnapshotStore, WriteBehindWriter
 
 
 def _ranges_from_indices(idxs: List[int]) -> List[Tuple[int, int]]:
@@ -50,6 +66,67 @@ def _ranges_from_indices(idxs: List[int]) -> List[Tuple[int, int]]:
     return runs
 
 
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Tuning knobs for the overlapped (``compute="pipelined"``) engine.
+
+    window_blocks     — blocks per compute window (vectorization batch and
+                        the unit of bounded buffering).
+    prefetch_windows  — max fully-read windows queued ahead of compute
+                        (prefetch depth; back-pressure beyond this).
+    read_threads      — thread-pool size for base/expert block reads
+                        (pread-based readers, safe under concurrency).
+    write_queue_blocks — bound on output blocks queued behind compute.
+    kernel            — "numpy": vectorized numpy apply, bit-identical to
+                        the stream path (default; the golden-test
+                        invariant).  "jax": the jitted kernel wrappers in
+                        :mod:`repro.kernels.ops` (Pallas on TPU) —
+                        tolerance-level equivalent on CPU, use on
+                        accelerators.
+    """
+
+    window_blocks: int = 32
+    prefetch_windows: int = 2
+    read_threads: int = 4
+    write_queue_blocks: int = 64
+    kernel: str = "numpy"
+
+    # NOTE on the numpy kernel: blocks are *prepared* (expert deltas
+    # pulled, upcast, DARE masks generated) window-at-a-time on the
+    # prefetch pool, but the operator applies per block — profiling shows
+    # per-block working sets stay L2-resident while (NB, K, w) stacks are
+    # memory-bandwidth-bound and *slower* on CPU.  The jax kernel groups
+    # whole windows by (K_sel, width) and calls the jitted wrappers,
+    # where batching does pay (one dispatch per group, Pallas on TPU).
+
+    def validate(self) -> None:
+        if self.window_blocks < 1:
+            raise ValueError(f"window_blocks must be >= 1, got {self.window_blocks}")
+        if self.prefetch_windows < 1:
+            raise ValueError(
+                f"prefetch_windows must be >= 1, got {self.prefetch_windows}"
+            )
+        if self.read_threads < 1:
+            raise ValueError(f"read_threads must be >= 1, got {self.read_threads}")
+        if self.write_queue_blocks < 1:
+            raise ValueError(
+                f"write_queue_blocks must be >= 1, got {self.write_queue_blocks}"
+            )
+        if self.kernel not in ("numpy", "jax"):
+            raise ValueError(f"unknown pipeline kernel {self.kernel!r}")
+
+    def max_resident_blocks(self, n_experts: int) -> int:
+        """Bound on simultaneously resident input block slots: up to
+        ``prefetch_windows + 1`` windows staging on the pool, plus
+        ``prefetch_windows`` queued, plus one in compute; each window may
+        transiently hold, per block, the base block, K expert cache
+        blocks, and the K pulled delta rows materialized from them
+        (write-behind output is bounded separately by
+        ``write_queue_blocks``)."""
+        windows_in_flight = 2 * self.prefetch_windows + 2
+        return windows_in_flight * self.window_blocks * (1 + 2 * n_experts)
+
+
 class MergeResult:
     def __init__(self, sid: str, manifest: Dict, stats: Dict):
         self.sid = sid
@@ -58,6 +135,13 @@ class MergeResult:
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"MergeResult(sid={self.sid!r}, stats={self.stats})"
+
+
+def _is_mergeable(spec) -> bool:
+    """Float tensors are merged; ints/bools pass through as base."""
+    return np.issubdtype(
+        np.asarray([], dtype=spec.dtype).dtype, np.floating
+    ) or spec["dtype"] in ("bfloat16", "float16", "float32", "float64")
 
 
 def execute_merge(
@@ -71,6 +155,7 @@ def execute_merge(
     validate: bool = True,
     enforce_budget: bool = True,
     expert_readers: Optional[Dict[str, object]] = None,
+    pipeline: Optional[PipelineConfig] = None,
 ) -> MergeResult:
     """Run Algorithm 2 for plan π and return the committed snapshot.
 
@@ -80,6 +165,9 @@ def execute_merge(
     one physical scan of an expert block fans out to every job in the
     batch that selected it.  Injected readers are owned by the caller
     and are NOT closed on return.
+
+    ``pipeline`` tunes the overlapped engine when ``compute="pipelined"``
+    (ignored otherwise); ``None`` uses :class:`PipelineConfig` defaults.
     """
     t0 = time.time()
     stats: IOStats = snapshots.stats
@@ -87,8 +175,14 @@ def execute_merge(
     txn = txn or TransactionManager(snapshots, catalog)
     sid = sid or TransactionManager.new_sid()
 
+    kernel_ops = None
     if compute == "batched":
         from repro.kernels import ops as kernel_ops  # lazy: jax import
+    elif compute == "pipelined":
+        pipeline = pipeline or PipelineConfig()
+        pipeline.validate()
+        if pipeline.kernel == "jax":
+            from repro.kernels import ops as kernel_ops  # lazy: jax import
     elif compute != "stream":
         raise ValueError(f"unknown compute mode {compute!r}")
     owns_expert_readers = expert_readers is None
@@ -113,58 +207,60 @@ def execute_merge(
     is_dare = plan.op.lower() == "dare"
 
     realized_expert_blocks = 0
+    pipe_stats: Optional[Dict] = None
     try:
         # -- (1) Stream selected blocks under plan π -----------------------
-        for tensor_id in plan.tensor_order:
-            spec = base_reader.spec(tensor_id)
-            writer.begin_tensor(tensor_id, spec.shape, spec.dtype)
-            rev = plan.reverse_index(tensor_id)
-            mergeable = np.issubdtype(
-                np.asarray([], dtype=spec.dtype).dtype, np.floating
-            ) or spec["dtype"] in ("bfloat16", "float16", "float32", "float64")
-            D = DeltaIterator(
-                tensor_id, plan, base_reader, expert_readers, coalesce=coalesce
+        if compute == "pipelined":
+            engine = _PipelineEngine(
+                plan, writer, base_reader, expert_readers, theta, seed,
+                is_dare, pipeline, kernel_ops, coalesce, touch, coverage_rows,
             )
-            n_blocks = blk.num_blocks(spec.nbytes, plan.block_size)
-            touched: List[int] = []
-
-            if compute == "batched" and mergeable:
-                _run_tensor_batched(
-                    kernel_ops, plan, writer, base_reader, D, rev,
-                    tensor_id, spec, n_blocks, theta, seed, is_dare,
-                    touched, coverage_rows,
+            realized_expert_blocks, pipe_stats = engine.run()
+        else:
+            for tensor_id in plan.tensor_order:
+                spec = base_reader.spec(tensor_id)
+                writer.begin_tensor(tensor_id, spec.shape, spec.dtype)
+                rev = plan.reverse_index(tensor_id)
+                mergeable = _is_mergeable(spec)
+                D = DeltaIterator(
+                    tensor_id, plan, base_reader, expert_readers,
+                    coalesce=coalesce,
                 )
-                realized_expert_blocks += sum(len(v) for v in rev.values())
-            else:
-                for b in range(n_blocks):
-                    x0 = base_reader.read_block(
-                        tensor_id, b, plan.block_size, "base"
+                n_blocks = blk.num_blocks(spec.nbytes, plan.block_size)
+                touched: List[int] = []
+
+                if compute == "batched" and mergeable:
+                    _run_tensor_batched(
+                        kernel_ops, plan, writer, base_reader, D, rev,
+                        tensor_id, spec, n_blocks, theta, seed, is_dare,
+                        touched, coverage_rows,
                     )
-                    if mergeable and b in rev:
-                        deltas, eidxs, eids = D.pull(b, x0)
-                        realized_expert_blocks += len(eids)
-                        if is_dare and len(eids):
-                            theta["_masks"] = np.stack(
-                                [
-                                    dare_mask(
-                                        seed, ei, tensor_id, b, x0.size,
-                                        float(theta.get("density", 0.5)),
-                                    )
-                                    for ei in eidxs
-                                ]
-                            )
-                        x = apply_operator(x0, deltas, plan.op, theta)
-                        theta.pop("_masks", None)
-                        if len(eids):
-                            touched.append(b)
-                            coverage_rows.append(
-                                (tensor_id, b, ",".join(eids))
-                            )
-                    else:
-                        x = x0  # base passthrough (no expert selected)
-                    writer.write_block(tensor_id, b, x)
-            writer.finish_tensor(tensor_id)
-            touch[tensor_id] = touched
+                    realized_expert_blocks += sum(len(v) for v in rev.values())
+                else:
+                    for b in range(n_blocks):
+                        x0 = base_reader.read_block(
+                            tensor_id, b, plan.block_size, "base"
+                        )
+                        if mergeable and b in rev:
+                            deltas, eidxs, eids = D.pull(b, x0)
+                            realized_expert_blocks += len(eids)
+                            if is_dare and len(eids):
+                                theta["_masks"] = dare_mask_batch(
+                                    seed, eidxs, tensor_id, b, x0.size,
+                                    float(theta.get("density", 0.5)),
+                                )
+                            x = apply_operator(x0, deltas, plan.op, theta)
+                            theta.pop("_masks", None)
+                            if len(eids):
+                                touched.append(b)
+                                coverage_rows.append(
+                                    (tensor_id, b, ",".join(eids))
+                                )
+                        else:
+                            x = x0  # base passthrough (no expert selected)
+                        writer.write_block(tensor_id, b, x)
+                writer.finish_tensor(tensor_id)
+                touch[tensor_id] = touched
 
         # -- (2) Validate and atomically publish --------------------------
         if validate:
@@ -228,6 +324,8 @@ def execute_merge(
         "compute": compute,
         "coalesce": coalesce,
     }
+    if pipe_stats is not None:
+        run_stats["pipeline"] = pipe_stats
     return MergeResult(sid, manifest, run_stats)
 
 
@@ -286,14 +384,9 @@ def _run_tensor_batched(
         if is_dare:
             masks = np.stack(
                 [
-                    np.stack(
-                        [
-                            dare_mask(
-                                seed, ei, tensor_id, b, width,
-                                float(theta.get("density", 0.5)),
-                            )
-                            for ei in eidxs_per_block[b]
-                        ]
+                    dare_mask_batch(
+                        seed, eidxs_per_block[b], tensor_id, b, width,
+                        float(theta.get("density", 0.5)),
                     )
                     for b in idxs
                 ]
@@ -305,3 +398,333 @@ def _run_tensor_batched(
 
     for b in range(n_blocks):
         writer.write_block(tensor_id, b, out_blocks[b])
+
+
+# ======================================================================
+# Pipelined streaming engine (compute="pipelined")
+# ======================================================================
+
+class _TensorTask:
+    """Per-tensor state shared between the prefetch and compute stages."""
+
+    __slots__ = ("tensor_id", "spec", "n_blocks", "mergeable", "rev", "D",
+                 "touched")
+
+    def __init__(self, tensor_id, spec, n_blocks, mergeable, rev, D):
+        self.tensor_id = tensor_id
+        self.spec = spec
+        self.n_blocks = n_blocks
+        self.mergeable = mergeable
+        self.rev = rev
+        self.D = D
+        self.touched: List[int] = []
+
+
+class _ResidencyGauge:
+    """Counts in-flight input block slots (base + expert) across stages —
+    the bounded-memory invariant is asserted against its peak."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.current = 0
+        self.peak = 0
+
+    def add(self, n: int) -> None:
+        if n <= 0:
+            return
+        with self._lock:
+            self.current += n
+            if self.current > self.peak:
+                self.peak = self.current
+
+    def sub(self, n: int) -> None:
+        if n <= 0:
+            return
+        with self._lock:
+            self.current -= n
+
+
+class _PipelineEngine:
+    """Three overlapped stages over bounded queues (Algorithm 2, split):
+
+        prefetch (thread + pool) --> [window queue] --> compute (caller
+        thread) --> [write queue] --> write-behind (thread)
+
+    The prefetch stage performs *all* physical input I/O: base blocks and
+    the plan-selected expert blocks of each window (via the windowed
+    :class:`DeltaIterator` hooks), over thread-safe pread readers.  The
+    compute stage pulls deltas from the prefetched window cache (zero
+    I/O), groups blocks by (K_sel, width) like the batched path — but
+    windowed, so memory stays bounded — and applies the operator
+    vectorized.  Finished blocks stream to the
+    :class:`~repro.store.snapshot.WriteBehindWriter` so output writes
+    overlap the next window's reads and compute.
+    """
+
+    _DONE = ("done", None, None, None)
+
+    def __init__(
+        self,
+        plan: MergePlan,
+        writer,
+        base_reader,
+        expert_readers: Dict[str, object],
+        theta: Dict,
+        seed: int,
+        is_dare: bool,
+        cfg: PipelineConfig,
+        kernel_ops,
+        coalesce: bool,
+        touch: Dict[str, List[int]],
+        coverage_rows: List[Tuple[str, int, str]],
+    ):
+        self.plan = plan
+        self.base_reader = base_reader
+        self.expert_readers = expert_readers
+        self.theta = theta
+        self.seed = seed
+        self.is_dare = is_dare
+        self.cfg = cfg
+        self.kernel_ops = kernel_ops  # None => bit-identical numpy kernel
+        self.coalesce = coalesce
+        self.touch = touch
+        self.coverage_rows = coverage_rows
+        self.realized_expert_blocks = 0
+        self.gauge = _ResidencyGauge()
+        self.windows = 0
+        self.wb = WriteBehindWriter(writer, cfg.write_queue_blocks)
+        self.pool = ThreadPoolExecutor(
+            max_workers=cfg.read_threads, thread_name_prefix="mergepipe-read"
+        )
+        self.q: "queue.Queue" = queue.Queue(maxsize=cfg.prefetch_windows)
+        self.stop = threading.Event()
+
+    # ------------------------------------------------------------- stage 1
+    def _read_base_window(self, tensor_id: str, window: List[int]) -> Dict:
+        if self.coalesce:
+            out = self.base_reader.read_blocks_coalesced(
+                tensor_id, window, self.plan.block_size, "base"
+            )
+        else:
+            out = {
+                b: self.base_reader.read_block(
+                    tensor_id, b, self.plan.block_size, "base"
+                )
+                for b in window
+            }
+        self.gauge.add(len(window))
+        return out
+
+    def _stage_window(self, task: _TensorTask, window: List[int]) -> Tuple:
+        """One pool task = the full input side of one window: read the
+        base run, read the plan-selected expert blocks, then pull/upcast
+        the delta stacks and generate DARE masks — so the compute thread
+        receives ready-to-apply inputs and only does operator math.
+        Multiple windows stage concurrently on the pool (pread readers
+        are offset-explicit, block sets are disjoint)."""
+        base_blocks = self._read_base_window(task.tensor_id, window)
+        pulled: Dict[int, Tuple] = {}
+        if task.D is not None:
+            for si in range(task.D.n_sources):
+                self.gauge.add(task.D.prefetch_source(si, window))
+            density = float(self.theta.get("density", 0.5))
+            for b in window:
+                if b not in task.rev:
+                    continue
+                deltas, eidxs, eids = task.D.pull(b, base_blocks[b])
+                masks = None
+                if self.is_dare and eidxs:
+                    masks = dare_mask_batch(
+                        self.seed, eidxs, task.tensor_id, b,
+                        base_blocks[b].size, density,
+                    )
+                pulled[b] = (deltas, eidxs, eids, masks)
+                self.gauge.add(deltas.shape[0])
+            # expert cache slots are now materialized into delta stacks
+            self.gauge.sub(task.D.release_blocks(window))
+        return base_blocks, pulled
+
+    def _produce(self) -> None:
+        try:
+            # how many windows may be staging on the pool at once, beyond
+            # the queued ones (the window queue itself is the main bound)
+            lookahead = self.cfg.prefetch_windows + 1
+            pending: List[Tuple] = []  # (kind, task, window, future|None)
+            outstanding = 0
+
+            def flush_one() -> None:
+                nonlocal outstanding
+                kind, task, window, fut = pending.pop(0)
+                payload = None
+                if fut is not None:
+                    payload = fut.result()  # propagates staging errors
+                    outstanding -= 1
+                self._put((kind, task, window, payload))
+
+            for tensor_id in self.plan.tensor_order:
+                spec = self.base_reader.spec(tensor_id)
+                n_blocks = blk.num_blocks(spec.nbytes, self.plan.block_size)
+                mergeable = _is_mergeable(spec)
+                rev = self.plan.reverse_index(tensor_id) if mergeable else {}
+                D = None
+                if mergeable and rev:
+                    D = DeltaIterator(
+                        tensor_id, self.plan, self.base_reader,
+                        self.expert_readers, coalesce=self.coalesce,
+                        windowed=True,
+                    )
+                task = _TensorTask(tensor_id, spec, n_blocks, mergeable, rev, D)
+                pending.append(("tensor", task, None, None))
+                W = self.cfg.window_blocks
+                for ws in range(0, n_blocks, W):
+                    if self.stop.is_set():
+                        return
+                    window = list(range(ws, min(n_blocks, ws + W)))
+                    pending.append(
+                        ("window", task, window,
+                         self.pool.submit(self._stage_window, task, window))
+                    )
+                    outstanding += 1
+                    while outstanding > lookahead:
+                        flush_one()
+            while pending:
+                if self.stop.is_set():
+                    return
+                flush_one()
+            self._put(_PipelineEngine._DONE)
+        except BaseException as e:  # noqa: BLE001 — re-raised on caller thread
+            self._put(("error", e, None, None))
+
+    def _put(self, item) -> None:
+        while not self.stop.is_set():
+            try:
+                self.q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    # ------------------------------------------------------------- stage 2
+    def _compute_window(
+        self, task: _TensorTask, window: List[int], base_blocks: Dict,
+        pulled: Dict[int, Tuple],
+    ) -> None:
+        out: Dict[int, np.ndarray] = {}
+        retired: Dict[int, int] = {}
+        merged: List[int] = []
+        for b in window:
+            got = pulled.get(b)
+            if got is None:
+                out[b] = base_blocks[b]
+                retired[b] = 1
+                continue
+            deltas, eidxs, eids, _masks = got
+            self.realized_expert_blocks += len(eids)
+            if eids:
+                task.touched.append(b)
+                self.coverage_rows.append((task.tensor_id, b, ",".join(eids)))
+            retired[b] = 1 + deltas.shape[0]
+            if deltas.shape[0] == 0:
+                out[b] = base_blocks[b]
+            else:
+                merged.append(b)
+
+        if self.kernel_ops is None:
+            # per-block numpy apply — bit-identical to the stream path and
+            # cache-resident (see the PipelineConfig note)
+            for b in merged:
+                deltas, eidxs, eids, masks = pulled[b]
+                if masks is not None:
+                    self.theta["_masks"] = masks
+                out[b] = apply_operator(
+                    base_blocks[b], deltas, self.plan.op, self.theta
+                )
+                self.theta.pop("_masks", None)
+        elif merged:
+            # jitted wrappers: group by (K_sel, width) like the batched
+            # path — but windowed, so stacks stay bounded
+            groups: Dict[Tuple[int, int], List[int]] = {}
+            for b in merged:
+                k_sel = pulled[b][0].shape[0]
+                groups.setdefault((k_sel, base_blocks[b].size), []).append(b)
+            for (k_sel, width), idxs in groups.items():
+                x0s = np.stack([base_blocks[b] for b in idxs])
+                Ds = np.stack([pulled[b][0] for b in idxs])
+                masks = None
+                if self.is_dare:
+                    masks = np.stack([pulled[b][3] for b in idxs])
+                outs = self.kernel_ops.merge_blocks(
+                    self.plan.op, np.asarray(x0s, np.float32), Ds,
+                    self.theta, masks=masks,
+                )
+                outs = np.asarray(outs).astype(x0s.dtype)
+                for j, b in enumerate(idxs):
+                    out[b] = outs[j]
+
+        for b in window:
+            self.wb.write_block(task.tensor_id, b, out[b])
+            self.gauge.sub(retired[b])  # base + delta slots retired
+        self.windows += 1
+
+    def _finish_tensor(self, task: _TensorTask) -> None:
+        self.wb.finish_tensor(task.tensor_id)
+        self.touch[task.tensor_id] = task.touched
+        if task.D is not None:
+            # all of this tensor's windows are computed by the time its
+            # finish marker is consumed — retire the adapter Δ-tensors so
+            # the residency gauge balances (and the memory is freed)
+            self.gauge.sub(task.D.release_adapters())
+
+    def _consume(self) -> None:
+        current: Optional[_TensorTask] = None
+        while True:
+            kind, a, window, payload = self.q.get()
+            if kind == "error":
+                raise a
+            if kind == "done":
+                if current is not None:
+                    self._finish_tensor(current)
+                return
+            if kind == "tensor":
+                if current is not None:
+                    self._finish_tensor(current)
+                current = a
+                self.wb.begin_tensor(
+                    current.tensor_id, current.spec.shape, current.spec.dtype
+                )
+                continue
+            base_blocks, pulled = payload
+            self._compute_window(a, window, base_blocks, pulled)
+
+    # ------------------------------------------------------------ lifecycle
+    def run(self) -> Tuple[int, Dict]:
+        producer = threading.Thread(
+            target=self._produce, name="mergepipe-prefetch", daemon=True
+        )
+        producer.start()
+        ok = False
+        try:
+            self._consume()
+            self.wb.flush()
+            ok = True
+        finally:
+            self.stop.set()
+            try:  # unblock a producer stuck on a full window queue
+                while True:
+                    self.q.get_nowait()
+            except queue.Empty:
+                pass
+            producer.join()
+            self.pool.shutdown(wait=True)
+            self.wb.close(discard=not ok)
+        n_experts = len(self.plan.expert_ids)
+        return self.realized_expert_blocks, {
+            "windows": self.windows,
+            "window_blocks": self.cfg.window_blocks,
+            "prefetch_windows": self.cfg.prefetch_windows,
+            "read_threads": self.cfg.read_threads,
+            "kernel": self.cfg.kernel,
+            "peak_resident_blocks": self.gauge.peak,
+            "resident_bound": self.cfg.max_resident_blocks(n_experts),
+            "peak_write_queue_blocks": self.wb.peak_queued,
+            "write_queue_bound": self.cfg.write_queue_blocks,
+        }

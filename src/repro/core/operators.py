@@ -26,9 +26,10 @@ counter, so re-executing a plan reproduces the output bit-for-bit
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import warnings
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -197,19 +198,49 @@ def ties_merge(x0f: np.ndarray, D: np.ndarray, theta: Dict) -> np.ndarray:
 
 
 # -------------------------------------------------------------------------- DARE
+@functools.lru_cache(maxsize=65536)
+def _tensor_counter(tensor_id: str) -> int:
+    """Philox counter word derived from the tensor name (cached — the
+    hash is recomputed millions of times on the executor hot path)."""
+    return int.from_bytes(
+        hashlib.blake2b(tensor_id.encode(), digest_size=8).digest(), "little"
+    )
+
+
 def dare_mask(
     seed: int, expert_idx: int, tensor_id: str, block_idx: int, n: int, density: float
 ) -> np.ndarray:
     """Deterministic keep-mask via counter-based Philox (see module doc)."""
-    th = int.from_bytes(
-        hashlib.blake2b(tensor_id.encode(), digest_size=8).digest(), "little"
-    )
     bitgen = np.random.Philox(
         key=(seed & 0xFFFFFFFFFFFFFFFF) ^ (expert_idx * 0x9E3779B97F4A7C15),
-        counter=[0, 0, block_idx, th],
+        counter=[0, 0, block_idx, _tensor_counter(tensor_id)],
     )
     rng = np.random.Generator(bitgen)
     return rng.random(n) < density
+
+
+def dare_mask_batch(
+    seed: int,
+    expert_idxs: Sequence[int],
+    tensor_id: str,
+    block_idx: int,
+    n: int,
+    density: float,
+) -> np.ndarray:
+    """Keep-mask stack (K_sel, n) for one block — bit-identical to stacking
+    :func:`dare_mask` per expert, but one call: the tensor-name hash is
+    computed once and the rows are generated into a preallocated stack
+    (each expert keeps its own Philox stream, so determinism is unchanged).
+    """
+    th = _tensor_counter(tensor_id)
+    out = np.empty((len(expert_idxs), n), dtype=bool)
+    for j, ei in enumerate(expert_idxs):
+        bitgen = np.random.Philox(
+            key=(seed & 0xFFFFFFFFFFFFFFFF) ^ (ei * 0x9E3779B97F4A7C15),
+            counter=[0, 0, block_idx, th],
+        )
+        out[j] = np.random.Generator(bitgen).random(n) < density
+    return out
 
 
 @register("dare", theta={"density": ThetaParam(float, lo=0.0, hi=1.0)})

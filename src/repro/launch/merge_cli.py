@@ -30,7 +30,18 @@ import time
 
 from repro.api import BudgetSpec, Session, load_spec_file
 from repro.core import MergePipe, naive_merge
+from repro.core.executor import PipelineConfig
 from repro.store.iostats import measure
+
+
+def _pipeline_config(args) -> PipelineConfig:
+    return PipelineConfig(
+        window_blocks=args.pipeline_window,
+        prefetch_windows=args.pipeline_depth,
+        read_threads=args.pipeline_read_threads,
+        write_queue_blocks=args.pipeline_write_queue,
+        kernel=args.pipeline_kernel,
+    )
 
 
 def _parse_theta(pairs):
@@ -64,6 +75,7 @@ def _run_specs(args) -> None:
             shared_budget=args.shared_budget,
             compute=args.compute,
             cache_max_bytes=cache_max,
+            pipeline=_pipeline_config(args),
         )
     wall = time.time() - t0
     for h, res in zip(handles, results):
@@ -108,8 +120,28 @@ def main() -> None:
     ap.add_argument("--theta", nargs="*", help="k=v operator params")
     ap.add_argument("--block-size", type=int, default=128 * 1024)
     ap.add_argument("--sid", default=None)
-    ap.add_argument("--compute", default="stream",
-                    choices=["stream", "batched"])
+    ap.add_argument("--compute", default="pipelined",
+                    choices=["stream", "batched", "pipelined"],
+                    help="execution engine: 'pipelined' (overlapped "
+                         "prefetch/compute/write-behind, default), "
+                         "'stream' (paper-faithful synchronous), or "
+                         "'batched' (whole-tensor jitted kernels)")
+    pd = PipelineConfig()  # single source of truth for the defaults
+    ap.add_argument("--pipeline-window", type=int, default=pd.window_blocks,
+                    help="blocks per pipelined compute window")
+    ap.add_argument("--pipeline-depth", type=int, default=pd.prefetch_windows,
+                    help="prefetched windows in flight (queue depth)")
+    ap.add_argument("--pipeline-read-threads", type=int,
+                    default=pd.read_threads,
+                    help="reader thread-pool size for the prefetch stage")
+    ap.add_argument("--pipeline-write-queue", type=int,
+                    default=pd.write_queue_blocks,
+                    help="bound on write-behind queued output blocks")
+    ap.add_argument("--pipeline-kernel", default=pd.kernel,
+                    choices=["numpy", "jax"],
+                    help="pipelined compute kernel: 'numpy' is "
+                         "bit-identical to stream; 'jax' uses the jitted "
+                         "Pallas/XLA wrappers (accelerators)")
     ap.add_argument("--naive", action="store_true",
                     help="run the stateless full-read baseline instead")
     ap.add_argument("--explain", default=None, metavar="SID",
@@ -149,6 +181,7 @@ def main() -> None:
             res = mp.merge(
                 args.base, args.experts, op=args.op, theta=theta,
                 budget=budget, sid=args.sid, compute=args.compute,
+                pipeline=_pipeline_config(args),
             )
             print(f"[mergepipe] committed {res.sid}  "
                   f"expert_read={res.stats['c_expert_run']/1e6:.1f} MB "

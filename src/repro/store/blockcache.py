@@ -19,6 +19,7 @@ shared-read schedule claims.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -28,17 +29,25 @@ from repro.store.tensorstore import ModelReader, TensorSpec
 
 class CacheBudget:
     """Byte budget shared by a group of caching readers (one per batch
-    level), so the documented cap bounds their *combined* footprint."""
+    level), so the documented cap bounds their *combined* footprint.
+    Admission is atomic — concurrent readers (pipelined prefetch pool)
+    cannot jointly overshoot the cap."""
 
     def __init__(self, max_bytes: Optional[int]):
         self.max_bytes = max_bytes
         self.used = 0
+        self._lock = threading.Lock()
 
     def admit(self, nbytes: int) -> bool:
-        if self.max_bytes is not None and self.used + nbytes > self.max_bytes:
-            return False
-        self.used += nbytes
-        return True
+        with self._lock:
+            if self.max_bytes is not None and self.used + nbytes > self.max_bytes:
+                return False
+            self.used += nbytes
+            return True
+
+    def release(self, nbytes: int) -> None:
+        with self._lock:
+            self.used -= nbytes
 
 
 class CachingModelReader:
@@ -59,6 +68,10 @@ class CachingModelReader:
         self.budget = budget or CacheBudget(max_bytes)
         self._blocks: Dict[Tuple[str, int, int], np.ndarray] = {}
         self._tensors: Dict[str, np.ndarray] = {}
+        #: guards cache maps + counters; physical reads happen outside the
+        #: lock (pread is already concurrent-safe), so a racing miss may
+        #: read a block twice — accounting stays honest, never unsound.
+        self._lock = threading.Lock()
         self.cached_bytes = 0
         self.hits = 0
         self.misses = 0
@@ -91,7 +104,7 @@ class CachingModelReader:
 
     # -- caching reads -----------------------------------------------------
     def _admit(self, key: Tuple[str, int, int], arr: np.ndarray) -> None:
-        if not self.budget.admit(arr.nbytes):
+        if key in self._blocks or not self.budget.admit(arr.nbytes):
             return
         self._blocks[key] = arr
         self.cached_bytes += arr.nbytes
@@ -100,14 +113,16 @@ class CachingModelReader:
         self, tensor_id: str, block_idx: int, block_size: int, category: str
     ) -> np.ndarray:
         key = (tensor_id, block_idx, block_size)
-        hit = self._blocks.get(key)
-        if hit is not None:
-            self.hits += 1
-            self.bytes_saved += hit.nbytes
-            return hit
-        self.misses += 1
+        with self._lock:
+            hit = self._blocks.get(key)
+            if hit is not None:
+                self.hits += 1
+                self.bytes_saved += hit.nbytes
+                return hit
+            self.misses += 1
         arr = self._reader.read_block(tensor_id, block_idx, block_size, category)
-        self._admit(key, arr)
+        with self._lock:
+            self._admit(key, arr)
         return arr
 
     def read_blocks_coalesced(
@@ -119,35 +134,39 @@ class CachingModelReader:
     ) -> Dict[int, np.ndarray]:
         out: Dict[int, np.ndarray] = {}
         missing: List[int] = []
-        for b in block_idxs:
-            hit = self._blocks.get((tensor_id, b, block_size))
-            if hit is not None:
-                self.hits += 1
-                self.bytes_saved += hit.nbytes
-                out[b] = hit
-            else:
-                missing.append(b)
-        if missing:
+        with self._lock:
+            for b in block_idxs:
+                hit = self._blocks.get((tensor_id, b, block_size))
+                if hit is not None:
+                    self.hits += 1
+                    self.bytes_saved += hit.nbytes
+                    out[b] = hit
+                else:
+                    missing.append(b)
             self.misses += len(missing)
+        if missing:
             fetched = self._reader.read_blocks_coalesced(
                 tensor_id, missing, block_size, category
             )
-            for b, arr in fetched.items():
-                self._admit((tensor_id, b, block_size), arr)
-                out[b] = arr
+            with self._lock:
+                for b, arr in fetched.items():
+                    self._admit((tensor_id, b, block_size), arr)
+                    out[b] = arr
         return out
 
     def read_tensor(self, tensor_id: str, category: str) -> np.ndarray:
-        hit = self._tensors.get(tensor_id)
-        if hit is not None:
-            self.hits += 1
-            self.bytes_saved += hit.nbytes
-            return hit
-        self.misses += 1
+        with self._lock:
+            hit = self._tensors.get(tensor_id)
+            if hit is not None:
+                self.hits += 1
+                self.bytes_saved += hit.nbytes
+                return hit
+            self.misses += 1
         arr = self._reader.read_tensor(tensor_id, category)
-        if self.budget.admit(arr.nbytes):
-            self._tensors[tensor_id] = arr
-            self.cached_bytes += arr.nbytes
+        with self._lock:
+            if tensor_id not in self._tensors and self.budget.admit(arr.nbytes):
+                self._tensors[tensor_id] = arr
+                self.cached_bytes += arr.nbytes
         return arr
 
     def read_range(
@@ -158,18 +177,20 @@ class CachingModelReader:
 
     # -- lifecycle ---------------------------------------------------------
     def drop_cache(self) -> None:
-        self._blocks.clear()
-        self._tensors.clear()
-        self.budget.used -= self.cached_bytes
-        self.cached_bytes = 0
+        with self._lock:
+            self._blocks.clear()
+            self._tensors.clear()
+            self.budget.release(self.cached_bytes)
+            self.cached_bytes = 0
 
     def cache_stats(self) -> Dict[str, int]:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "cached_bytes": self.cached_bytes,
-            "bytes_saved": self.bytes_saved,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "cached_bytes": self.cached_bytes,
+                "bytes_saved": self.bytes_saved,
+            }
 
     def close(self) -> None:
         self.drop_cache()

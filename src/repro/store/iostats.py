@@ -51,11 +51,18 @@ class IOStats:
             self.written[category].add(nbytes)
 
     # -- queries (paper cost terms) -------------------------------------
+    # Queries must not mutate the defaultdicts (a bare ``self.read[cat]``
+    # inserts a key) — the pipelined executor reads these counters while
+    # prefetch/write-behind threads are recording into them.
     def bytes_read(self, category: str) -> int:
-        return self.read[category].bytes
+        with self._lock:
+            c = self.read.get(category)
+            return c.bytes if c is not None else 0
 
     def bytes_written(self, category: str) -> int:
-        return self.written[category].bytes
+        with self._lock:
+            c = self.written.get(category)
+            return c.bytes if c is not None else 0
 
     @property
     def c_base(self) -> int:

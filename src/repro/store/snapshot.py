@@ -16,7 +16,9 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import queue
 import shutil
+import threading
 import time
 import uuid
 from typing import Dict, List, Mapping, Optional
@@ -127,6 +129,97 @@ class StagingWriter:
             self._open_name = None
         shutil.rmtree(self.dir, ignore_errors=True)
         self.aborted = True
+
+
+class WriteBehindWriter:
+    """Asynchronous facade over a :class:`StagingWriter` — the pipelined
+    executor's third stage.
+
+    ``begin_tensor`` / ``write_block`` / ``finish_tensor`` enqueue
+    commands onto a bounded queue drained *in order* by one writer
+    thread, so output-file writes overlap the next window's reads and
+    compute.  Ordering, streaming hashes, and I/O accounting are exactly
+    the wrapped writer's — the commands replay verbatim, just later.
+
+    A failure on the writer thread is re-raised on the producer side at
+    the next enqueue (or at :meth:`flush`), so the executor's abort path
+    fires exactly as in the synchronous engine.  ``close(discard=True)``
+    stops the thread without replaying queued commands (abort path).
+    """
+
+    _FLUSH = object()  # queue marker: wake any flush() waiters
+
+    def __init__(self, writer: StagingWriter, max_queued_blocks: int = 64):
+        self.writer = writer
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, max_queued_blocks))
+        self._exc: Optional[BaseException] = None
+        self._discard = False
+        self._closed = False
+        self.peak_queued = 0
+        self._flushed = threading.Event()
+        self._thread = threading.Thread(
+            target=self._drain, name="mergepipe-write-behind", daemon=True
+        )
+        self._thread.start()
+
+    # -- producer side -----------------------------------------------------
+    def _submit(self, method: str, *args) -> None:
+        self.raise_if_failed()
+        if self._closed:
+            raise RuntimeError("write-behind writer already closed")
+        self._q.put((method, args))
+        # sampled after the (possibly blocking) put — never exceeds the
+        # queue bound, so the bounded-memory invariant is checkable
+        self.peak_queued = max(self.peak_queued, self._q.qsize())
+
+    def begin_tensor(self, tensor_id: str, shape, dtype) -> None:
+        self._submit("begin_tensor", tensor_id, shape, dtype)
+
+    def write_block(self, tensor_id: str, block_idx: int, block: np.ndarray) -> None:
+        self._submit("write_block", tensor_id, block_idx, block)
+
+    def finish_tensor(self, tensor_id: str) -> None:
+        self._submit("finish_tensor", tensor_id)
+
+    def raise_if_failed(self) -> None:
+        if self._exc is not None:
+            raise self._exc
+
+    def flush(self) -> None:
+        """Block until every queued command has been applied, then
+        re-raise any writer-thread failure."""
+        self._flushed.clear()
+        self._q.put((WriteBehindWriter._FLUSH, ()))
+        self._flushed.wait()
+        self.raise_if_failed()
+
+    def close(self, discard: bool = False) -> None:
+        """Stop the writer thread.  ``discard=True`` drops queued commands
+        (abort path: the staging dir is about to be deleted anyway)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._discard = self._discard or discard
+        self._q.put((None, ()))
+        self._thread.join()
+        if not discard:
+            self.raise_if_failed()
+
+    # -- writer thread ------------------------------------------------------
+    def _drain(self) -> None:
+        while True:
+            method, args = self._q.get()
+            if method is None:
+                return
+            if method is WriteBehindWriter._FLUSH:
+                self._flushed.set()
+                continue
+            if self._exc is not None or self._discard:
+                continue  # drain without applying; producer will re-raise
+            try:
+                getattr(self.writer, method)(*args)
+            except BaseException as e:  # noqa: BLE001 — forwarded to producer
+                self._exc = e
 
 
 class SnapshotStore:

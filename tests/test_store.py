@@ -58,6 +58,57 @@ def test_coalesced_reads_match_individual(tmp_path):
         assert stats.read["expert"].calls == 3 + len(sel)
 
 
+def test_coalesced_large_sparse_selection(tmp_path):
+    """Sparse selection over many blocks: every requested block comes back
+    exact (the run->block slicing is a linear sweep, not an O(R^2) rescan),
+    and no unrequested block appears."""
+    stats = IOStats()
+    store = CheckpointStore(str(tmp_path), stats)
+    n_blocks = 2048
+    x = np.arange(n_blocks * 64, dtype=np.float32)  # 256B blocks
+    store.write_model("m", {"x": x})
+    rng = np.random.default_rng(7)
+    sel = sorted(rng.choice(n_blocks, size=700, replace=False).tolist())
+    with store.open_model("m") as r:
+        out = r.read_blocks_coalesced("x", sel, 256, "expert")
+        assert sorted(out) == sel
+        for b in sel:
+            np.testing.assert_array_equal(out[b], x[b * 64:(b + 1) * 64])
+        # bytes moved == exactly the selected blocks
+        assert stats.c_expert == 700 * 256
+        # unsorted request order gives the same result
+        shuffled = list(sel)
+        rng.shuffle(shuffled)
+        out2 = r.read_blocks_coalesced("x", shuffled, 256, "expert")
+        assert sorted(out2) == sel
+
+
+def test_pread_reader_thread_safety(tmp_path):
+    """Concurrent read_range on one reader: pread has no shared file
+    offset, so parallel readers always see their own exact ranges."""
+    import threading
+
+    store = CheckpointStore(str(tmp_path))
+    x = np.arange(64 * 1024, dtype=np.float32)
+    store.write_model("m", {"x": x})
+    raw = x.tobytes()
+    errors = []
+    with store.open_model("m") as r:
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            for _ in range(200):
+                off = int(rng.integers(0, len(raw) - 4096))
+                n = int(rng.integers(1, 4096))
+                if r.read_range("x", off, n, "other") != raw[off:off + n]:
+                    errors.append((off, n))  # pragma: no cover
+        threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert errors == []
+
+
 def test_iostats_categories_and_measure():
     stats = IOStats()
     with measure(stats) as d:
