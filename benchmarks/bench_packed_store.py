@@ -1,0 +1,294 @@
+"""Packed expert store vs flat checkpoints (paper headline metric:
+expert read volume; docs/STORAGE.md).
+
+Two fleet profiles, both K experts over one base:
+
+``dup_heavy``
+    A realistic fine-tune fleet: a large fraction of each expert's
+    tensors are bit-identical to the base (frozen layers — elided to
+    metadata), another slice is shared across experts but differs from
+    the base (tied heads/embeddings — deduped to one extent), and the
+    rest carry unique task vectors.  This is the regime the paper's
+    multi-expert workloads live in.
+
+``all_unique``
+    Every expert block is unique (dense independent task vectors) — the
+    adversarial case where dedup and elision find nothing.  Packed reads
+    must not regress here: physical bytes equal flat bytes (raw
+    encoding), and the planner's selection is unchanged.
+
+For each profile the same fractional budget drives one merge from the
+flat store and one from a lossless packed layout; we report expert bytes
+moved (flat ``expert`` vs packed ``expert_packed`` IOStats categories),
+blocks selected (a packed budget buys more), and wall time under the
+``hot`` and emulated ``shared`` storage profiles (same cost emulation as
+bench_pipeline, applied to both flat tensor reads and packed extent
+reads).
+
+``--check`` is the CI smoke: on ``dup_heavy`` K=8 the packed store must
+move **>= 2x fewer** expert bytes under the same budget with merged
+output bit-identical at 100%% budget; on ``all_unique`` packed bytes must
+not exceed flat bytes (no regression).  Emits a JSON summary
+(``bench_packed_store.json`` or ``$REPRO_BENCH_JSON``).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.harness import Csv, bench_mb, cleanup, fresh_dir, model_shapes
+from repro.core.api import MergePipe
+from repro.store import packed as packed_mod
+from repro.store import tensorstore
+from repro.store.iostats import IOStats, measure
+
+BLOCK_SIZE = 16 * 1024
+#: emulated shared-storage profile (per physical read call), matching
+#: bench_pipeline's deployment-regime cost model
+SHARED_LATENCY_S = 200e-6
+SHARED_MBPS = 25.0
+
+
+@contextlib.contextmanager
+def storage_profile(profile: str, latency_s: float = SHARED_LATENCY_S,
+                    mbps: float = SHARED_MBPS):
+    """Tax every physical read — flat tensor ranges *and* packed extent
+    preads — so both layouts pay the identical storage cost model."""
+    if profile == "hot":
+        yield
+        return
+    real_range = tensorstore.ModelReader.read_range
+    real_pread = packed_mod.PackedLayout._pread
+
+    def emulated_range(self, tensor_id, offset, nbytes, category,
+                       waste_nbytes=0):
+        time.sleep(latency_s + nbytes / (mbps * 1e6))
+        return real_range(self, tensor_id, offset, nbytes, category,
+                          waste_nbytes=waste_nbytes)
+
+    def emulated_pread(self, off, nbytes):
+        time.sleep(latency_s + nbytes / (mbps * 1e6))
+        return real_pread(self, off, nbytes)
+
+    tensorstore.ModelReader.read_range = emulated_range
+    packed_mod.PackedLayout._pread = emulated_pread
+    try:
+        yield
+    finally:
+        tensorstore.ModelReader.read_range = real_range
+        packed_mod.PackedLayout._pread = real_pread
+
+
+def build_fleet(
+    workspace: str,
+    k: int,
+    profile: str,
+    total_mb: Optional[float] = None,
+    frozen_frac: float = 0.6,
+    shared_frac: float = 0.25,
+    stats: Optional[IOStats] = None,
+) -> Tuple[MergePipe, str, List[str]]:
+    """K experts; ``dup_heavy`` freezes/ties tensors, ``all_unique``
+    perturbs everything independently."""
+    stats = stats or IOStats()
+    mp = MergePipe(workspace, block_size=BLOCK_SIZE, stats=stats)
+    rng = np.random.default_rng(0)
+    shapes = model_shapes(total_mb or bench_mb())
+    base = {n: rng.normal(size=s).astype(np.float32) for n, s in shapes.items()}
+    mp.register_model("base", base)
+    names = sorted(base)
+    n_frozen = int(len(names) * frozen_frac)
+    n_shared = int(len(names) * shared_frac)
+    frozen = set(names[:n_frozen])
+    shared_names = set(names[n_frozen:n_frozen + n_shared])
+    shared = {
+        n: base[n] + 0.01 * rng.normal(size=base[n].shape).astype(np.float32)
+        for n in shared_names
+    }
+    ids = []
+    for i in range(k):
+        ex = {}
+        for n, v in base.items():
+            if profile == "dup_heavy" and n in frozen:
+                ex[n] = v.copy()
+            elif profile == "dup_heavy" and n in shared_names:
+                ex[n] = shared[n].copy()
+            else:
+                ex[n] = v + 0.02 * rng.normal(size=v.shape).astype(np.float32)
+        mp.register_model(f"expert-{i:02d}", ex)
+        ids.append(f"expert-{i:02d}")
+    mp.ensure_analyzed("base", ids)
+    return mp, "base", ids
+
+
+def _one_merge(mp, base, ids, budget, stats, prefer_packed, compute, sid=None):
+    t0 = time.time()
+    with measure(stats) as io:
+        res = mp.merge(base, ids, "ties", theta={"trim_frac": 0.3},
+                       budget=budget, compute=compute, sid=sid,
+                       prefer_packed=prefer_packed, reuse_plan=True)
+    return {
+        "wall_s": time.time() - t0,
+        "expert_bytes": io["expert_read"],
+        "expert_packed_bytes": io["expert_packed_read"],
+        "selected_blocks": res.stats["realized_expert_blocks"],
+        "sid": res.sid,
+    }
+
+
+def run(
+    ks=(8,),
+    fleet_profiles=("dup_heavy", "all_unique"),
+    storage_profiles=("hot", "shared"),
+    budget: float = 0.5,
+    compress: str = "none",
+    json_path: Optional[str] = None,
+) -> Dict:
+    csv = Csv("packed_store", [
+        "fleet", "storage", "k", "store", "expert_mb", "selected_blocks",
+        "wall_s", "byte_reduction", "repack_s",
+    ])
+    summary: Dict = {
+        "workload": {
+            "model_mb": bench_mb(), "block_size": BLOCK_SIZE,
+            "budget": budget, "compress": compress,
+            "shared_profile": {"latency_s": SHARED_LATENCY_S,
+                               "mbps": SHARED_MBPS},
+        },
+        "results": [],
+    }
+    for fleet in fleet_profiles:
+        for k in ks:
+            ws = fresh_dir(f"packed-{fleet}-k{k}")
+            stats = IOStats()
+            mp, base, ids = build_fleet(ws, k, fleet, stats=stats)
+            t0 = time.time()
+            rep = mp.repack(
+                ids, base, layout_id="bench",
+                options=packed_mod.RepackOptions(compress=compress),
+            )
+            repack_s = time.time() - t0
+            for storage in storage_profiles:
+                with storage_profile(storage):
+                    flat = _one_merge(mp, base, ids, budget, stats,
+                                      prefer_packed=False, compute="stream")
+                    pk = _one_merge(mp, base, ids, budget, stats,
+                                    prefer_packed=True, compute="stream")
+                reduction = flat["expert_bytes"] / max(pk["expert_bytes"], 1)
+                csv.row(fleet, storage, k, "flat",
+                        flat["expert_bytes"] / 1e6, flat["selected_blocks"],
+                        flat["wall_s"], 1.0, repack_s)
+                csv.row(fleet, storage, k, "packed",
+                        pk["expert_bytes"] / 1e6, pk["selected_blocks"],
+                        pk["wall_s"], reduction, repack_s)
+                summary["results"].append({
+                    "fleet": fleet, "storage": storage, "k": k,
+                    "budget": budget,
+                    "flat_expert_bytes": flat["expert_bytes"],
+                    "packed_expert_bytes": pk["expert_bytes"],
+                    "byte_reduction": reduction,
+                    "flat_blocks": flat["selected_blocks"],
+                    "packed_blocks": pk["selected_blocks"],
+                    "flat_wall_s": flat["wall_s"],
+                    "packed_wall_s": pk["wall_s"],
+                    "repack_s": repack_s,
+                    "layout": {kk: rep[kk] for kk in (
+                        "logical_bytes", "physical_bytes", "elided_blocks",
+                        "dedup_blocks", "extents")},
+                })
+            mp.close()
+            cleanup(ws)
+    out = json_path or os.environ.get(
+        "REPRO_BENCH_JSON", "bench_packed_store.json"
+    )
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# packed_store json summary -> {out}", flush=True)
+    return summary
+
+
+def check(min_reduction: float) -> int:
+    """CI smoke: >= min_reduction expert-byte cut on the duplicate-heavy
+    K=8 fleet under one budget, bit-identity at 100% budget, and no
+    byte regression on the all-unique fleet."""
+    ok = True
+    # --- duplicate-heavy: the win ------------------------------------
+    ws = fresh_dir("packed-check-dup")
+    stats = IOStats()
+    mp, base, ids = build_fleet(ws, 8, "dup_heavy", total_mb=4, stats=stats)
+    mp.repack(ids, base, layout_id="chk")
+    flat = _one_merge(mp, base, ids, 0.5, stats, False, "stream")
+    pk = _one_merge(mp, base, ids, 0.5, stats, True, "stream")
+    reduction = flat["expert_bytes"] / max(pk["expert_bytes"], 1)
+    print(f"# check dup_heavy K=8 budget=0.5: flat="
+          f"{flat['expert_bytes']/1e6:.2f}MB packed="
+          f"{pk['expert_bytes']/1e6:.2f}MB reduction={reduction:.2f}x "
+          f"(require >= {min_reduction}x); blocks "
+          f"{flat['selected_blocks']} -> {pk['selected_blocks']}")
+    if reduction < min_reduction:
+        print("FAIL: packed-store byte reduction below threshold")
+        ok = False
+    if pk["selected_blocks"] < flat["selected_blocks"]:
+        print("FAIL: packed budget bought fewer blocks than flat")
+        ok = False
+    # bit-identity at full budget (identical selections)
+    a = _one_merge(mp, base, ids, None, stats, False, "stream", sid="chk-flat")
+    b = _one_merge(mp, base, ids, None, stats, True, "stream", sid="chk-pk")
+    fa, fb = mp.load("chk-flat"), mp.load("chk-pk")
+    for t in fa:
+        if not np.array_equal(fa[t], fb[t]):
+            print(f"FAIL: packed merge differs from flat on {t}")
+            ok = False
+    mp.close()
+    cleanup(ws)
+    # --- all-unique: no regression -----------------------------------
+    ws = fresh_dir("packed-check-uniq")
+    stats = IOStats()
+    mp, base, ids = build_fleet(ws, 8, "all_unique", total_mb=4, stats=stats)
+    mp.repack(ids, base, layout_id="chk")
+    flat = _one_merge(mp, base, ids, 0.5, stats, False, "stream")
+    pk = _one_merge(mp, base, ids, 0.5, stats, True, "stream")
+    print(f"# check all_unique K=8 budget=0.5: flat="
+          f"{flat['expert_bytes']/1e6:.2f}MB packed="
+          f"{pk['expert_bytes']/1e6:.2f}MB")
+    if pk["expert_bytes"] > flat["expert_bytes"]:
+        print("FAIL: packed store read more bytes than flat on the "
+              "all-unique fleet")
+        ok = False
+    if pk["selected_blocks"] != flat["selected_blocks"]:
+        print("FAIL: packed selection differs on the all-unique fleet")
+        ok = False
+    mp.close()
+    cleanup(ws)
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: byte-reduction + bit-identity + "
+                         "no-regression gates")
+    ap.add_argument("--check-reduction", type=float, default=2.0)
+    ap.add_argument("--budget", type=float, default=0.5)
+    ap.add_argument("--compress", default="none", choices=["none", "zlib"])
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check(args.check_reduction))
+    if args.fast:
+        run(ks=(4,), storage_profiles=("hot",), budget=args.budget,
+            compress=args.compress, json_path=args.json)
+    else:
+        run(budget=args.budget, compress=args.compress, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

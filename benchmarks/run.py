@@ -19,6 +19,7 @@ from benchmarks import (
     bench_merge_compute,
     bench_operators,
     bench_overheads,
+    bench_packed_store,
     bench_pipeline,
     bench_planner_scale,
     bench_quality,
@@ -60,6 +61,9 @@ ALL = {
         depths=(2,) if fast else (1, 2, 4),
         repeats=1 if fast else 2,
         include_batched=not fast),
+    "packed_store": lambda fast: bench_packed_store.run(
+        ks=(4,) if fast else (8,),
+        storage_profiles=("hot",) if fast else ("hot", "shared")),
 }
 
 

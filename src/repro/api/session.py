@@ -94,6 +94,9 @@ class Session:
         os.makedirs(workspace, exist_ok=True)
         self.snapshots = SnapshotStore(workspace, self.stats)
         self.catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), self.stats)
+        # referential integrity: deleting a model that snapshots' lineage
+        # or a packed layout still references needs an explicit force=True
+        self.snapshots.models.add_delete_guard(self.catalog.model_references)
         self.txn = TransactionManager(self.snapshots, self.catalog)
         if recover:
             self.txn.recover()
@@ -175,6 +178,7 @@ class Session:
         analyze: bool = True,
         cache_max_bytes: Union[int, None, str] = "auto",
         pipeline: Optional[PipelineConfig] = None,
+        prefer_packed: Union[bool, str] = True,
     ) -> List[MergeResult]:
         """Plan and execute every queued job, sharing expert block reads.
 
@@ -189,6 +193,14 @@ class Session:
         (prefetch → windowed vectorized compute → write-behind,
         bit-identical to ``"stream"``; see docs/EXECUTION.md); ``pipeline``
         optionally tunes its window/queue-depth knobs.
+
+        ``prefer_packed=True`` (default) plans and reads each level from
+        the most recent **lossless** packed layout covering all of the
+        level's experts, when one exists (see docs/STORAGE.md — elision,
+        dedup and compression make the same budget buy strictly more
+        selected blocks).  Pass a layout id to force a specific layout
+        (including lossy ones — an explicit opt-in), or ``False`` to
+        always read flat checkpoints.
         Returns results in submission order.
         """
         if cache_max_bytes == "auto":
@@ -280,6 +292,7 @@ class Session:
                 analyze=analyze,
                 cache_max_bytes=cache_max_bytes,
                 pipeline=pipeline,
+                prefer_packed=prefer_packed,
             )
 
         # -- 4. hand results back in submission order ---------------------
@@ -316,6 +329,7 @@ class Session:
         analyze: bool,
         cache_max_bytes: Optional[int],
         pipeline: Optional[PipelineConfig] = None,
+        prefer_packed: Union[bool, str] = True,
     ) -> Dict:
         # deterministic order: by spec content digest, then requested sid
         # (identical specs executing under distinct names)
@@ -328,7 +342,6 @@ class Session:
         )
         pool_is_fraction = pool_spec is not None and pool_spec.kind == "fraction"
 
-        batch_jobs: List[BatchJob] = []
         resolved: List[Dict[str, Any]] = []
         for node in level_nodes:
             spec = node.spec
@@ -336,6 +349,21 @@ class Session:
             expert_ids = [self._resolve_input(e, nodes) for e in spec.experts]
             if analyze:
                 self.ensure_analyzed(base_id, expert_ids)
+            resolved.append({"base_id": base_id, "expert_ids": expert_ids})
+
+        # -- packed physical layout (auto-prefer / forced) -----------------
+        # one layout per level: it must cover every expert the level reads
+        # so the shared readers and the planner cost the same bytes.
+        level_experts = sorted({e for r in resolved for e in r["expert_ids"]})
+        layout_id = self._select_layout(
+            prefer_packed, level_experts, [r["base_id"] for r in resolved]
+        )
+
+        batch_jobs: List[BatchJob] = []
+        for node, res in zip(level_nodes, resolved):
+            spec = node.spec
+            base_id = res["base_id"]
+            expert_ids = res["expert_ids"]
             # merge-graph lineage: any input that is itself a committed
             # merge snapshot becomes a DAG edge of this node.
             parent_sids = [
@@ -361,9 +389,9 @@ class Session:
                     reuse=spec.reuse_plan,
                     spec_id=spec.spec_id,
                     parent_sids=parent_sids,
+                    layout_id=layout_id,
                 )
             )
-            resolved.append({"base_id": base_id, "expert_ids": expert_ids})
 
         pool_b = None
         if pool_spec is not None:
@@ -386,19 +414,22 @@ class Session:
         # -- shared expert readers: one open (cached) reader per model ----
         expert_readers = None
         cache_readers: Dict[str, CachingModelReader] = {}
+        shared_layout = None
         if shared_reads and len(level_nodes) > 1:
-            all_experts = sorted(
-                {e for r in resolved for e in r["expert_ids"]}
-            )
             # one byte budget for the whole level: the cap bounds the
             # combined footprint across all expert readers
             cache_budget = CacheBudget(cache_max_bytes)
+            if layout_id is not None:
+                # cross-job sharing composes with the packed layout: one
+                # opened layout dedups extents across jobs, and the block
+                # cache fans decoded blocks out to later jobs
+                shared_layout = self.snapshots.packed.open_layout(layout_id)
+                open_one = shared_layout.open_member
+            else:
+                open_one = self.snapshots.models.open_model
             cache_readers = {
-                e: CachingModelReader(
-                    self.snapshots.models.open_model(e),
-                    budget=cache_budget,
-                )
-                for e in all_experts
+                e: CachingModelReader(open_one(e), budget=cache_budget)
+                for e in level_experts
             }
             expert_readers = cache_readers
 
@@ -421,8 +452,11 @@ class Session:
         finally:
             for r in cache_readers.values():
                 r.close()
+            if shared_layout is not None:
+                shared_layout.close()
 
         stats = dict(bp.stats)
+        stats["layout_id"] = layout_id
         if cache_readers:
             stats["cache"] = {
                 "hits": sum(r.hits for r in cache_readers.values()),
@@ -436,6 +470,98 @@ class Session:
                 node.result.stats["batch"] = stats
         return stats
 
+    # ---------------------------------------------------------------- packed
+    def _select_layout(
+        self,
+        prefer_packed: Union[bool, str],
+        expert_ids: List[str],
+        base_ids: List[str],
+    ) -> Optional[str]:
+        """Resolve the packed layout one execution level reads from.
+
+        A layout is only *applicable* when every expert of the level is a
+        member AND the level's (single) base is the layout's own base —
+        elision means "delta vs the layout's base is zero", so any other
+        base would make synthesized zero deltas wrong.  Inapplicable
+        levels fall back to flat reads: in a merge graph, upper levels
+        whose inputs are freshly-committed snapshots are never members of
+        a pre-built layout, and a forced layout must not abort the graph
+        mid-way (unknown ids and block-size mismatches still raise — they
+        are configuration errors, not graph structure).
+        """
+        if not prefer_packed or not expert_ids:
+            return None
+        bases = set(base_ids)
+        if isinstance(prefer_packed, str):
+            layout = self.catalog.get_packed_layout(prefer_packed)
+            if layout is None:
+                raise KeyError(f"packed layout {prefer_packed!r} not found")
+            if layout["block_size"] != self.block_size:
+                raise ValueError(
+                    f"layout {prefer_packed!r} is packed at block_size="
+                    f"{layout['block_size']}, session uses {self.block_size}"
+                )
+            members = set(self.catalog.packed_layout_members(prefer_packed))
+            applicable = (
+                bases == {layout["base_id"]}
+                and all(e in members for e in expert_ids)
+            )
+            if not applicable:
+                # fall back, but never silently: on a plain single-level
+                # merge this usually means a misconfigured --layout
+                import warnings
+
+                causes = []
+                if bases != {layout["base_id"]}:
+                    causes.append(
+                        f"layout base {layout['base_id']!r} vs merge "
+                        f"base(s) {sorted(bases)}"
+                    )
+                non_members = [e for e in expert_ids if e not in members]
+                if non_members:
+                    causes.append(f"non-members: {non_members}")
+                warnings.warn(
+                    f"forced packed layout {prefer_packed!r} does not apply "
+                    f"to this level ({'; '.join(causes)}) — reading flat "
+                    f"checkpoints instead",
+                    stacklevel=3,
+                )
+                return None
+            return prefer_packed
+        # auto-prefer: only lossless layouts packed against this exact
+        # base qualify (outputs must stay bit-identical to the flat
+        # store; lossy layouts are an explicit opt-in by id)
+        if len(bases) != 1:
+            return None
+        return self.catalog.find_packed_layout(
+            expert_ids, self.block_size, lossless_only=True,
+            base_id=bases.pop(),
+        )
+
+    def repack(
+        self,
+        model_ids: Sequence[str],
+        base_id: str,
+        layout_id: Optional[str] = None,
+        options: Optional["Any"] = None,
+    ) -> Dict:
+        """Rewrite checkpoints into a content-addressed packed layout
+        (store/packed): cross-model dedup, zero-delta elision, optional
+        downcast/compression.  Returns the repack report; subsequent
+        ``run``/``run_all`` calls auto-prefer the layout when lossless.
+        """
+        return self.snapshots.packed.repack(
+            base_id,
+            list(model_ids),
+            self.block_size,
+            layout_id=layout_id,
+            options=options,
+            catalog=self.catalog,
+        )
+
+    def list_layouts(self) -> List[str]:
+        return self.catalog.list_packed_layouts()
+
     # ------------------------------------------------------------- one-shot
     def run(
         self,
@@ -445,12 +571,13 @@ class Session:
         coalesce: bool = True,
         analyze: bool = True,
         pipeline: Optional[PipelineConfig] = None,
+        prefer_packed: Union[bool, str] = True,
     ) -> MergeResult:
         """Submit one spec (possibly a whole merge graph) and execute it."""
         handle = self.submit(spec, sid=sid)
         self.run_all(
             shared_reads=True, compute=compute, coalesce=coalesce,
-            analyze=analyze, pipeline=pipeline,
+            analyze=analyze, pipeline=pipeline, prefer_packed=prefer_packed,
         )
         assert handle.result is not None
         return handle.result

@@ -66,6 +66,7 @@ class MergePipe:
         os.makedirs(workspace, exist_ok=True)
         self.snapshots = SnapshotStore(workspace, self.stats)
         self.catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), self.stats)
+        self.snapshots.models.add_delete_guard(self.catalog.model_references)
         self.txn = TransactionManager(self.snapshots, self.catalog)
         if recover:
             self.txn.recover()
@@ -172,6 +173,7 @@ class MergePipe:
         conflict_aware: bool = True,
         reuse_plan: bool = True,
         pipeline: Optional[PipelineConfig] = None,
+        prefer_packed: Union[bool, str] = True,
     ) -> MergeResult:
         """ANALYZE (cached) -> PLAN -> EXECUTE -> COMMIT.
 
@@ -198,7 +200,22 @@ class MergePipe:
         )
         return self.session().run(
             spec, sid=sid, compute=compute, coalesce=coalesce,
-            analyze=analyze, pipeline=pipeline,
+            analyze=analyze, pipeline=pipeline, prefer_packed=prefer_packed,
+        )
+
+    # ---------------------------------------------------------------- packed
+    def repack(
+        self,
+        model_ids: Sequence[str],
+        base_id: str,
+        layout_id: Optional[str] = None,
+        options: Optional[Any] = None,
+    ) -> Dict:
+        """Rewrite checkpoints into a content-addressed packed layout
+        (see :mod:`repro.store.packed` and docs/STORAGE.md)."""
+        return self.snapshots.packed.repack(
+            base_id, list(model_ids), self.block_size,
+            layout_id=layout_id, options=options, catalog=self.catalog,
         )
 
     def session(self) -> "Any":

@@ -100,19 +100,31 @@ def iter_block_ids(
         yield BlockId(model_id, tensor_id, i)
 
 
-def coalesce_ranges(ranges: List[BlockRange]) -> List[Tuple[int, int]]:
+def coalesce_ranges(
+    ranges: List[BlockRange], gap: int = 0
+) -> List[Tuple[int, int]]:
     """Merge adjacent block ranges into maximal contiguous (offset, nbytes)
     runs.  This is the beyond-paper "batched block streaming" optimization:
     planning stays block-granular but physical reads become large sequential
-    I/O (removes the small-block penalty of paper Table 6)."""
+    I/O (removes the small-block penalty of paper Table 6).
+
+    ``gap`` tolerates up to that many unselected bytes between two ranges
+    before splitting the run: on high-latency storage one slightly larger
+    sequential read beats two round trips.  Runs may then cover bytes no
+    range requested; callers account those separately (see
+    ``ModelReader.read_blocks_coalesced``).  ``gap=0`` merges only
+    strictly adjacent ranges (the historical behavior).
+    """
+    if gap < 0:
+        raise ValueError(f"coalesce gap must be >= 0, got {gap}")
     if not ranges:
         return []
     ordered = sorted(ranges, key=lambda r: r.offset)
     runs: List[Tuple[int, int]] = []
     start, end = ordered[0].offset, ordered[0].end
     for r in ordered[1:]:
-        if r.offset == end:  # adjacent — extend the run
-            end = r.end
+        if r.offset <= end + gap:  # within tolerance — extend the run
+            end = max(end, r.end)
         else:
             runs.append((start, end - start))
             start, end = r.offset, r.end

@@ -10,6 +10,12 @@ Records:
                 selected_blocks_digest, C_expert_hat, payload
     Manifest    sid; plan_id, base_id, expert_ids, op, budget_B,
                 realized C_expert, output_root, created_at
+    PackedLayout / PackedMember / PackedExtent / PackedBlock
+                content-addressed packed physical layouts (store/packed):
+                which source checkpoints a layout covers (lineage), the
+                unique extents it stores, and the per-(model, tensor,
+                block) physical read cost — the planner's post-dedup /
+                post-elision / post-compression byte model.
 
 The catalog is metadata-only: ANALYZE writes block statistics once per
 checkpoint; planning then never touches parameter bytes (G2).  Catalog I/O
@@ -94,6 +100,44 @@ CREATE TABLE IF NOT EXISTS dag_edge (
     role       TEXT NOT NULL,
     ord        INTEGER NOT NULL,
     PRIMARY KEY (sid, input_sid, role)
+);
+CREATE TABLE IF NOT EXISTS packed_layout (
+    layout_id  TEXT PRIMARY KEY,
+    base_id    TEXT NOT NULL,
+    block_size INTEGER NOT NULL,
+    root       TEXT NOT NULL,
+    lossless   INTEGER NOT NULL,
+    options    TEXT NOT NULL,
+    stats      TEXT NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS packed_member (
+    layout_id  TEXT NOT NULL,
+    model_id   TEXT NOT NULL,
+    logical_nbytes  INTEGER NOT NULL,
+    physical_nbytes INTEGER NOT NULL,
+    PRIMARY KEY (layout_id, model_id)
+);
+CREATE TABLE IF NOT EXISTS packed_extent (
+    layout_id  TEXT NOT NULL,
+    hash       TEXT NOT NULL,
+    offset     INTEGER NOT NULL,
+    physical_nbytes INTEGER NOT NULL,
+    logical_nbytes  INTEGER NOT NULL,
+    encoding   TEXT NOT NULL,
+    refs       INTEGER NOT NULL,
+    PRIMARY KEY (layout_id, hash)
+);
+CREATE TABLE IF NOT EXISTS packed_block (
+    layout_id  TEXT NOT NULL,
+    model_id   TEXT NOT NULL,
+    tensor_id  TEXT NOT NULL,
+    block_idx  INTEGER NOT NULL,
+    kind       TEXT NOT NULL,
+    hash       TEXT,
+    physical_nbytes INTEGER NOT NULL,
+    logical_nbytes  INTEGER NOT NULL,
+    PRIMARY KEY (layout_id, model_id, tensor_id, block_idx)
 );
 CREATE TABLE IF NOT EXISTS manifest (
     sid        TEXT PRIMARY KEY,
@@ -292,16 +336,23 @@ class Catalog:
         expert_ids: Sequence[str],
         op: str,
         budget_b: int,
+        layout_id: Optional[str] = None,
     ) -> Optional[Dict]:
         """Plan reuse across iterative merges (§2.2): same inputs, same
-        budget, same operator -> identical plan, skip PlanGen entirely."""
+        budget, same operator -> identical plan, skip PlanGen entirely.
+        A plan is only reusable against the same physical layout — flat
+        and packed costings of identical inputs differ (physical vs
+        logical bytes), so candidates are filtered by ``layout_id``."""
         cur = self._conn().execute(
             "SELECT plan_id FROM plan WHERE base_id=? AND expert_ids=? AND "
-            "op=? AND budget_b=? ORDER BY created_at DESC LIMIT 1",
+            "op=? AND budget_b=? ORDER BY created_at DESC LIMIT 16",
             (base_id, json.dumps(list(expert_ids)), op, budget_b),
         )
-        row = cur.fetchone()
-        return self.get_plan(row[0]) if row else None
+        for (plan_id,) in cur.fetchall():
+            plan = self.get_plan(plan_id)
+            if plan and plan["payload"].get("layout_id") == layout_id:
+                return plan
+        return None
 
     # ------------------------------------------------------------- MergeSpec
     def record_spec(
@@ -358,6 +409,176 @@ class Catalog:
             "SELECT DISTINCT sid FROM dag_edge WHERE input_sid=?", (input_sid,)
         )
         return [r[0] for r in cur.fetchall()]
+
+    # ---------------------------------------------------------- PackedLayout
+    def record_packed_layout(
+        self,
+        layout_id: str,
+        base_id: str,
+        block_size: int,
+        root: str,
+        lossless: bool,
+        options: Dict,
+        stats: Dict,
+        members: Sequence[Tuple[str, int, int]],
+        extents: Sequence[Tuple[str, int, int, int, str, int]],
+        blocks: Sequence[Tuple[str, str, int, str, Optional[str], int, int]],
+    ) -> None:
+        """Persist one repacked layout atomically.
+
+        members: (model_id, logical_nbytes, physical_nbytes)
+        extents: (hash, offset, physical_nbytes, logical_nbytes, encoding, refs)
+        blocks:  (model_id, tensor_id, block_idx, kind, hash,
+                  physical_nbytes, logical_nbytes)
+        """
+        conn = self._conn()
+        with conn:  # one transaction: a layout is visible all-or-nothing
+            conn.execute(
+                "INSERT OR REPLACE INTO packed_layout VALUES (?,?,?,?,?,?,?,?)",
+                (
+                    layout_id, base_id, block_size, root, int(lossless),
+                    json.dumps(options), json.dumps(stats), time.time(),
+                ),
+            )
+            for table in ("packed_member", "packed_extent", "packed_block"):
+                conn.execute(
+                    f"DELETE FROM {table} WHERE layout_id=?", (layout_id,)
+                )
+            conn.executemany(
+                "INSERT INTO packed_member VALUES (?,?,?,?)",
+                [(layout_id, m, ln, pn) for m, ln, pn in members],
+            )
+            conn.executemany(
+                "INSERT INTO packed_extent VALUES (?,?,?,?,?,?,?)",
+                [(layout_id, *e) for e in extents],
+            )
+            conn.executemany(
+                "INSERT INTO packed_block VALUES (?,?,?,?,?,?,?,?)",
+                [(layout_id, *b) for b in blocks],
+            )
+        self._meta_io(1 + len(members) + len(extents) + len(blocks), row_bytes=64)
+
+    def get_packed_layout(self, layout_id: str) -> Optional[Dict]:
+        cur = self._conn().execute(
+            "SELECT layout_id, base_id, block_size, root, lossless, options, "
+            "stats, created_at FROM packed_layout WHERE layout_id=?",
+            (layout_id,),
+        )
+        row = cur.fetchone()
+        if row is None:
+            return None
+        members = self._conn().execute(
+            "SELECT model_id, logical_nbytes, physical_nbytes "
+            "FROM packed_member WHERE layout_id=? ORDER BY model_id",
+            (layout_id,),
+        ).fetchall()
+        return {
+            "layout_id": row[0],
+            "base_id": row[1],
+            "block_size": row[2],
+            "root": row[3],
+            "lossless": bool(row[4]),
+            "options": json.loads(row[5]),
+            "stats": json.loads(row[6]),
+            "created_at": row[7],
+            "members": [
+                {"model_id": m, "logical_nbytes": ln, "physical_nbytes": pn}
+                for m, ln, pn in members
+            ],
+        }
+
+    def list_packed_layouts(self) -> List[str]:
+        cur = self._conn().execute(
+            "SELECT layout_id FROM packed_layout ORDER BY created_at"
+        )
+        return [r[0] for r in cur.fetchall()]
+
+    def find_packed_layout(
+        self,
+        model_ids: Sequence[str],
+        block_size: int,
+        lossless_only: bool = True,
+        base_id: Optional[str] = None,
+    ) -> Optional[str]:
+        """Most recent layout at this block granularity whose member set
+        covers *all* of ``model_ids`` (the Session auto-prefer query).
+
+        ``base_id`` restricts to layouts packed against that base —
+        elision is only sound relative to the layout's own base (an
+        elided block means "delta vs *this* base is zero"), so a merge
+        against any other base must never adopt the layout.
+        """
+        model_ids = list(model_ids)
+        if not model_ids:
+            return None
+        params: List = [block_size]
+        q = "SELECT l.layout_id FROM packed_layout l WHERE l.block_size=? "
+        if lossless_only:
+            q += "AND l.lossless=1 "
+        if base_id is not None:
+            q += "AND l.base_id=? "
+            params.append(base_id)
+        q += (
+            "AND (SELECT COUNT(*) FROM packed_member m WHERE "
+            "m.layout_id=l.layout_id AND m.model_id IN (%s)) = ? "
+            "ORDER BY l.created_at DESC LIMIT 1"
+            % ",".join("?" * len(model_ids))
+        )
+        row = self._conn().execute(
+            q, [*params, *model_ids, len(model_ids)]
+        ).fetchone()
+        return row[0] if row else None
+
+    def packed_block_costs(
+        self, layout_id: str, model_id: str
+    ) -> Dict[Tuple[str, int], Tuple[int, Optional[str], str]]:
+        """Physical read-cost model of one member:
+        ``{(tensor_id, block_idx): (physical_nbytes, extent_hash, kind)}``.
+        Elided blocks cost 0; deduped blocks share an extent hash, so a
+        marginal-cost planner charges the extent once per merge."""
+        cur = self._conn().execute(
+            "SELECT tensor_id, block_idx, physical_nbytes, hash, kind "
+            "FROM packed_block WHERE layout_id=? AND model_id=?",
+            (layout_id, model_id),
+        )
+        return {(t, b): (pn, h, k) for t, b, pn, h, k in cur.fetchall()}
+
+    def packed_layout_members(self, layout_id: str) -> List[str]:
+        cur = self._conn().execute(
+            "SELECT model_id FROM packed_member WHERE layout_id=? "
+            "ORDER BY model_id",
+            (layout_id,),
+        )
+        return [r[0] for r in cur.fetchall()]
+
+    # ------------------------------------------------------------ references
+    def model_references(self, model_id: str) -> List[str]:
+        """Live references that make deleting ``model_id`` unsafe:
+        committed snapshots that list it as base/expert input, merge-graph
+        edges consuming it, and packed layouts that read or attribute
+        blocks from it (the base of a layout serves elided blocks)."""
+        refs: List[str] = []
+        conn = self._conn()
+        for sid, base_id, expert_ids in conn.execute(
+            "SELECT sid, base_id, expert_ids FROM manifest"
+        ).fetchall():
+            if base_id == model_id:
+                refs.append(f"manifest:{sid}(base)")
+            elif model_id in json.loads(expert_ids):
+                refs.append(f"manifest:{sid}(expert)")
+        for (sid,) in conn.execute(
+            "SELECT DISTINCT sid FROM dag_edge WHERE input_sid=?", (model_id,)
+        ).fetchall():
+            refs.append(f"dag_edge:{sid}")
+        for (lid,) in conn.execute(
+            "SELECT layout_id FROM packed_member WHERE model_id=?", (model_id,)
+        ).fetchall():
+            refs.append(f"packed_layout:{lid}(member)")
+        for (lid,) in conn.execute(
+            "SELECT layout_id FROM packed_layout WHERE base_id=?", (model_id,)
+        ).fetchall():
+            refs.append(f"packed_layout:{lid}(base)")
+        return refs
 
     # --------------------------------------------------------------- Manifest
     def record_manifest(

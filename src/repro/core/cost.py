@@ -42,8 +42,33 @@ def model_nbytes(catalog: Catalog, model_id: str) -> int:
 
 
 def naive_expert_cost(catalog: Catalog, expert_ids: Sequence[str]) -> int:
-    """C_expert^naive = Σ_i Σ_{T∈M_i} size(T) — the O(K) term (§3.2)."""
+    """C_expert^naive = Σ_i Σ_{T∈M_i} size(T) — the O(K) term (§3.2).
+
+    Always *logical* bytes: fractional budgets resolve against this even
+    on a packed store, which is precisely how the same budget buys more
+    selected blocks there (the physical cost of each block shrank).
+    """
     return sum(model_nbytes(catalog, e) for e in expert_ids)
+
+
+def packed_expert_cost(
+    catalog: Catalog, layout_id: str, expert_ids: Sequence[str]
+) -> int:
+    """Physical full-read expert cost on a packed layout: Σ per-block
+    post-dedup/elision/compression bytes, each shared extent charged
+    once.  Metadata-only (packed_block/packed_extent tables)."""
+    seen: set = set()
+    total = 0
+    for e in expert_ids:
+        for (phys, ehash, kind) in catalog.packed_block_costs(
+            layout_id, e
+        ).values():
+            if kind == "extent":
+                if ehash in seen:
+                    continue
+                seen.add(ehash)
+            total += phys
+    return total
 
 
 def estimate(

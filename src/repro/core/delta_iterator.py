@@ -40,6 +40,11 @@ from repro.core import blocks as blk
 from repro.core.plan import MergePlan
 from repro.store.tensorstore import ModelReader
 
+#: sentinel returned by a source for an elided packed block: the delta is
+#: exactly zero, synthesized with no expert I/O at all (the packed layout
+#: stores such blocks as metadata-only entries — store/packed)
+ELIDED = object()
+
 
 class _ExpertTensorSource:
     """Per (expert, tensor) block source implementing the three kinds."""
@@ -53,6 +58,7 @@ class _ExpertTensorSource:
         block_size: int,
         coalesce: bool,
         windowed: bool = False,
+        coalesce_gap: int = 0,
     ):
         self.reader = reader
         self.tensor_id = tensor_id
@@ -63,7 +69,16 @@ class _ExpertTensorSource:
         self.selected = list(selected)
         self._selected_set = frozenset(self.selected)
         self.coalesce = coalesce
+        self.coalesce_gap = coalesce_gap
         self.windowed = windowed
+        # packed-layout readers mark (near-)zero-delta blocks as elided:
+        # those selected blocks cost zero reads — pull() synthesizes them
+        elided = getattr(reader, "elided_blocks", None)
+        self._elided = (
+            frozenset(elided(tensor_id)) & self._selected_set
+            if elided is not None else frozenset()
+        )
+        self._read_list = [b for b in self.selected if b not in self._elided]
         self._cache: Dict[int, np.ndarray] = {}
         self._adapter_delta: Optional[np.ndarray] = None
         self._prefetched = False
@@ -77,10 +92,11 @@ class _ExpertTensorSource:
         """full/delta kinds: read the selected blocks (coalesced or not)."""
         if self.coalesce:
             self._cache = self.reader.read_blocks_coalesced(
-                self.tensor_id, self.selected, self.block_size, "expert"
+                self.tensor_id, self._read_list, self.block_size, "expert",
+                gap_bytes=self.coalesce_gap,
             )
         else:
-            for b in self.selected:
+            for b in self._read_list:
                 self._cache[b] = self.reader.read_block(
                     self.tensor_id, b, self.block_size, "expert"
                 )
@@ -110,7 +126,10 @@ class _ExpertTensorSource:
         and count as one resident unit thereafter.
         """
         want = [
-            b for b in blocks if b in self._selected_set and b not in self._cache
+            b for b in blocks
+            if b in self._selected_set
+            and b not in self._elided  # elided: synthesized, never read
+            and b not in self._cache
         ]
         if not want:
             return 0
@@ -123,7 +142,8 @@ class _ExpertTensorSource:
         if self.coalesce:
             self._cache.update(
                 self.reader.read_blocks_coalesced(
-                    self.tensor_id, want, self.block_size, "expert"
+                    self.tensor_id, want, self.block_size, "expert",
+                    gap_bytes=self.coalesce_gap,
                 )
             )
         else:
@@ -168,6 +188,8 @@ class _ExpertTensorSource:
     def pull(self, block_idx: int) -> Optional[np.ndarray]:
         if block_idx not in self._selected_set:
             return None
+        if block_idx in self._elided:
+            return ELIDED  # zero delta, zero I/O — caller synthesizes
         if not self._prefetched:
             if self.windowed:
                 raise RuntimeError(
@@ -206,6 +228,7 @@ class DeltaIterator:
         expert_readers: Dict[str, ModelReader],
         coalesce: bool = True,
         windowed: bool = False,
+        coalesce_gap: int = 0,
     ):
         self.tensor_id = tensor_id
         self.plan = plan
@@ -225,6 +248,7 @@ class DeltaIterator:
                 self.block_size,
                 coalesce,
                 windowed=windowed,
+                coalesce_gap=coalesce_gap,
             )
             if src.has_tensor():
                 self._sources.append((ei, e, src))
@@ -262,6 +286,15 @@ class DeltaIterator:
         for ei, e, src in self._sources:
             x = src.pull(block_idx)
             if x is None:
+                continue
+            if x is ELIDED:
+                # packed-layout elision: the stored block equals the base
+                # (full kind) or zero (delta kind) bit-exactly, so its
+                # delta row is exactly what the flat path would compute —
+                # all zeros — at zero expert I/O.
+                deltas.append(np.zeros(base_block.size, dtype=np.float32))
+                idxs.append(ei)
+                ids.append(e)
                 continue
             xf = np.asarray(x, dtype=np.float32)
             if src.kind == "full":

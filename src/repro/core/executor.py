@@ -77,6 +77,14 @@ class PipelineConfig:
     read_threads      — thread-pool size for base/expert block reads
                         (pread-based readers, safe under concurrency).
     write_queue_blocks — bound on output blocks queued behind compute.
+    coalesce_gap_bytes — tolerated unselected bytes between two selected
+                        ranges before a coalesced read is split (0 =
+                        merge only strictly adjacent ranges).  On
+                        high-latency shared storage a slightly larger
+                        sequential read beats an extra round trip; gap
+                        bytes are accounted as ``other``, never against
+                        the expert budget (see
+                        ``ModelReader.read_blocks_coalesced``).
     kernel            — "numpy": vectorized numpy apply, bit-identical to
                         the stream path (default; the golden-test
                         invariant).  "jax": the jitted kernel wrappers in
@@ -90,6 +98,7 @@ class PipelineConfig:
     read_threads: int = 4
     write_queue_blocks: int = 64
     kernel: str = "numpy"
+    coalesce_gap_bytes: int = 0
 
     # NOTE on the numpy kernel: blocks are *prepared* (expert deltas
     # pulled, upcast, DARE masks generated) window-at-a-time on the
@@ -114,16 +123,21 @@ class PipelineConfig:
             )
         if self.kernel not in ("numpy", "jax"):
             raise ValueError(f"unknown pipeline kernel {self.kernel!r}")
+        if self.coalesce_gap_bytes < 0:
+            raise ValueError(
+                f"coalesce_gap_bytes must be >= 0, got {self.coalesce_gap_bytes}"
+            )
 
     def max_resident_blocks(self, n_experts: int) -> int:
         """Bound on simultaneously resident input block slots: up to
-        ``prefetch_windows + 1`` windows staging on the pool, plus
-        ``prefetch_windows`` queued, plus one in compute; each window may
-        transiently hold, per block, the base block, K expert cache
-        blocks, and the K pulled delta rows materialized from them
-        (write-behind output is bounded separately by
-        ``write_queue_blocks``)."""
-        windows_in_flight = 2 * self.prefetch_windows + 2
+        ``prefetch_windows + 1`` windows staging on the pool, plus one
+        staged window in the producer's hand while it blocks on the full
+        window queue, plus ``prefetch_windows`` queued, plus one in
+        compute; each window may transiently hold, per block, the base
+        block, K expert cache blocks, and the K pulled delta rows
+        materialized from them (write-behind output is bounded separately
+        by ``write_queue_blocks``)."""
+        windows_in_flight = 2 * self.prefetch_windows + 3
         return windows_in_flight * self.window_blocks * (1 + 2 * n_experts)
 
 
@@ -142,6 +156,21 @@ def _is_mergeable(spec) -> bool:
     return np.issubdtype(
         np.asarray([], dtype=spec.dtype).dtype, np.floating
     ) or spec["dtype"] in ("bfloat16", "float16", "float32", "float64")
+
+
+def _packed_layouts_behind(expert_readers: Dict[str, object]) -> List[object]:
+    """Distinct PackedLayout objects serving the given readers — direct
+    members or members wrapped in a CachingModelReader (the Session's
+    shared-read injection).  Needed so budget enforcement can widen its
+    slack by honestly-recorded extent re-reads when the caller opened
+    the layout with a ``max_pinned_bytes`` cap."""
+    out: List[object] = []
+    for r in expert_readers.values():
+        inner = getattr(r, "_reader", r)
+        layout = getattr(inner, "layout", None)
+        if layout is not None and all(layout is not x for x in out):
+            out.append(layout)
+    return out
 
 
 def execute_merge(
@@ -198,10 +227,28 @@ def execute_merge(
     coverage_rows: List[Tuple[str, int, str]] = []
 
     base_reader = snapshots.models.open_model(plan.base_id)
+    packed_layout = None
     if expert_readers is None:
-        expert_readers = {
-            e: snapshots.models.open_model(e) for e in plan.expert_ids
-        }
+        if getattr(plan, "layout_id", None):
+            # packed physical layout: one opened layout serves every
+            # expert — each unique extent is read once and fanned out to
+            # all (expert, block) consumers, elided blocks cost nothing,
+            # and physical reads are tagged ``expert_packed``.
+            packed_layout = snapshots.packed.open_layout(plan.layout_id)
+            expert_readers = {
+                e: packed_layout.open_member(e) for e in plan.expert_ids
+            }
+        else:
+            expert_readers = {
+                e: snapshots.models.open_model(e) for e in plan.expert_ids
+            }
+    # layouts serving this merge (owned or injected): extent re-reads they
+    # record under memory-cap pressure widen the budget slack below
+    merge_layouts = (
+        [packed_layout] if packed_layout is not None
+        else _packed_layouts_behind(expert_readers)
+    )
+    reread_before = sum(l.reread_bytes for l in merge_layouts)
     theta = dict(plan.theta)
     seed = int(theta.get("seed", 0))
     is_dare = plan.op.lower() == "dare"
@@ -272,6 +319,14 @@ def execute_merge(
             # storage layer's accounting granularity (adapters read factor
             # tensors, which are far below the planned block bytes).
             slack = 2 * plan.block_size
+            if merge_layouts:
+                # the planner charges each shared extent once; when a
+                # max_pinned_bytes cap forced an extent to be re-read for
+                # a later consumer, those honestly-recorded bytes are a
+                # memory-cap tradeoff, not a plan violation
+                slack += (
+                    sum(l.reread_bytes for l in merge_layouts) - reread_before
+                )
             if realized_expert_bytes > plan.c_expert_hat + slack:
                 raise RuntimeError(
                     f"budget soundness violated: realized expert bytes "
@@ -287,9 +342,11 @@ def execute_merge(
             "theta": {k: v for k, v in theta.items() if not k.startswith("_")},
             "budget_b": plan.budget_b,
             "c_expert_hat": plan.c_expert_hat,
+            "c_expert_logical_hat": plan.logical_hat,
             "c_expert_run": realized_expert_bytes,
             "plan_digest": plan.digest(),
             "block_size": plan.block_size,
+            "layout_id": plan.layout_id,
         }
         sid = txn.atomic_publish(writer, manifest)
         manifest["output_root"] = snapshots.manifest(sid)["output_root"]
@@ -315,6 +372,8 @@ def execute_merge(
         if owns_expert_readers:
             for r in expert_readers.values():
                 r.close()
+            if packed_layout is not None:
+                packed_layout.close()
 
     run_stats = {
         "seconds": time.time() - t0,
@@ -503,7 +562,8 @@ class _PipelineEngine:
     def _read_base_window(self, tensor_id: str, window: List[int]) -> Dict:
         if self.coalesce:
             out = self.base_reader.read_blocks_coalesced(
-                tensor_id, window, self.plan.block_size, "base"
+                tensor_id, window, self.plan.block_size, "base",
+                gap_bytes=self.cfg.coalesce_gap_bytes,
             )
         else:
             out = {
@@ -572,6 +632,7 @@ class _PipelineEngine:
                         tensor_id, self.plan, self.base_reader,
                         self.expert_readers, coalesce=self.coalesce,
                         windowed=True,
+                        coalesce_gap=self.cfg.coalesce_gap_bytes,
                     )
                 task = _TensorTask(tensor_id, spec, n_blocks, mergeable, rev, D)
                 pending.append(("tensor", task, None, None))
@@ -723,6 +784,7 @@ class _PipelineEngine:
             "prefetch_windows": self.cfg.prefetch_windows,
             "read_threads": self.cfg.read_threads,
             "kernel": self.cfg.kernel,
+            "coalesce_gap_bytes": self.cfg.coalesce_gap_bytes,
             "peak_resident_blocks": self.gauge.peak,
             "resident_bound": self.cfg.max_resident_blocks(n_experts),
             "peak_write_queue_blocks": self.wb.peak_queued,

@@ -17,6 +17,13 @@ from repro.core.catalog import Catalog
 from repro.store.snapshot import SnapshotStore
 
 
+def _logical_hat(plan: Optional[Dict]) -> Optional[int]:
+    if plan is None:
+        return None
+    logical = plan.get("payload", {}).get("c_expert_logical_hat", -1)
+    return logical if logical is not None and logical >= 0 else plan.get("c_expert_hat")
+
+
 def explain(catalog: Catalog, snapshots: SnapshotStore, sid: str) -> Dict:
     man = catalog.get_manifest(sid)
     if man is None:
@@ -48,6 +55,12 @@ def explain(catalog: Catalog, snapshots: SnapshotStore, sid: str) -> Dict:
         "theta": (plan or {}).get("payload", {}).get("theta"),
         "budget_b": man["budget_b"],
         "c_expert_hat": (plan or {}).get("c_expert_hat"),
+        # packed physical layout provenance: c_expert_hat is *physical*
+        # (post-dedup/elision/compression) when layout_id is set, and
+        # c_expert_logical_hat is what a flat store would have moved for
+        # the same selection (they coincide on flat plans)
+        "layout_id": (plan or {}).get("payload", {}).get("layout_id"),
+        "c_expert_logical_hat": _logical_hat(plan),
         "c_expert_run": man["c_expert_run"],
         "budget_respected": (
             man["budget_b"] < 0 or man["c_expert_run"] <= man["budget_b"]

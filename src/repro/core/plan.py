@@ -39,6 +39,13 @@ class MergePlan:
     #: input snapshots that are themselves merge outputs (merge-graph edges).
     spec_id: Optional[str] = None
     parent_sids: List[str] = dataclasses.field(default_factory=list)
+    #: packed physical layout this plan was costed against (store/packed).
+    #: When set, ``c_expert_hat`` is the *physical* planned cost — post
+    #: dedup/elision/compression, what the budget B actually constrains —
+    #: and ``c_expert_logical_hat`` keeps the logical selected-block bytes
+    #: (what a flat store would move for the same selection).
+    layout_id: Optional[str] = None
+    c_expert_logical_hat: int = -1  # -1 => same as c_expert_hat (flat plan)
 
     # ------------------------------------------------------------- queries
     def blocks_for(self, expert_id: str, tensor_id: str) -> List[int]:
@@ -66,21 +73,32 @@ class MergePlan:
             len(bs) for per_t in self.selection.values() for bs in per_t.values()
         )
 
+    @property
+    def logical_hat(self) -> int:
+        """Logical selected expert bytes (== physical on a flat store)."""
+        return (
+            self.c_expert_logical_hat
+            if self.c_expert_logical_hat >= 0
+            else self.c_expert_hat
+        )
+
     # -------------------------------------------------------- serialization
     def digest(self) -> str:
-        canon = json.dumps(
-            {
-                "base": self.base_id,
-                "experts": self.expert_ids,
-                "op": self.op,
-                "theta": self.theta,
-                "budget": self.budget_b,
-                "block_size": self.block_size,
-                "selection": self.selection,
-                "order": self.tensor_order,
-            },
-            sort_keys=True,
-        )
+        doc = {
+            "base": self.base_id,
+            "experts": self.expert_ids,
+            "op": self.op,
+            "theta": self.theta,
+            "budget": self.budget_b,
+            "block_size": self.block_size,
+            "selection": self.selection,
+            "order": self.tensor_order,
+        }
+        if self.layout_id is not None:
+            # layout changes the cost model (and hence selection); keep
+            # flat-plan digests byte-stable by adding the key only here
+            doc["layout"] = self.layout_id
+        canon = json.dumps(doc, sort_keys=True)
         return hashlib.blake2b(canon.encode(), digest_size=16).hexdigest()
 
     def to_payload(self) -> Dict:

@@ -64,6 +64,7 @@ def plan_merge(
     reuse: bool = True,
     spec_id: Optional[str] = None,
     parent_sids: Optional[Sequence[str]] = None,
+    layout_id: Optional[str] = None,
 ) -> PlannerResult:
     """Generate (or reuse) a budget-feasible merge plan.
 
@@ -72,11 +73,51 @@ def plan_merge(
     API v2 provenance (declarative spec + merge-graph inputs) into the
     plan; a reused plan with different provenance is re-recorded under a
     fresh plan_id so lineage never aliases across specs.
+
+    ``layout_id`` costs the selection against a packed physical layout
+    (store/packed): candidates are charged their **physical** bytes —
+    zero for elided blocks, the (possibly compressed) extent size for
+    the *first* selected consumer of each content-addressed extent and
+    zero for every further one (the executor reads each unique extent
+    once and fans it out).  The same byte budget therefore buys strictly
+    more selected blocks on a packed store; ``plan.c_expert_hat`` becomes
+    the physical planned cost and ``plan.c_expert_logical_hat`` keeps the
+    flat-store equivalent.
     """
     t0 = time.time()
     theta = dict(theta or {})
     expert_ids = list(expert_ids)
     parent_sids = list(parent_sids or [])
+
+    packed_costs: Dict[str, Dict] = {}
+    if layout_id is not None:
+        layout_row = catalog.get_packed_layout(layout_id)
+        if layout_row is None:
+            raise KeyError(f"packed layout {layout_id!r} not in catalog")
+        if layout_row["block_size"] != block_size:
+            raise ValueError(
+                f"layout {layout_id!r} is packed at block_size="
+                f"{layout_row['block_size']}, planner wants {block_size}"
+            )
+        if layout_row["base_id"] != base_id:
+            # elision is defined relative to the layout's base: an elided
+            # block's delta is zero vs *that* base only — planning this
+            # merge against it would silently corrupt the output
+            raise ValueError(
+                f"layout {layout_id!r} was packed against base "
+                f"{layout_row['base_id']!r}; cannot plan a merge with "
+                f"base {base_id!r} from it"
+            )
+        members = set(catalog.packed_layout_members(layout_id))
+        missing_members = [e for e in expert_ids if e not in members]
+        if missing_members:
+            raise KeyError(
+                f"experts {missing_members} are not members of packed "
+                f"layout {layout_id!r}"
+            )
+        packed_costs = {
+            e: catalog.packed_block_costs(layout_id, e) for e in expert_ids
+        }
 
     base_rows = catalog.tensor_metas(base_id)
     if not base_rows:
@@ -88,7 +129,9 @@ def plan_merge(
     effective_budget = budget_b
     # -- plan reuse across iterative merges (§2.2) ------------------------
     if reuse and budget_b is not None:
-        cached = catalog.find_reusable_plan(base_id, expert_ids, op, budget_b)
+        cached = catalog.find_reusable_plan(
+            base_id, expert_ids, op, budget_b, layout_id=layout_id
+        )
         if cached is not None:
             plan = MergePlan.from_payload(cached["payload"])
             # Reuse is only sound at the same block granularity and with
@@ -98,7 +141,13 @@ def plan_merge(
             for d in plan.decisions:
                 if "theta_adjust" in d:
                     cached_theta[d["theta_adjust"]] = d["from"]
-            if plan.block_size != block_size or cached_theta != theta:
+            if (
+                plan.block_size != block_size
+                or cached_theta != theta
+                # physical-vs-logical costing differs: a flat plan is not
+                # a packed plan even with identical inputs and budget
+                or plan.layout_id != layout_id
+            ):
                 cached = None
         if cached is not None:
             if plan.spec_id != spec_id or plan.parent_sids != parent_sids:
@@ -128,6 +177,8 @@ def plan_merge(
     cand_tensor: List[str] = []
     cand_block: List[int] = []
     cand_bytes: List[int] = []
+    cand_phys: List[int] = []  # physical cost (== logical on flat stores)
+    cand_hash: List[Optional[str]] = []  # packed extent key (dedup sharing)
     cand_salience: List[float] = []
     cand_sig: List[int] = []
     fallback_events: List[Dict] = []
@@ -135,6 +186,7 @@ def plan_merge(
 
     for ei, e in enumerate(expert_ids):
         rows = catalog.block_metas(e, block_size)
+        pcosts = packed_costs.get(e)
         if rows:
             for (tensor_id, block_idx, nbytes, _h, l2, _amax, _mean, sig,
                  l2_delta, _cos) in rows:
@@ -144,6 +196,15 @@ def plan_merge(
                 cand_tensor.append(tensor_id)
                 cand_block.append(block_idx)
                 cand_bytes.append(nbytes)
+                if pcosts is not None:
+                    phys, ehash, kind = pcosts.get(
+                        (tensor_id, block_idx), (nbytes, None, "flat")
+                    )
+                    cand_phys.append(int(phys))
+                    cand_hash.append(ehash if kind == "extent" else None)
+                else:
+                    cand_phys.append(nbytes)
+                    cand_hash.append(None)
                 cand_salience.append(float(sal))
                 cand_sig.append(int(sig))
         else:
@@ -184,11 +245,17 @@ def plan_merge(
             scores = scores * (0.5 + 0.5 * agree)
 
     # -- greedy selection under budget (Algorithm 1) -----------------------
+    # ``cost`` is the planned C_expert_hat — *physical* bytes when costing
+    # against a packed layout (elided blocks are free; each content-
+    # addressed extent is charged to its first admitted consumer only,
+    # mirroring the executor's read-once fan-out), logical bytes otherwise.
     selection: Dict[str, Dict[str, List[int]]] = {e: {} for e in expert_ids}
     cost = 0
+    logical_cost = 0
     admitted = 0
     skipped_budget = 0
     decisions: List[Dict] = []
+    admitted_extents: set = set()
     if n:
         # deterministic order: score desc, then (expert, tensor, block) asc
         order = np.lexsort(
@@ -197,12 +264,19 @@ def plan_merge(
         )
         for i in order:
             b_bytes = int(sizes[i])
-            if effective_budget is not None and cost + b_bytes > effective_budget:
+            marginal = int(cand_phys[i])
+            ehash = cand_hash[i]
+            if ehash is not None and ehash in admitted_extents:
+                marginal = 0  # extent already paid for by an earlier admit
+            if effective_budget is not None and cost + marginal > effective_budget:
                 skipped_budget += 1
                 continue
             e = expert_ids[cand_expert[i]]
             selection[e].setdefault(cand_tensor[i], []).append(int(cand_block[i]))
-            cost += b_bytes
+            if ehash is not None:
+                admitted_extents.add(ehash)
+            cost += marginal
+            logical_cost += b_bytes
             admitted += 1
 
     # tensor-level fallback candidates compete at whole-tensor granularity
@@ -219,6 +293,7 @@ def plan_merge(
             nblocks = blk.num_blocks(nbytes, block_size)
             selection[e].setdefault(tensor_id, []).extend(range(nblocks))
             cost += nbytes
+            logical_cost += nbytes
             admitted += nblocks
 
     # θ adjustment under budget pressure (§4.4): bounded, recorded.
@@ -228,7 +303,10 @@ def plan_merge(
         and effective_budget is not None
         and naive_cost > 0
     ):
-        realized_frac = cost / naive_cost
+        # operator sparsity tracks the *coverage* fraction (logical bytes
+        # accessed), not physical I/O — dedup/compression change the cost
+        # of a block, not how much of the model the merge touches
+        realized_frac = logical_cost / naive_cost
         key = "density" if op.lower() == "dare" else "trim_frac"
         if key in theta:
             old = theta[key]
@@ -262,6 +340,8 @@ def plan_merge(
         decisions=decisions,
         spec_id=spec_id,
         parent_sids=parent_sids,
+        layout_id=layout_id,
+        c_expert_logical_hat=logical_cost,
     )
     # Feasibility (Definition 4.2) holds by construction; assert anyway.
     assert effective_budget is None or plan.c_expert_hat <= effective_budget, (
@@ -286,7 +366,9 @@ def plan_merge(
         "admitted": admitted,
         "skipped_budget": skipped_budget,
         "c_expert_hat": cost,
+        "c_expert_logical_hat": logical_cost,
         "c_expert_naive": naive_cost,
+        "layout_id": layout_id,
         "fallbacks": len(fallback_events),
     }
     return PlannerResult(plan, stats)
@@ -306,6 +388,8 @@ class BatchJob:
     reuse: bool = True
     spec_id: Optional[str] = None
     parent_sids: List[str] = dataclasses.field(default_factory=list)
+    #: packed layout to cost (and execute) this job against, if any
+    layout_id: Optional[str] = None
 
 
 class BatchPlannerResult:
@@ -317,29 +401,48 @@ class BatchPlannerResult:
 def _selection_bytes(
     catalog: Catalog,
     plan: MergePlan,
-    block_bytes_cache: Dict[str, Dict[Tuple[str, int], int]],
-) -> Dict[Tuple[str, str, int], int]:
-    """Expand a plan's selection into {(expert, tensor, block): nbytes}.
+    block_bytes_cache: Dict[str, Dict[Tuple[str, int], Tuple[int, Optional[str]]]],
+) -> Dict[Tuple[str, str, int], Tuple[int, Optional[str]]]:
+    """Expand a plan's selection into
+    ``{(expert, tensor, block): (nbytes, extent_key)}``.
 
     Sizes come from the same BlockMeta rows the planner enumerated (this
     also covers adapter experts, whose selection indexes base-shaped
     delta blocks rather than their own factor tensors); experts planned
     via the §4.5 tensor-level fallback derive sizes from TensorMeta.
+    Plans costed against a packed layout report *physical* bytes (elided
+    blocks 0, extents their compressed size) plus the content-addressed
+    extent key, so the batch pool can charge each shared extent once —
+    the same marginal model the planner budgets and the executor
+    realizes.  Flat plans carry ``extent_key=None``.
     """
-    out: Dict[Tuple[str, str, int], int] = {}
+    out: Dict[Tuple[str, str, int], Tuple[int, Optional[str]]] = {}
+    layout = plan.layout_id
     for e, per_t in plan.selection.items():
-        sizes = block_bytes_cache.get(e)
+        cache_key = e if layout is None else f"{layout}\x00{e}"
+        sizes = block_bytes_cache.get(cache_key)
         if sizes is None:
             sizes = {
-                (r[0], r[1]): r[2]
+                (r[0], r[1]): (r[2], None)
                 for r in catalog.block_metas(e, plan.block_size)
             }
-            block_bytes_cache[e] = sizes
+            if layout is not None:
+                for key, (phys, ehash, kind) in catalog.packed_block_costs(
+                    layout, e
+                ).items():
+                    if key in sizes:
+                        # layout-qualified: identical content in two
+                        # different layouts is still two physical extents
+                        sizes[key] = (
+                            phys,
+                            f"{layout}\x00{ehash}" if kind == "extent" else None,
+                        )
+            block_bytes_cache[cache_key] = sizes
         tensor_sizes: Optional[Dict[str, int]] = None
         for t, bs in per_t.items():
             for b in bs:
-                nbytes = sizes.get((t, b))
-                if nbytes is None:
+                entry = sizes.get((t, b))
+                if entry is None:
                     # tensor-level fallback expert (no BlockMeta rows)
                     if tensor_sizes is None:
                         tensor_sizes = {
@@ -348,9 +451,30 @@ def _selection_bytes(
                     total = tensor_sizes.get(t)
                     if total is None or b >= blk.num_blocks(total, plan.block_size):
                         continue
-                    nbytes = blk.block_range(total, b, plan.block_size).nbytes
-                out[(e, t, b)] = nbytes
+                    entry = (
+                        blk.block_range(total, b, plan.block_size).nbytes,
+                        None,
+                    )
+                out[(e, t, b)] = entry
     return out
+
+
+def _union_physical_bytes(
+    union: Dict[Tuple[str, str, int], Tuple[int, Optional[str]]],
+) -> int:
+    """Physical bytes of a shared read schedule: each content-addressed
+    extent charged once however many (expert, block) consumers share it
+    (extent keys arrive layout-qualified, so identical content living in
+    two layouts is still two physical extents)."""
+    total = 0
+    seen: set = set()
+    for nbytes, ehash in union.values():
+        if ehash is not None:
+            if ehash in seen:
+                continue
+            seen.add(ehash)
+        total += nbytes
+    return total
 
 
 def plan_batch(
@@ -377,7 +501,7 @@ def plan_batch(
     jobs = list(jobs)
     budgets: List[Optional[int]] = [j.budget_b for j in jobs]
     decisions: List[Dict[str, Any]] = []
-    block_bytes_cache: Dict[str, Dict[Tuple[str, int], int]] = {}
+    block_bytes_cache: Dict[str, Dict[Tuple[str, int], Tuple[int, Optional[str]]]] = {}
 
     results: List[PlannerResult] = []
     union_bytes = 0
@@ -398,16 +522,17 @@ def plan_batch(
                 reuse=j.reuse and first,
                 spec_id=j.spec_id,
                 parent_sids=j.parent_sids,
+                layout_id=j.layout_id,
             )
             for i, j in enumerate(jobs)
         ]
-        union: Dict[Tuple[str, str, int], int] = {}
+        union: Dict[Tuple[str, str, int], Tuple[int, Optional[str]]] = {}
         sum_bytes = 0
         for pr in results:
             sel = _selection_bytes(catalog, pr.plan, block_bytes_cache)
             union.update(sel)
             sum_bytes += pr.plan.c_expert_hat
-        union_bytes = sum(union.values())
+        union_bytes = _union_physical_bytes(union)
 
     for it in range(max(1, max_pool_iters)):
         _plan_round(first=it == 0)

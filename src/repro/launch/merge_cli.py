@@ -19,6 +19,18 @@ each mapping has ``base``, ``experts`` (model ids or nested specs),
 ``op``, ``theta``, ``budget`` ("30%", "2GiB", bytes), and optional
 ``name`` (used as the snapshot id).
 
+Packed physical layouts (store/packed; docs/STORAGE.md) get three
+subcommands::
+
+    merge_cli repack  --workspace WS --base base --models e0 e1 ...
+                      [--layout-id ID] [--elide-threshold X]
+                      [--compress zlib] [--downcast float16]
+    merge_cli layouts --workspace WS            # list layouts + savings
+    merge_cli delete  --workspace WS MODEL [--force]
+
+Merges auto-prefer a covering lossless layout; ``--no-packed`` forces
+flat reads and ``--layout ID`` forces a specific (possibly lossy) one.
+
 Also supports ANALYZE reuse, plan inspection (``--explain SID``) and the
 naive full-read baseline (``--naive``).
 """
@@ -26,12 +38,15 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 from repro.api import BudgetSpec, Session, load_spec_file
 from repro.core import MergePipe, naive_merge
 from repro.core.executor import PipelineConfig
 from repro.store.iostats import measure
+
+SUBCOMMANDS = ("repack", "layouts", "delete")
 
 
 def _pipeline_config(args) -> PipelineConfig:
@@ -41,7 +56,14 @@ def _pipeline_config(args) -> PipelineConfig:
         read_threads=args.pipeline_read_threads,
         write_queue_blocks=args.pipeline_write_queue,
         kernel=args.pipeline_kernel,
+        coalesce_gap_bytes=args.pipeline_coalesce_gap,
     )
+
+
+def _prefer_packed(args):
+    if args.no_packed:
+        return False
+    return args.layout if args.layout else True
 
 
 def _parse_theta(pairs):
@@ -53,6 +75,88 @@ def _parse_theta(pairs):
         except ValueError:
             theta[k] = v
     return theta
+
+
+def _cmd_repack(argv) -> None:
+    ap = argparse.ArgumentParser(prog="merge_cli repack")
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("--base", required=True,
+                    help="base checkpoint the layout elides against")
+    ap.add_argument("--models", nargs="+", required=True,
+                    help="expert checkpoints to pack into the layout")
+    ap.add_argument("--layout-id", default=None)
+    ap.add_argument("--block-size", type=int, default=128 * 1024)
+    ap.add_argument("--elide-threshold", type=float, default=0.0,
+                    help="L2 bound on a block's delta below which it is "
+                         "elided; 0 = byte-exact only (lossless)")
+    ap.add_argument("--compress", default="none", choices=["none", "zlib"])
+    ap.add_argument("--downcast", default=None,
+                    choices=["float16", "bfloat16"],
+                    help="store float32 extents downcast (LOSSY)")
+    args = ap.parse_args(argv)
+    from repro.store.packed import RepackOptions
+
+    sess = Session(args.workspace, block_size=args.block_size)
+    opts = RepackOptions(
+        elide_threshold=args.elide_threshold,
+        compress=args.compress,
+        downcast=args.downcast,
+    )
+    rep = sess.repack(args.models, args.base, layout_id=args.layout_id,
+                      options=opts)
+    saved = rep["logical_bytes"] - rep["physical_bytes"]
+    print(f"[repack] layout {rep['layout_id']}  "
+          f"({'lossless' if rep['lossless'] else 'LOSSY'})")
+    print(f"  members={len(rep['members'])}  extents={rep['extents']}  "
+          f"elided={rep['elided_blocks']}  dedup={rep['dedup_blocks']}")
+    print(f"  logical={rep['logical_bytes']/1e6:.1f}MB  "
+          f"physical={rep['physical_bytes']/1e6:.1f}MB  "
+          f"saved={saved/1e6:.1f}MB "
+          f"({saved/max(rep['logical_bytes'],1)*100:.1f}%)")
+    sess.close()
+
+
+def _cmd_layouts(argv) -> None:
+    ap = argparse.ArgumentParser(prog="merge_cli layouts")
+    ap.add_argument("--workspace", required=True)
+    args = ap.parse_args(argv)
+    sess = Session(args.workspace)
+    ids = sess.list_layouts()
+    if not ids:
+        print("no packed layouts")
+    for lid in ids:
+        row = sess.catalog.get_packed_layout(lid)
+        st = row["stats"]
+        print(f"{lid}  base={row['base_id']}  block={row['block_size']}  "
+              f"members={len(row['members'])}  "
+              f"{'lossless' if row['lossless'] else 'LOSSY'}  "
+              f"logical={st.get('logical_bytes', 0)/1e6:.1f}MB  "
+              f"physical={st.get('physical_bytes', 0)/1e6:.1f}MB  "
+              f"elided={st.get('elided_blocks', 0)}  "
+              f"dedup={st.get('dedup_blocks', 0)}")
+    sess.close()
+
+
+def _cmd_delete(argv) -> None:
+    ap = argparse.ArgumentParser(prog="merge_cli delete")
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("model_id")
+    ap.add_argument("--force", action="store_true",
+                    help="delete even while catalog lineage or a packed "
+                         "layout still references the model")
+    args = ap.parse_args(argv)
+    sess = Session(args.workspace)
+    try:
+        if not sess.snapshots.models.exists(args.model_id):
+            raise SystemExit(
+                f"no such model {args.model_id!r} in {args.workspace}"
+            )
+        sess.snapshots.models.delete_model(args.model_id, force=args.force)
+        print(f"[delete] removed {args.model_id}")
+    except ValueError as e:
+        raise SystemExit(str(e))
+    finally:
+        sess.close()
 
 
 def _run_specs(args) -> None:
@@ -76,6 +180,7 @@ def _run_specs(args) -> None:
             compute=args.compute,
             cache_max_bytes=cache_max,
             pipeline=_pipeline_config(args),
+            prefer_packed=_prefer_packed(args),
         )
     wall = time.time() - t0
     for h, res in zip(handles, results):
@@ -98,6 +203,13 @@ def _run_specs(args) -> None:
 
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] in SUBCOMMANDS:
+        cmd, argv = sys.argv[1], sys.argv[2:]
+        if cmd == "repack":
+            return _cmd_repack(argv)
+        if cmd == "layouts":
+            return _cmd_layouts(argv)
+        return _cmd_delete(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--workspace", required=True)
     ap.add_argument("--spec", default=None,
@@ -142,6 +254,18 @@ def main() -> None:
                     help="pipelined compute kernel: 'numpy' is "
                          "bit-identical to stream; 'jax' uses the jitted "
                          "Pallas/XLA wrappers (accelerators)")
+    ap.add_argument("--pipeline-coalesce-gap", type=int,
+                    default=pd.coalesce_gap_bytes,
+                    help="tolerated unselected bytes between selected "
+                         "ranges before a coalesced read splits (0 = "
+                         "adjacent-only; gap bytes are accounted as "
+                         "'other', never against the expert budget)")
+    ap.add_argument("--no-packed", action="store_true",
+                    help="always read flat checkpoints even when a "
+                         "covering packed layout exists")
+    ap.add_argument("--layout", default=None, metavar="LAYOUT_ID",
+                    help="force merging from a specific packed layout "
+                         "(explicit opt-in required for lossy layouts)")
     ap.add_argument("--naive", action="store_true",
                     help="run the stateless full-read baseline instead")
     ap.add_argument("--explain", default=None, metavar="SID",
@@ -182,6 +306,7 @@ def main() -> None:
                 args.base, args.experts, op=args.op, theta=theta,
                 budget=budget, sid=args.sid, compute=args.compute,
                 pipeline=_pipeline_config(args),
+                prefer_packed=_prefer_packed(args),
             )
             print(f"[mergepipe] committed {res.sid}  "
                   f"expert_read={res.stats['c_expert_run']/1e6:.1f} MB "

@@ -1,5 +1,12 @@
-"""Storage substrate: block-granular tensor files, snapshots, I/O stats."""
+"""Storage substrate: block-granular tensor files, packed layouts,
+snapshots, I/O stats."""
 from repro.store.iostats import GLOBAL_STATS, IOStats, measure
+from repro.store.packed import (
+    PackedLayout,
+    PackedModelReader,
+    PackedStore,
+    RepackOptions,
+)
 from repro.store.snapshot import SnapshotStore, StagingWriter
 from repro.store.tensorstore import CheckpointStore, ModelReader, load_model_arrays
 
@@ -7,6 +14,10 @@ __all__ = [
     "GLOBAL_STATS",
     "IOStats",
     "measure",
+    "PackedLayout",
+    "PackedModelReader",
+    "PackedStore",
+    "RepackOptions",
     "SnapshotStore",
     "StagingWriter",
     "CheckpointStore",

@@ -102,6 +102,12 @@ class CachingModelReader:
     def num_blocks(self, tensor_id: str, block_size: int) -> int:
         return self._reader.num_blocks(tensor_id, block_size)
 
+    def elided_blocks(self, tensor_id: str) -> frozenset:
+        """Packed-layout surface passthrough: blocks the DeltaIterator
+        synthesizes without any read (empty for flat readers)."""
+        fn = getattr(self._reader, "elided_blocks", None)
+        return fn(tensor_id) if fn is not None else frozenset()
+
     # -- caching reads -----------------------------------------------------
     def _admit(self, key: Tuple[str, int, int], arr: np.ndarray) -> None:
         if key in self._blocks or not self.budget.admit(arr.nbytes):
@@ -131,6 +137,7 @@ class CachingModelReader:
         block_idxs: Sequence[int],
         block_size: int,
         category: str,
+        gap_bytes: int = 0,
     ) -> Dict[int, np.ndarray]:
         out: Dict[int, np.ndarray] = {}
         missing: List[int] = []
@@ -146,7 +153,8 @@ class CachingModelReader:
             self.misses += len(missing)
         if missing:
             fetched = self._reader.read_blocks_coalesced(
-                tensor_id, missing, block_size, category
+                tensor_id, missing, block_size, category,
+                gap_bytes=gap_bytes,
             )
             with self._lock:
                 for b, arr in fetched.items():

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.store import dtypes
 from repro.store.iostats import GLOBAL_STATS, IOStats
+from repro.store.packed import PackedStore
 from repro.store.tensorstore import MODEL_MANIFEST, TENSOR_DIR, CheckpointStore
 
 
@@ -229,6 +230,9 @@ class SnapshotStore:
         self.workspace = workspace
         self.stats = stats or GLOBAL_STATS
         self.models = CheckpointStore(os.path.join(workspace, "models"), self.stats)
+        self.packed = PackedStore(
+            os.path.join(workspace, "packed"), self.stats, models=self.models
+        )
         self.staging_root = os.path.join(workspace, "staging")
         self.manifest_root = os.path.join(workspace, "manifests")
         os.makedirs(self.staging_root, exist_ok=True)

@@ -1,0 +1,140 @@
+"""CachingModelReader under concurrent readers and eviction.
+
+The shared-read cache's contract is *honest accounting over hit rate*:
+only physical reads record tagged bytes, hits are free, and eviction
+(``drop_cache`` — the per-level release path in Session.run_all) may race
+arbitrarily with readers without double-counting IOStats or handing out
+a stale buffer."""
+import threading
+
+import numpy as np
+
+from repro.store.blockcache import CacheBudget, CachingModelReader
+from repro.store.iostats import IOStats
+from repro.store.tensorstore import CheckpointStore
+
+BLK = 1024  # bytes per block
+N_BLOCKS = 16
+
+
+def _make_reader(tmp_path, stats, max_bytes=None):
+    store = CheckpointStore(str(tmp_path), stats)
+    x = np.arange(N_BLOCKS * BLK // 4, dtype=np.float32)
+    store.write_model("m", {"x": x})
+    return CachingModelReader(store.open_model("m"), max_bytes=max_bytes), x
+
+
+def test_concurrent_readers_across_eviction(tmp_path):
+    """Two reader threads hammer the same block set while a third evicts
+    the cache; every returned buffer is exact and IOStats bytes equal
+    misses x block size (hits record nothing — no double-count)."""
+    stats = IOStats()
+    reader, x = _make_reader(tmp_path, stats)
+    stop = threading.Event()
+    errors = []
+
+    def read_loop(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(400):
+            b = int(rng.integers(0, N_BLOCKS))
+            got = reader.read_block("x", b, BLK, "expert")
+            want = x[b * (BLK // 4):(b + 1) * (BLK // 4)]
+            if not np.array_equal(got, want):
+                errors.append(b)  # pragma: no cover - stale buffer
+
+    def evict_loop():
+        while not stop.is_set():
+            reader.drop_cache()
+
+    readers = [threading.Thread(target=read_loop, args=(s,)) for s in (1, 2)]
+    evictor = threading.Thread(target=evict_loop)
+    evictor.start()
+    for t in readers:
+        t.start()
+    for t in readers:
+        t.join()
+    stop.set()
+    evictor.join()
+
+    assert errors == []
+    # honest accounting: exactly one physical read per miss, none per hit
+    assert stats.read["expert"].calls == reader.misses
+    assert stats.read["expert"].bytes == reader.misses * BLK
+    assert reader.hits + reader.misses == 2 * 400
+    # budget bookkeeping balanced after the eviction storm
+    reader.drop_cache()
+    assert reader.cached_bytes == 0
+    assert reader.budget.used == 0
+    reader.close()
+
+
+def test_concurrent_first_touch_same_block(tmp_path):
+    """Many threads racing the *first* read of one block: the cache may
+    read it more than once (misses are counted), but IOStats always
+    matches the physical reads exactly and every thread sees the right
+    bytes."""
+    stats = IOStats()
+    reader, x = _make_reader(tmp_path, stats)
+    barrier = threading.Barrier(8)
+    results = []
+
+    def first_touch():
+        barrier.wait()
+        results.append(reader.read_block("x", 3, BLK, "expert"))
+
+    threads = [threading.Thread(target=first_touch) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    want = x[3 * (BLK // 4):4 * (BLK // 4)]
+    for got in results:
+        np.testing.assert_array_equal(got, want)
+    assert stats.read["expert"].calls == reader.misses
+    assert stats.read["expert"].bytes == reader.misses * BLK
+    assert 1 <= reader.misses <= 8
+    # only one buffer is retained, whatever the race outcome
+    assert reader.cached_bytes == BLK
+    reader.close()
+
+
+def test_eviction_under_budget_pressure_never_leaks(tmp_path):
+    """A tiny shared budget forces admit/passthrough decisions while
+    concurrent readers and evictions interleave; the shared CacheBudget
+    must end balanced (no phantom reservations keeping later readers
+    from caching)."""
+    stats = IOStats()
+    store = CheckpointStore(str(tmp_path), stats)
+    x = np.arange(N_BLOCKS * BLK // 4, dtype=np.float32)
+    store.write_model("m", {"x": x})
+    budget = CacheBudget(4 * BLK)  # room for 4 blocks across both readers
+    readers = [
+        CachingModelReader(store.open_model("m"), budget=budget)
+        for _ in range(2)
+    ]
+
+    def loop(r, seed):
+        rng = np.random.default_rng(seed)
+        for i in range(300):
+            b = int(rng.integers(0, N_BLOCKS))
+            got = r.read_blocks_coalesced("x", [b], BLK, "expert")[b]
+            assert got.nbytes == BLK
+            if i % 50 == 49:
+                r.drop_cache()
+
+    threads = [
+        threading.Thread(target=loop, args=(r, s))
+        for s, r in enumerate(readers)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for r in readers:
+        r.drop_cache()
+    assert budget.used == 0
+    assert sum(r.cached_bytes for r in readers) == 0
+    # accounting still exact under the cap: bytes == misses x block size
+    assert stats.read["expert"].bytes == sum(r.misses for r in readers) * BLK
+    for r in readers:
+        r.close()

@@ -70,3 +70,24 @@ def test_coalesce_preserves_bytes(nbytes, block, data):
     # runs are disjoint, sorted, and non-adjacent (maximal)
     for (o1, n1), (o2, _n2) in zip(runs, runs[1:]):
         assert o1 + n1 < o2
+
+
+def test_coalesce_gap_boundary():
+    """Ranges exactly `gap` bytes apart merge into one run; one byte
+    further and the run splits (the tunable's contract)."""
+    t = 100 * 1024
+    ranges = [blk.block_range(t, i, 1024) for i in (0, 3, 10)]
+    # blocks 0 and 3 are 2048 bytes apart (blocks 1-2 unselected)
+    assert blk.coalesce_ranges(ranges, gap=2048) == [
+        (0, 4 * 1024), (10 * 1024, 1024)
+    ]
+    assert blk.coalesce_ranges(ranges, gap=2047) == [
+        (0, 1024), (3 * 1024, 1024), (10 * 1024, 1024)
+    ]
+    # gap large enough to swallow every hole -> one run
+    assert blk.coalesce_ranges(ranges, gap=6 * 1024) == [(0, 11 * 1024)]
+    # gap=0 keeps the historical adjacent-only behavior
+    adj = [blk.block_range(t, i, 1024) for i in (0, 1, 2, 9)]
+    assert blk.coalesce_ranges(adj, gap=0) == [(0, 3 * 1024), (9 * 1024, 1024)]
+    with pytest.raises(ValueError):
+        blk.coalesce_ranges(ranges, gap=-1)

@@ -166,3 +166,104 @@ def test_out_of_order_block_write_rejected(tmp_path):
     with pytest.raises(RuntimeError):
         w.write_block("t", 1, np.zeros(256, np.float32))
     w.abort()
+
+
+def test_coalesced_gap_boundary_reads(tmp_path):
+    """Gap-tolerant coalescing: blocks exactly `gap` bytes apart merge
+    into one physical read; one byte less tolerance splits them.  Gap
+    bytes are tagged 'other', never the requested category, so budget
+    categories count exactly the requested payload."""
+    stats = IOStats()
+    store = CheckpointStore(str(tmp_path), stats)
+    x = np.arange(64 * 256, dtype=np.float32)  # 1 KiB blocks
+    store.write_model("m", {"x": x})
+    sel = [0, 3, 10]  # holes of 2 blocks (2048 B) and 6 blocks
+    with store.open_model("m") as r:
+        before = stats.snapshot()
+        out = r.read_blocks_coalesced("x", sel, 1024, "expert", gap_bytes=2048)
+        d = stats.delta_since(before)
+        # blocks 0 and 3 merged (gap == 2048 exactly), block 10 separate
+        assert stats.read["expert"].calls - before["read"].get(
+            "expert", {}
+        ).get("calls", 0) == 2
+        assert d["expert_read"] == 3 * 1024        # payload only
+        assert stats.read["other"].bytes == 2048   # the swallowed gap
+        for b in sel:
+            np.testing.assert_array_equal(out[b], x[b * 256:(b + 1) * 256])
+
+        # one byte below the hole size: no merging, no waste
+        stats.reset()
+        out = r.read_blocks_coalesced("x", sel, 1024, "expert", gap_bytes=2047)
+        assert stats.read["expert"].calls == 3
+        assert stats.read.get("other") is None
+        for b in sel:
+            np.testing.assert_array_equal(out[b], x[b * 256:(b + 1) * 256])
+
+
+def test_pipeline_coalesce_gap_config(tmp_path):
+    """The gap knob plumbs through PipelineConfig into the engine: output
+    stays bit-identical, expert payload bytes are unchanged, and only
+    'other' picks up the swallowed gap bytes."""
+    from repro.core.api import MergePipe
+    from repro.core.executor import PipelineConfig
+
+    with pytest.raises(ValueError):
+        PipelineConfig(coalesce_gap_bytes=-1).validate()
+
+    stats = IOStats()
+    mp = MergePipe(str(tmp_path / "ws"), block_size=1024, stats=stats)
+    rng = np.random.default_rng(0)
+    base = {"w": rng.normal(size=(96, 64)).astype(np.float32)}
+    mp.register_model("base", base)
+    for i in range(2):
+        mp.register_model(
+            f"e{i}",
+            {"w": base["w"] + 0.02 * rng.normal(size=(96, 64)).astype(np.float32)},
+        )
+    mp.ensure_analyzed("base", ["e0", "e1"])
+    with measure(stats) as io0:
+        mp.merge("base", ["e0", "e1"], "ties", theta={"trim_frac": 0.3},
+                 budget=0.4, compute="pipelined", sid="nogap",
+                 pipeline=PipelineConfig(window_blocks=4))
+    with measure(stats) as io1:
+        mp.merge("base", ["e0", "e1"], "ties", theta={"trim_frac": 0.3},
+                 budget=0.4, compute="pipelined", sid="gap",
+                 pipeline=PipelineConfig(window_blocks=4,
+                                         coalesce_gap_bytes=4096))
+    a, b = mp.load("nogap"), mp.load("gap")
+    for t in a:
+        np.testing.assert_array_equal(a[t], b[t])
+    # payload accounting identical; gap bytes (if any) never hit 'expert'
+    assert io1["expert_read"] == io0["expert_read"]
+    mp.close()
+
+
+def test_delete_model_guarded(tmp_path):
+    """delete_model refuses while catalog lineage or a packed layout
+    references the model; --force (force=True) is the escape hatch."""
+    from repro.core.api import MergePipe
+
+    mp = MergePipe(str(tmp_path / "ws"), block_size=1024)
+    rng = np.random.default_rng(1)
+    base = {"w": rng.normal(size=(32, 32)).astype(np.float32)}
+    mp.register_model("base", base)
+    mp.register_model("ex", {"w": base["w"] + 0.01})
+    mp.ensure_analyzed("base", ["ex"])
+    res = mp.merge("base", ["ex"], "avg", budget=None, sid="snap")
+    mp.repack(["ex"], "base", layout_id="lay")
+
+    for victim in ("base", "ex"):
+        with pytest.raises(ValueError, match="refusing to delete"):
+            mp.snapshots.models.delete_model(victim)
+    # the error names what still references the model
+    try:
+        mp.snapshots.models.delete_model("ex")
+    except ValueError as e:
+        assert "manifest:snap(expert)" in str(e)
+        assert "packed_layout:lay(member)" in str(e)
+    # unreferenced models delete freely; force overrides the guard
+    mp.register_model("loose", {"w": base["w"]})
+    mp.snapshots.models.delete_model("loose")
+    mp.snapshots.models.delete_model("ex", force=True)
+    assert not mp.snapshots.models.exists("ex")
+    mp.close()
