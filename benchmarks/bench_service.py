@@ -1,0 +1,235 @@
+"""MergeService under staggered arrivals vs the legacy batch barrier.
+
+Workload: J jobs over K shared experts, submitted with Poisson
+(exponential inter-arrival) gaps to a live :class:`repro.api.MergeService`
+— the ROADMAP's always-on serving regime — against two baselines run on
+identical fresh workspaces:
+
+``serial``
+    One ``Session.run()`` per job, back to back: no cross-job sharing,
+    the legacy O(K·J) expert-read regime.  Wall = Σ per-job walls.
+``barrier``
+    All J jobs through one blocking ``Session.run_all()`` batch: the
+    byte-optimal plan (every selected expert block read once), but jobs
+    arriving after planning starts would have waited for the whole batch.
+
+The service gets the *arrival* workload: jobs trickle in, the scheduler
+drains them into rolling overlap-aware windows, and the persistent
+shared-read cache keeps total physical expert bytes at the barrier
+plan's level even when arrivals split across windows.  Reported: p50/p95
+job latency (submit → commit), makespan, and total expert bytes.
+
+Reads run under the emulated shared-storage profile from
+benchmarks/bench_pipeline.py (per-call latency + bandwidth delay) so the
+I/O-dominated deployment regime is visible on page-cached local files.
+
+``--check`` (CI gate): at J=8/K=8 the staggered service must beat the
+serial baseline's wall time while total expert bytes stay within 10% of
+the barrier-batched plan.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.bench_pipeline import storage_profile
+from benchmarks.harness import Csv, bench_mb, build_zoo, cleanup, fresh_dir
+from repro.api import MergeService, MergeSpec, Session
+from repro.store.iostats import IOStats
+
+BLOCK_SIZE = 16 * 1024
+#: per-job expert-read budgets (distinct selections, heavy overlap)
+BUDGETS = ("40%", "55%", "70%", "85%", "100%", "60%", "75%", "90%")
+
+
+def _specs(ids: List[str], j: int) -> List[MergeSpec]:
+    return [
+        MergeSpec.build(
+            "base", ids, op="ties", theta={"trim_frac": 0.3},
+            budget=BUDGETS[i % len(BUDGETS)], name=f"job{i}",
+        )
+        for i in range(j)
+    ]
+
+
+def _fresh_zoo(tag: str, k: int, total_mb: float):
+    ws = fresh_dir(tag)
+    stats = IOStats()
+    mp, base, ids = build_zoo(ws, k, total_mb=total_mb,
+                              block_size=BLOCK_SIZE, stats=stats)
+    mp.ensure_analyzed(base, ids)
+    return ws, stats, mp, ids
+
+
+def run_serial(k: int, j: int, total_mb: float, profile: str) -> Dict:
+    ws, stats, mp, ids = _fresh_zoo("svc-serial", k, total_mb)
+    sess = Session(ws, block_size=BLOCK_SIZE, stats=stats)
+    expert0 = stats.c_expert
+    lat: List[float] = []
+    t0 = time.time()
+    with storage_profile(profile):
+        for spec in _specs(ids, j):
+            ts = time.time()
+            sess.run(spec)
+            lat.append(time.time() - ts)
+    wall = time.time() - t0
+    out = {"wall_s": wall, "expert_bytes": stats.c_expert - expert0,
+           "latency": lat}
+    sess.close()
+    mp.close()
+    cleanup(ws)
+    return out
+
+
+def run_barrier(k: int, j: int, total_mb: float, profile: str) -> Dict:
+    ws, stats, mp, ids = _fresh_zoo("svc-barrier", k, total_mb)
+    sess = Session(ws, block_size=BLOCK_SIZE, stats=stats)
+    for spec in _specs(ids, j):
+        sess.submit(spec)
+    expert0 = stats.c_expert
+    t0 = time.time()
+    with storage_profile(profile):
+        sess.run_all()
+    wall = time.time() - t0
+    out = {"wall_s": wall, "expert_bytes": stats.c_expert - expert0,
+           "latency": [wall] * j}  # every job waits for the whole batch
+    sess.close()
+    mp.close()
+    cleanup(ws)
+    return out
+
+
+def run_service(
+    k: int, j: int, total_mb: float, profile: str,
+    mean_gap_s: float = 0.05, seed: int = 0,
+) -> Dict:
+    ws, stats, mp, ids = _fresh_zoo("svc-live", k, total_mb)
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_gap_s, size=j)  # Poisson arrivals
+    svc = MergeService(ws, block_size=BLOCK_SIZE, stats=stats)
+    expert0 = stats.c_expert
+    handles = []
+    t0 = time.time()
+    with storage_profile(profile):
+        for spec, gap in zip(_specs(ids, j), gaps):
+            time.sleep(gap)
+            handles.append(svc.submit(spec))
+        for h in handles:
+            h.wait()
+    wall = time.time() - t0
+    lat = [h.finished_at - h.submitted_at for h in handles]
+    out = {
+        "wall_s": wall,
+        "expert_bytes": stats.c_expert - expert0,
+        "latency": lat,
+        "windows": len(svc.window_log),
+    }
+    svc.close()
+    mp.close()
+    cleanup(ws)
+    return out
+
+
+def _pct(lat: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(lat), p))
+
+
+def run(
+    ks=(8,),
+    js=(8,),
+    profiles=("shared",),
+    total_mb: Optional[float] = None,
+    json_path: Optional[str] = None,
+) -> Dict:
+    csv = Csv("service", [
+        "profile", "k", "j", "mode", "wall_s", "p50_s", "p95_s",
+        "expert_mb", "bytes_vs_barrier", "windows",
+    ])
+    total_mb = total_mb if total_mb is not None else bench_mb()
+    summary: Dict = {
+        "workload": {"model_mb": total_mb, "block_size": BLOCK_SIZE,
+                     "budgets": list(BUDGETS)},
+        "results": [],
+    }
+    for profile in profiles:
+        for k in ks:
+            for j in js:
+                serial = run_serial(k, j, total_mb, profile)
+                barrier = run_barrier(k, j, total_mb, profile)
+                service = run_service(k, j, total_mb, profile)
+                for mode, r in (("serial", serial), ("barrier", barrier),
+                                ("service", service)):
+                    row = {
+                        "profile": profile, "k": k, "j": j, "mode": mode,
+                        "wall_s": r["wall_s"],
+                        "p50_s": _pct(r["latency"], 50),
+                        "p95_s": _pct(r["latency"], 95),
+                        "expert_mb": r["expert_bytes"] / 1e6,
+                        "bytes_vs_barrier":
+                            r["expert_bytes"] / max(barrier["expert_bytes"], 1),
+                        "windows": r.get("windows", ""),
+                    }
+                    csv.row(*row.values())
+                    summary["results"].append(row)
+    out = json_path or os.environ.get("REPRO_BENCH_JSON",
+                                      "bench_service.json")
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# service json summary -> {out}", flush=True)
+    return summary
+
+
+def check(max_bytes_ratio: float = 1.1) -> int:
+    """CI gate: staggered service beats serial wall at J=8 while total
+    expert bytes stay within ``max_bytes_ratio`` of the barrier plan."""
+    k = j = 8
+    total_mb = 2.0  # small models keep the emulated-I/O run CI-sized
+    serial = run_serial(k, j, total_mb, "shared")
+    barrier = run_barrier(k, j, total_mb, "shared")
+    service = run_service(k, j, total_mb, "shared")
+    ratio = service["expert_bytes"] / max(barrier["expert_bytes"], 1)
+    speedup = serial["wall_s"] / max(service["wall_s"], 1e-9)
+    print(f"# check: serial={serial['wall_s']:.2f}s "
+          f"barrier={barrier['wall_s']:.2f}s "
+          f"service={service['wall_s']:.2f}s "
+          f"(speedup {speedup:.2f}x over serial, "
+          f"windows={service['windows']})")
+    print(f"# check: expert bytes serial={serial['expert_bytes'] / 1e6:.1f}MB "
+          f"barrier={barrier['expert_bytes'] / 1e6:.1f}MB "
+          f"service={service['expert_bytes'] / 1e6:.1f}MB "
+          f"(ratio {ratio:.3f} vs barrier, require <= {max_bytes_ratio})")
+    ok = True
+    if service["wall_s"] >= serial["wall_s"]:
+        print("FAIL: staggered service did not beat serial run_all wall time")
+        ok = False
+    if ratio > max_bytes_ratio:
+        print("FAIL: service expert bytes exceed the barrier plan budget")
+        ok = False
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: throughput vs serial + bytes vs barrier")
+    ap.add_argument("--check-bytes-ratio", type=float, default=1.1)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check(args.check_bytes_ratio))
+    if args.fast:
+        run(ks=(4,), js=(4,), total_mb=2.0, json_path=args.json)
+    else:
+        run(ks=(8,), js=(8,), profiles=("shared", "hot"),
+            json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ from benchmarks import (
     bench_quality,
     bench_roofline,
     bench_scaling_k,
+    bench_service,
     bench_stability,
 )
 
@@ -64,6 +65,11 @@ ALL = {
     "packed_store": lambda fast: bench_packed_store.run(
         ks=(4,) if fast else (8,),
         storage_profiles=("hot",) if fast else ("hot", "shared")),
+    "service": lambda fast: bench_service.run(
+        ks=(4,) if fast else (8,),
+        js=(4,) if fast else (8,),
+        profiles=("shared",) if fast else ("shared", "hot"),
+        total_mb=2.0 if fast else None),
 }
 
 

@@ -24,8 +24,9 @@ def main() -> None:
     base = {k: rng.normal(size=s).astype(np.float32)
             for k, s in shapes.items()}
     stats = IOStats()
-    with tempfile.TemporaryDirectory() as ws:
-        sess = Session(ws, block_size=32 * 1024, stats=stats)
+    with tempfile.TemporaryDirectory() as ws, Session(
+        ws, block_size=32 * 1024, stats=stats
+    ) as sess:
         sess.register_model("base", base)
         ids = []
         for i in range(10):
@@ -72,7 +73,6 @@ def main() -> None:
               f"(sequential would read {batch['c_expert_hat_sum']/1e6:.2f})")
         print(f"sharing factor   : {batch['sharing_factor']:.2f}x "
               f"({batch['cache']['hits']} cached block reads)")
-        sess.close()
 
 
 if __name__ == "__main__":

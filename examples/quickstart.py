@@ -27,8 +27,9 @@ def main() -> None:
     ]
 
     stats = IOStats()
-    with tempfile.TemporaryDirectory() as ws:
-        sess = Session(ws, block_size=64 * 1024, stats=stats)
+    with tempfile.TemporaryDirectory() as ws, Session(
+        ws, block_size=64 * 1024, stats=stats
+    ) as sess:
         sess.register_model("base", base)
         ids = [sess.register_model(f"expert-{i}", e)
                for i, e in enumerate(experts)]
@@ -64,7 +65,6 @@ def main() -> None:
         merged = sess.load(result.sid)
         print("merged tensors:", {k: v.shape for k, v in merged.items()})
         assert sess.verify(result.sid)
-        sess.close()
 
 
 if __name__ == "__main__":

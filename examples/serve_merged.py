@@ -1,5 +1,8 @@
-"""Serve a merged checkpoint with batched requests: train two experts,
-merge under budget, then run the serving engine on the merged model.
+"""The merge-then-serve loop, end to end: train two experts, submit the
+merge to a live :class:`~repro.api.MergeService` (the always-on job API
+— admission control, budget arbitration, cancellation), wait on the
+future-style handle, and hand the committed snapshot to the serving
+engine.
 
     PYTHONPATH=src python examples/serve_merged.py
 """
@@ -8,8 +11,8 @@ import tempfile
 import jax
 import numpy as np
 
+from repro.api import MergeService, MergeSpec
 from repro.configs import get_smoke_config
-from repro.core import MergePipe
 from repro.models import build_model
 from repro.serve.engine import Request, ServeEngine
 from repro.store.checkpoint import flatten_tree, unflatten_like
@@ -37,15 +40,26 @@ def main() -> None:
             pipe.close()
         experts.append(st.params)
 
-    with tempfile.TemporaryDirectory() as ws:
-        mp = MergePipe(ws, block_size=32 * 1024)
-        mp.register_model("base", flatten_tree(base.params))
-        ids = [mp.register_model(f"e{i}", flatten_tree(p))
+    with tempfile.TemporaryDirectory() as ws, MergeService(
+        ws, block_size=32 * 1024, budget="1GiB", tenants={"serving": 1.0}
+    ) as svc:
+        svc.register_model("base", flatten_tree(base.params))
+        ids = [svc.register_model(f"e{i}", flatten_tree(p))
                for i, p in enumerate(experts)]
-        res = mp.merge("base", ids, "ties", theta={"trim_frac": 0.3},
-                       budget=0.5)
-        merged = unflatten_like(base.params, mp.load(res.sid))
-        print(f"[merge] committed {res.sid}")
+
+        # submit the merge like a serving-path tenant would: asynchronous,
+        # budget-arbitrated, cancellable; the handle is a future
+        handle = svc.submit(
+            MergeSpec.build("base", ids, op="ties",
+                            theta={"trim_frac": 0.3}, budget="50%",
+                            name="serve-merged"),
+            tenant="serving", priority=5,
+        )
+        res = handle.wait()
+        print(f"[merge] committed {res.sid}  "
+              f"(job {handle.job_id}, window {handle.window_id}, "
+              f"expert_read={res.stats['c_expert_run'] / 1e6:.1f}MB)")
+        merged = unflatten_like(base.params, svc.load(res.sid))
 
         engine = ServeEngine(model, merged, batch_slots=4, max_len=64)
         rng = np.random.default_rng(0)
@@ -62,7 +76,6 @@ def main() -> None:
                   f"{r.out_tokens[:8]}...")
         assert all(r.done for r in reqs)
         print("[serve] all requests completed on the merged model")
-        mp.close()
 
 
 if __name__ == "__main__":

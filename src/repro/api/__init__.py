@@ -5,8 +5,15 @@ Public surface:
     BudgetSpec    typed expert-read budgets ("30%", "2GiB", bytes, ...)
     OperatorSpec  schema-validated operator + θ
     MergeSpec     composable merge-graph node (inputs may be MergeSpecs)
-    Session       batch submit()/run_all() with cross-job shared reads
-    JobHandle     a submitted job and (after run_all) its result
+    MergeService  asynchronous, continuously-scheduling job service:
+                  submit(spec, tenant=..., priority=..., deadline=...)
+                  with admission control, weighted-fair budget
+                  arbitration, and cancellation (docs/SERVICE.md)
+    Session       workspace entry point; submit()/run_all() batches are
+                  a compatibility wrapper over an embedded MergeService
+    JobHandle     future-style handle: wait()/status/progress()/cancel()
+    JobState / JobCancelled / AdmissionRejected / DeadlineExceeded
+                  job lifecycle vocabulary
     load_spec_file  parse a YAML/JSON spec document into MergeSpecs
 
 The legacy one-shot facade (:class:`repro.core.api.MergePipe`) delegates
@@ -18,15 +25,29 @@ import json
 from typing import List
 
 from repro.api.budget import BudgetSpec
-from repro.api.session import JobHandle, Session
+from repro.api.jobs import (
+    AdmissionRejected,
+    DeadlineExceeded,
+    JobCancelled,
+    JobHandle,
+    JobState,
+)
+from repro.api.service import BudgetArbiter, MergeService
+from repro.api.session import Session
 from repro.api.spec import MergeSpec, OperatorSpec
 
 __all__ = [
     "BudgetSpec",
     "OperatorSpec",
     "MergeSpec",
+    "MergeService",
+    "BudgetArbiter",
     "Session",
     "JobHandle",
+    "JobState",
+    "JobCancelled",
+    "AdmissionRejected",
+    "DeadlineExceeded",
     "load_spec_file",
 ]
 

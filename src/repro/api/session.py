@@ -4,12 +4,17 @@ A :class:`Session` owns one workspace (snapshot store + catalog +
 transaction manager) and accepts declarative :class:`~repro.api.spec.MergeSpec`
 jobs:
 
-    sess = Session(workspace)
-    sess.submit(spec_a)
-    sess.submit(spec_b)
-    results = sess.run_all()
+    with Session(workspace) as sess:
+        sess.submit(spec_a)
+        sess.submit(spec_b)
+        results = sess.run_all()
 
-``run_all`` plans the whole job set together (:func:`repro.core.planner.plan_batch`)
+``run_all`` is a compatibility wrapper over the asynchronous
+:class:`~repro.api.service.MergeService`: the queued jobs are submitted
+to an embedded (inline, unthreaded) service as one atomic scheduling
+window and waited on — golden-tested bit-identical, with identical
+per-category IOStats, to the former blocking batch barrier.  The window
+plans the whole job set together (:func:`repro.core.planner.plan_batch`)
 and executes it with a **cross-job read schedule**: every expert model is
 opened once behind a :class:`~repro.store.blockcache.CachingModelReader`,
 so one physical scan of each selected expert block feeds every job that
@@ -20,65 +25,39 @@ Merge *graphs* (specs whose inputs are themselves specs) execute as a
 DAG in depth order; intermediate snapshots are analyzed and fed forward,
 and every node records its spec and parent edges in the catalog so
 ``explain()``/``merge_graph()`` can reconstruct the full lineage.
+
+For an always-on service surface — concurrent tenants, admission
+control, budget arbitration, cancellation — construct a
+:class:`~repro.api.service.MergeService` directly (docs/SERVICE.md).
+
+I/O accounting is session-scoped: a Session (or MergeService) built
+without an explicit ``stats`` gets its **own** :class:`IOStats`, so two
+concurrent sessions never cross-pollute counters.  Pass
+``stats=GLOBAL_STATS`` to opt into the legacy process-global instance.
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+import uuid
+from typing import Any, Dict, List, Optional, Sequence, Union
 
-import numpy as np
-
-from repro.api.budget import BudgetLike, BudgetSpec
+from repro.api.budget import BudgetLike
+from repro.api.jobs import JobHandle, JobState
+from repro.api.service import MergeService, WindowOptions
 from repro.api.spec import MergeSpec
+from repro.api.workspace import WorkspaceOps
 from repro.core import blocks as blk
-from repro.core import cost as cost_model
 from repro.core.catalog import Catalog
-from repro.core.executor import MergeResult, PipelineConfig, execute_merge
-from repro.core.lineage import explain as _explain
-from repro.core.lineage import lineage_chain, merge_graph, verify_snapshot
-from repro.core.planner import BatchJob, plan_batch
-from repro.core.sketch import analyze_model
+from repro.core.executor import MergeResult, PipelineConfig
 from repro.core.transactions import TransactionManager
-from repro.store.blockcache import CacheBudget, CachingModelReader
-from repro.store.iostats import GLOBAL_STATS, IOStats
+from repro.store.iostats import IOStats
 from repro.store.snapshot import SnapshotStore
-from repro.store.tensorstore import load_model_arrays
+
+#: re-exported for backward compatibility (the bound moved to service.py)
+from repro.api.service import DEFAULT_CACHE_MAX_BYTES  # noqa: F401
 
 
-class JobHandle:
-    """A submitted merge job: spec + (after run_all) its committed result."""
-
-    def __init__(self, spec: MergeSpec, sid: Optional[str] = None):
-        self.spec = spec
-        self.requested_sid = sid
-        self.sid: Optional[str] = None
-        self.result: Optional[MergeResult] = None
-
-    @property
-    def done(self) -> bool:
-        return self.result is not None
-
-    def __repr__(self) -> str:  # pragma: no cover
-        state = self.sid if self.done else "pending"
-        return f"JobHandle({self.spec.spec_id}, {state})"
-
-
-class _Node:
-    """One DAG node scheduled for execution (deduped by spec_id)."""
-
-    def __init__(self, spec: MergeSpec, sid_hint: Optional[str]):
-        self.spec = spec
-        self.sid_hint = sid_hint
-        self.sid: Optional[str] = None
-        self.result: Optional[MergeResult] = None
-
-
-#: default bound on the shared-read block cache per run_all level; misses
-#: beyond the cap stream uncached (sharing degrades, memory stays bounded)
-DEFAULT_CACHE_MAX_BYTES = 1 << 30
-
-
-class Session:
+class Session(WorkspaceOps):
     """Workspace-scoped entry point for the declarative v2 API."""
 
     def __init__(
@@ -90,7 +69,8 @@ class Session:
     ):
         self.workspace = workspace
         self.block_size = block_size
-        self.stats = stats or GLOBAL_STATS
+        # session-scoped accounting by default; GLOBAL_STATS is opt-in
+        self.stats = stats if stats is not None else IOStats()
         os.makedirs(workspace, exist_ok=True)
         self.snapshots = SnapshotStore(workspace, self.stats)
         self.catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), self.stats)
@@ -101,6 +81,8 @@ class Session:
         if recover:
             self.txn.recover()
         self._queue: List[JobHandle] = []
+        self._svc: Optional[MergeService] = None
+        self._closed = False
 
     @classmethod
     def _from_parts(
@@ -121,42 +103,25 @@ class Session:
         sess.catalog = catalog
         sess.txn = txn
         sess._queue = []
+        sess._svc = None
+        sess._closed = False
         return sess
 
-    # ------------------------------------------------------------ ingestion
-    def register_model(
-        self,
-        model_id: str,
-        arrays: Mapping[str, np.ndarray],
-        kind: str = "full",
-        scale: float = 1.0,
-        analyze: bool = False,
-        base_id: Optional[str] = None,
-    ) -> str:
-        meta: Dict[str, Any] = {"kind": kind}
-        if kind == "adapter":
-            meta["scale"] = scale
-        self.snapshots.models.write_model(model_id, arrays, meta=meta)
-        if analyze:
-            self.analyze(model_id, base_id=base_id)
-        return model_id
-
-    def analyze(
-        self, model_id: str, base_id: Optional[str] = None, force: bool = False
-    ) -> Dict:
-        return analyze_model(
-            self.catalog,
-            self.snapshots.models,
-            model_id,
-            self.block_size,
-            base_id=base_id,
-            force=force,
-        )
-
-    def ensure_analyzed(self, base_id: str, expert_ids: Sequence[str]) -> None:
-        self.analyze(base_id)
-        for e in expert_ids:
-            self.analyze(e, base_id=base_id)
+    # ------------------------------------------------------------- service
+    def _service(self) -> MergeService:
+        """The embedded inline MergeService run_all delegates to: shares
+        this session's substrate and stats, runs windows on the calling
+        thread (no scheduler thread), and keeps the legacy per-window
+        reader lifecycle so I/O accounting is bit-identical."""
+        if self._closed:
+            raise RuntimeError("Session already closed")
+        if self._svc is None:
+            self._svc = MergeService._from_parts(
+                self.snapshots, self.catalog, self.txn,
+                self.block_size, self.stats,
+                persistent_cache=False,
+            )
+        return self._svc
 
     # ---------------------------------------------------------------- batch
     def submit(
@@ -182,6 +147,12 @@ class Session:
     ) -> List[MergeResult]:
         """Plan and execute every queued job, sharing expert block reads.
 
+        Compatibility wrapper (see docs/API.md): submits the queued jobs
+        to the embedded :class:`~repro.api.service.MergeService` as one
+        atomic scheduling window and waits for all of them — the same
+        plan-together/share-reads semantics the blocking barrier had,
+        now expressed as submit-all/wait-all.
+
         ``shared_budget`` optionally pools the *union* expert-read bytes
         of each DAG level (see :func:`repro.core.planner.plan_batch`);
         fractions resolve against the naive cost of the level's distinct
@@ -201,343 +172,50 @@ class Session:
         selected blocks).  Pass a layout id to force a specific layout
         (including lossy ones — an explicit opt-in), or ``False`` to
         always read flat checkpoints.
-        Returns results in submission order.
+        Returns results in submission order; handles cancelled while
+        still queued are dropped from the batch (and from the results).
         """
-        if cache_max_bytes == "auto":
-            cache_max_bytes = DEFAULT_CACHE_MAX_BYTES
-        jobs = list(self._queue)
+        queued = list(self._queue)
+        # a handle cancelled while still session-queued must never
+        # execute: it is dropped from the batch (and from the results)
+        jobs = [h for h in queued if h.status not in JobState.TERMINAL]
         if not jobs:
+            self._queue = self._queue[len(queued):]
             return []
+        svc = self._service()
+        opts = WindowOptions(
+            shared_reads=shared_reads,
+            shared_budget=shared_budget,
+            compute=compute,
+            coalesce=coalesce,
+            analyze=analyze,
+            cache_max_bytes=cache_max_bytes,
+            pipeline=pipeline,
+            prefer_packed=prefer_packed,
+        )
+        # one atomic group: the whole batch is a single scheduling window
+        # (plan-together semantics, batch-wide sid validation)
+        token = "batch-" + uuid.uuid4().hex[:8]
+        shandles = [
+            svc.submit(h.spec, sid=h.requested_sid, _opts=opts, _group=token)
+            for h in jobs
+        ]
+        svc.drain()
 
-        # -- 1. expand spec DAGs, dedupe shared subgraphs by content ------
-        nodes: Dict[str, _Node] = {}
-        alias_roots: List[_Node] = []
-        handle_nodes: Dict[int, _Node] = {}
-        for handle in jobs:
-            for spec in handle.spec.walk():
-                node = nodes.get(spec.spec_id)
-                if node is None:
-                    nodes[spec.spec_id] = node = _Node(spec, spec.name)
-            root = nodes[handle.spec.spec_id]
-            if handle.requested_sid:
-                if root.sid_hint and root.sid_hint != handle.requested_sid:
-                    # same content already claimed under another sid: the
-                    # user asked for a distinct snapshot — execute again
-                    # under its own name (children still dedupe).
-                    root = _Node(handle.spec, handle.requested_sid)
-                    alias_roots.append(root)
-                else:
-                    root.sid_hint = handle.requested_sid
-            handle_nodes[id(handle)] = root
-
-        # -- 2. validate target snapshot ids before any work --------------
-        # (the queue is only consumed after the batch completes, so a
-        # rejected or failed batch can be fixed and rerun without
-        # resubmitting)
-        all_nodes = [*nodes.values(), *alias_roots]
-        claimed: Dict[str, _Node] = {}
-        for node in all_nodes:
-            hint = node.sid_hint
-            if not hint:
-                continue
-            other = claimed.get(hint)
-            if other is not None and other is not node:
-                raise ValueError(
-                    f"two different merge jobs target snapshot id {hint!r} "
-                    f"(specs {other.spec.spec_id} and {node.spec.spec_id})"
-                )
-            claimed[hint] = node
-            if self.snapshots.is_published(hint):
-                # incremental composition: if the committed snapshot was
-                # produced by this exact spec, adopt it instead of
-                # re-executing (or failing) — graphs can be built up
-                # across run_all calls.
-                man = self.catalog.get_manifest(hint)
-                plan = (
-                    self.catalog.get_plan(man["plan_id"]) if man else None
-                )
-                committed_spec = (plan or {}).get("payload", {}).get("spec_id")
-                if committed_spec == node.spec.spec_id:
-                    node.sid = hint
-                    # stats keep the executor's standard shape so legacy
-                    # callers reading seconds/plan/etc. keep working
-                    node.result = MergeResult(
-                        hint, man,
-                        {"seconds": 0.0, "c_expert_run": 0,
-                         "c_expert_hat": (plan or {}).get("c_expert_hat", 0),
-                         "realized_expert_blocks": 0,
-                         "compute": compute, "coalesce": coalesce,
-                         "reused_snapshot": True,
-                         "plan": {"reused": True, "plan_seconds": 0.0}},
-                    )
-                    continue
-                raise ValueError(
-                    f"snapshot {hint!r} already published in this workspace "
-                    f"by a different spec; pick a fresh sid/name"
-                )
-
-        # -- 3. execute level by level (children before parents) ----------
-        by_level: Dict[int, List[_Node]] = {}
-        for node in all_nodes:
-            if node.result is None:  # adopted snapshots skip execution
-                by_level.setdefault(node.spec.depth(), []).append(node)
-        for level in sorted(by_level):
-            self._run_level(
-                by_level[level],
-                nodes,
-                shared_reads=shared_reads,
-                shared_budget=shared_budget,
-                compute=compute,
-                coalesce=coalesce,
-                analyze=analyze,
-                cache_max_bytes=cache_max_bytes,
-                pipeline=pipeline,
-                prefer_packed=prefer_packed,
-            )
-
-        # -- 4. hand results back in submission order ---------------------
-        # (the queue is consumed only now: a mid-batch execution failure
-        # leaves every job queued for a retry, where completed named
-        # nodes are adopted instead of re-executed)
+        # a failed/never-run job leaves the session queue intact so the
+        # batch can be fixed and rerun (completed named nodes are adopted,
+        # not re-executed, on the retry)
+        for sh in shandles:
+            if sh.status != JobState.DONE:
+                sh.wait(0)  # re-raises the recorded error
         results: List[MergeResult] = []
-        for handle in jobs:
-            node = handle_nodes[id(handle)]
-            handle.sid = node.sid
-            handle.result = node.result
-            results.append(node.result)
-        self._queue = self._queue[len(jobs):]
+        for handle, sh in zip(jobs, shandles):
+            handle._finish(sh.result)
+            results.append(sh.result)
+        self._queue = self._queue[len(queued):]
         return results
 
-    def _resolve_input(self, inp: Union[str, MergeSpec], nodes: Dict[str, _Node]) -> str:
-        if isinstance(inp, MergeSpec):
-            sid = nodes[inp.spec_id].sid
-            if sid is None:
-                raise RuntimeError(
-                    f"child spec {inp.spec_id} not yet executed (cycle?)"
-                )
-            return sid
-        return inp
-
-    def _run_level(
-        self,
-        level_nodes: List[_Node],
-        nodes: Dict[str, _Node],
-        shared_reads: bool,
-        shared_budget: BudgetLike,
-        compute: str,
-        coalesce: bool,
-        analyze: bool,
-        cache_max_bytes: Optional[int],
-        pipeline: Optional[PipelineConfig] = None,
-        prefer_packed: Union[bool, str] = True,
-    ) -> Dict:
-        # deterministic order: by spec content digest, then requested sid
-        # (identical specs executing under distinct names)
-        level_nodes = sorted(
-            level_nodes, key=lambda n: (n.spec.spec_id, n.sid_hint or "")
-        )
-
-        pool_spec = (
-            BudgetSpec.parse(shared_budget) if shared_budget is not None else None
-        )
-        pool_is_fraction = pool_spec is not None and pool_spec.kind == "fraction"
-
-        resolved: List[Dict[str, Any]] = []
-        for node in level_nodes:
-            spec = node.spec
-            base_id = self._resolve_input(spec.base, nodes)
-            expert_ids = [self._resolve_input(e, nodes) for e in spec.experts]
-            if analyze:
-                self.ensure_analyzed(base_id, expert_ids)
-            resolved.append({"base_id": base_id, "expert_ids": expert_ids})
-
-        # -- packed physical layout (auto-prefer / forced) -----------------
-        # one layout per level: it must cover every expert the level reads
-        # so the shared readers and the planner cost the same bytes.
-        level_experts = sorted({e for r in resolved for e in r["expert_ids"]})
-        layout_id = self._select_layout(
-            prefer_packed, level_experts, [r["base_id"] for r in resolved]
-        )
-
-        batch_jobs: List[BatchJob] = []
-        for node, res in zip(level_nodes, resolved):
-            spec = node.spec
-            base_id = res["base_id"]
-            expert_ids = res["expert_ids"]
-            # merge-graph lineage: any input that is itself a committed
-            # merge snapshot becomes a DAG edge of this node.
-            parent_sids = [
-                i
-                for i in [base_id, *expert_ids]
-                if self.catalog.get_manifest(i) is not None
-            ]
-            self.catalog.record_spec(
-                spec.spec_id, spec.name, spec.op, spec.to_dict()
-            )
-            naive = None
-            if spec.budget.kind == "fraction":
-                naive = cost_model.naive_expert_cost(self.catalog, expert_ids)
-            budget_b = spec.budget.resolve(naive)
-            batch_jobs.append(
-                BatchJob(
-                    base_id=base_id,
-                    expert_ids=expert_ids,
-                    op=spec.op,
-                    theta=spec.theta,
-                    budget_b=budget_b,
-                    conflict_aware=spec.conflict_aware,
-                    reuse=spec.reuse_plan,
-                    spec_id=spec.spec_id,
-                    parent_sids=parent_sids,
-                    layout_id=layout_id,
-                )
-            )
-
-        pool_b = None
-        if pool_spec is not None:
-            # The pool caps the level's UNION read schedule, so a
-            # fractional pool resolves against the naive cost of the
-            # level's distinct expert set — not the per-job sum.
-            naive_union = None
-            if pool_is_fraction:
-                distinct = sorted({e for r in resolved for e in r["expert_ids"]})
-                naive_union = cost_model.naive_expert_cost(self.catalog, distinct)
-            pool_b = pool_spec.resolve(naive_union)
-
-        bp = plan_batch(
-            self.catalog,
-            batch_jobs,
-            block_size=self.block_size,
-            shared_budget_b=pool_b,
-        )
-
-        # -- shared expert readers: one open (cached) reader per model ----
-        expert_readers = None
-        cache_readers: Dict[str, CachingModelReader] = {}
-        shared_layout = None
-        if shared_reads and len(level_nodes) > 1:
-            # one byte budget for the whole level: the cap bounds the
-            # combined footprint across all expert readers
-            cache_budget = CacheBudget(cache_max_bytes)
-            if layout_id is not None:
-                # cross-job sharing composes with the packed layout: one
-                # opened layout dedups extents across jobs, and the block
-                # cache fans decoded blocks out to later jobs
-                shared_layout = self.snapshots.packed.open_layout(layout_id)
-                open_one = shared_layout.open_member
-            else:
-                open_one = self.snapshots.models.open_model
-            cache_readers = {
-                e: CachingModelReader(open_one(e), budget=cache_budget)
-                for e in level_experts
-            }
-            expert_readers = cache_readers
-
-        try:
-            for node, pr in zip(level_nodes, bp.results):
-                result = execute_merge(
-                    pr.plan,
-                    self.snapshots,
-                    self.catalog,
-                    sid=node.sid_hint,
-                    txn=self.txn,
-                    compute=compute,
-                    coalesce=coalesce,
-                    expert_readers=expert_readers,
-                    pipeline=pipeline,
-                )
-                result.stats["plan"] = pr.stats
-                node.sid = result.sid
-                node.result = result
-        finally:
-            for r in cache_readers.values():
-                r.close()
-            if shared_layout is not None:
-                shared_layout.close()
-
-        stats = dict(bp.stats)
-        stats["layout_id"] = layout_id
-        if cache_readers:
-            stats["cache"] = {
-                "hits": sum(r.hits for r in cache_readers.values()),
-                "misses": sum(r.misses for r in cache_readers.values()),
-                "bytes_saved": sum(
-                    r.bytes_saved for r in cache_readers.values()
-                ),
-            }
-        if len(level_nodes) > 1:
-            for node in level_nodes:
-                node.result.stats["batch"] = stats
-        return stats
-
     # ---------------------------------------------------------------- packed
-    def _select_layout(
-        self,
-        prefer_packed: Union[bool, str],
-        expert_ids: List[str],
-        base_ids: List[str],
-    ) -> Optional[str]:
-        """Resolve the packed layout one execution level reads from.
-
-        A layout is only *applicable* when every expert of the level is a
-        member AND the level's (single) base is the layout's own base —
-        elision means "delta vs the layout's base is zero", so any other
-        base would make synthesized zero deltas wrong.  Inapplicable
-        levels fall back to flat reads: in a merge graph, upper levels
-        whose inputs are freshly-committed snapshots are never members of
-        a pre-built layout, and a forced layout must not abort the graph
-        mid-way (unknown ids and block-size mismatches still raise — they
-        are configuration errors, not graph structure).
-        """
-        if not prefer_packed or not expert_ids:
-            return None
-        bases = set(base_ids)
-        if isinstance(prefer_packed, str):
-            layout = self.catalog.get_packed_layout(prefer_packed)
-            if layout is None:
-                raise KeyError(f"packed layout {prefer_packed!r} not found")
-            if layout["block_size"] != self.block_size:
-                raise ValueError(
-                    f"layout {prefer_packed!r} is packed at block_size="
-                    f"{layout['block_size']}, session uses {self.block_size}"
-                )
-            members = set(self.catalog.packed_layout_members(prefer_packed))
-            applicable = (
-                bases == {layout["base_id"]}
-                and all(e in members for e in expert_ids)
-            )
-            if not applicable:
-                # fall back, but never silently: on a plain single-level
-                # merge this usually means a misconfigured --layout
-                import warnings
-
-                causes = []
-                if bases != {layout["base_id"]}:
-                    causes.append(
-                        f"layout base {layout['base_id']!r} vs merge "
-                        f"base(s) {sorted(bases)}"
-                    )
-                non_members = [e for e in expert_ids if e not in members]
-                if non_members:
-                    causes.append(f"non-members: {non_members}")
-                warnings.warn(
-                    f"forced packed layout {prefer_packed!r} does not apply "
-                    f"to this level ({'; '.join(causes)}) — reading flat "
-                    f"checkpoints instead",
-                    stacklevel=3,
-                )
-                return None
-            return prefer_packed
-        # auto-prefer: only lossless layouts packed against this exact
-        # base qualify (outputs must stay bit-identical to the flat
-        # store; lossy layouts are an explicit opt-in by id)
-        if len(bases) != 1:
-            return None
-        return self.catalog.find_packed_layout(
-            expert_ids, self.block_size, lossless_only=True,
-            base_id=bases.pop(),
-        )
-
     def repack(
         self,
         model_ids: Sequence[str],
@@ -562,6 +240,18 @@ class Session:
     def list_layouts(self) -> List[str]:
         return self.catalog.list_packed_layouts()
 
+    def _select_layout(
+        self,
+        prefer_packed: Union[bool, str],
+        expert_ids: List[str],
+        base_ids: List[str],
+    ) -> Optional[str]:
+        """Compatibility delegate — layout selection lives on the
+        embedded MergeService now."""
+        return self._service()._select_layout(
+            prefer_packed, expert_ids, base_ids
+        )
+
     # ------------------------------------------------------------- one-shot
     def run(
         self,
@@ -582,25 +272,19 @@ class Session:
         assert handle.result is not None
         return handle.result
 
-    # ---------------------------------------------------------------- audit
-    def explain(self, sid: str) -> Dict:
-        return _explain(self.catalog, self.snapshots, sid)
+    # ------------------------------------------------------------ lifecycle
+    def __enter__(self) -> "Session":
+        return self
 
-    def merge_graph(self, sid: str) -> Dict:
-        return merge_graph(self.catalog, sid)
-
-    def lineage(self, sid: str):
-        return lineage_chain(self.catalog, sid)
-
-    def verify(self, sid: str) -> bool:
-        return verify_snapshot(self.snapshots, sid)
-
-    # ----------------------------------------------------------------- data
-    def load(self, model_id: str) -> Dict[str, np.ndarray]:
-        return load_model_arrays(self.snapshots.models, model_id)
-
-    def list_snapshots(self):
-        return self.snapshots.list_snapshots()
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     def close(self) -> None:
+        """Release the session (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._svc is not None:
+            self._svc.close()
+            self._svc = None
         self.catalog.close()

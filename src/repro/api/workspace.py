@@ -1,0 +1,76 @@
+"""Shared workspace surface for :class:`~repro.api.session.Session` and
+:class:`~repro.api.service.MergeService`.
+
+Both own the same substrate (``self.snapshots`` / ``self.catalog`` /
+``self.block_size``); this mixin keeps their ingestion, audit, and data
+accessors one implementation instead of two drifting copies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.lineage import explain as _explain
+from repro.core.lineage import lineage_chain, merge_graph, verify_snapshot
+from repro.core.sketch import analyze_model
+from repro.store.tensorstore import load_model_arrays
+
+
+class WorkspaceOps:
+    """Ingestion / audit / data accessors over one workspace substrate."""
+
+    # ------------------------------------------------------------ ingestion
+    def register_model(
+        self,
+        model_id: str,
+        arrays: Mapping[str, np.ndarray],
+        kind: str = "full",
+        scale: float = 1.0,
+        analyze: bool = False,
+        base_id: Optional[str] = None,
+    ) -> str:
+        meta: Dict[str, Any] = {"kind": kind}
+        if kind == "adapter":
+            meta["scale"] = scale
+        self.snapshots.models.write_model(model_id, arrays, meta=meta)
+        if analyze:
+            self.analyze(model_id, base_id=base_id)
+        return model_id
+
+    def analyze(
+        self, model_id: str, base_id: Optional[str] = None, force: bool = False
+    ) -> Dict:
+        return analyze_model(
+            self.catalog,
+            self.snapshots.models,
+            model_id,
+            self.block_size,
+            base_id=base_id,
+            force=force,
+        )
+
+    def ensure_analyzed(self, base_id: str, expert_ids: Sequence[str]) -> None:
+        self.analyze(base_id)
+        for e in expert_ids:
+            self.analyze(e, base_id=base_id)
+
+    # ---------------------------------------------------------------- audit
+    def explain(self, sid: str) -> Dict:
+        return _explain(self.catalog, self.snapshots, sid)
+
+    def merge_graph(self, sid: str) -> Dict:
+        return merge_graph(self.catalog, sid)
+
+    def lineage(self, sid: str):
+        return lineage_chain(self.catalog, sid)
+
+    def verify(self, sid: str) -> bool:
+        return verify_snapshot(self.snapshots, sid)
+
+    # ----------------------------------------------------------------- data
+    def load(self, model_id: str) -> Dict[str, np.ndarray]:
+        return load_model_arrays(self.snapshots.models, model_id)
+
+    def list_snapshots(self) -> List[str]:
+        return self.snapshots.list_snapshots()

@@ -139,6 +139,20 @@ CREATE TABLE IF NOT EXISTS packed_block (
     logical_nbytes  INTEGER NOT NULL,
     PRIMARY KEY (layout_id, model_id, tensor_id, block_idx)
 );
+CREATE TABLE IF NOT EXISTS merge_job (
+    job_id     TEXT PRIMARY KEY,
+    spec_id    TEXT NOT NULL,
+    sid        TEXT,
+    tenant     TEXT NOT NULL,
+    priority   INTEGER NOT NULL,
+    deadline   REAL,
+    state      TEXT NOT NULL,
+    admission  TEXT,
+    window_id  TEXT,
+    error      TEXT,
+    submitted_at REAL NOT NULL,
+    finished_at  REAL
+);
 CREATE TABLE IF NOT EXISTS manifest (
     sid        TEXT PRIMARY KEY,
     plan_id    TEXT NOT NULL,
@@ -579,6 +593,110 @@ class Catalog:
         ).fetchall():
             refs.append(f"packed_layout:{lid}(base)")
         return refs
+
+    # --------------------------------------------------------------- MergeJob
+    _JOB_COLS = (
+        "job_id", "spec_id", "sid", "tenant", "priority", "deadline",
+        "state", "admission", "window_id", "error", "submitted_at",
+        "finished_at",
+    )
+
+    def record_job(
+        self,
+        job_id: str,
+        spec_id: str,
+        tenant: str,
+        priority: int,
+        state: str,
+        sid: Optional[str] = None,
+        deadline: Optional[float] = None,
+    ) -> None:
+        """Insert one MergeService job row (audit: who asked for what,
+        when, under which tenancy; updated as the job advances)."""
+        self._conn().execute(
+            "INSERT OR REPLACE INTO merge_job VALUES (?,?,?,?,?,?,?,?,?,?,?,?)",
+            (
+                job_id, spec_id, sid, tenant, int(priority), deadline,
+                state, None, None, None, time.time(), None,
+            ),
+        )
+        self._conn().commit()
+        self._meta_io(1, row_bytes=128)
+
+    def update_job(self, job_id: str, **fields) -> None:
+        """Update job columns (state, sid, admission, window_id, error,
+        finished_at).  ``admission`` dicts are JSON-encoded."""
+        self.update_jobs([(job_id, fields)])
+
+    def update_jobs(self, updates) -> None:
+        """Apply many job-row updates under ONE commit — the scheduler
+        batches a window's state transitions so the compatibility
+        ``run_all`` path is not taxed per job.  ``updates`` is a sequence
+        of ``(job_id, fields)`` pairs."""
+        allowed = {"state", "sid", "admission", "window_id", "error",
+                   "finished_at"}
+        conn = self._conn()
+        n = 0
+        for job_id, fields in updates:
+            unknown = set(fields) - allowed
+            if unknown:
+                raise KeyError(f"unknown merge_job columns {sorted(unknown)}")
+            if not fields:
+                continue
+            fields = dict(fields)
+            if isinstance(fields.get("admission"), dict):
+                fields["admission"] = json.dumps(fields["admission"])
+            cols = sorted(fields)
+            conn.execute(
+                f"UPDATE merge_job SET {', '.join(c + '=?' for c in cols)} "
+                f"WHERE job_id=?",
+                [fields[c] for c in cols] + [job_id],
+            )
+            n += 1
+        if n:
+            conn.commit()
+            self._meta_io(n, row_bytes=64)
+
+    def _job_row(self, row) -> Dict:
+        doc = dict(zip(self._JOB_COLS, row))
+        if doc.get("admission"):
+            doc["admission"] = json.loads(doc["admission"])
+        return doc
+
+    def get_job(self, job_id: str) -> Optional[Dict]:
+        cur = self._conn().execute(
+            f"SELECT {', '.join(self._JOB_COLS)} FROM merge_job "
+            f"WHERE job_id=?",
+            (job_id,),
+        )
+        row = cur.fetchone()
+        return self._job_row(row) if row else None
+
+    def list_jobs(
+        self, state: Optional[str] = None, tenant: Optional[str] = None
+    ) -> List[Dict]:
+        q = f"SELECT {', '.join(self._JOB_COLS)} FROM merge_job"
+        clauses, args = [], []
+        if state is not None:
+            clauses.append("state=?")
+            args.append(state)
+        if tenant is not None:
+            clauses.append("tenant=?")
+            args.append(tenant)
+        if clauses:
+            q += " WHERE " + " AND ".join(clauses)
+        q += " ORDER BY submitted_at"
+        return [self._job_row(r) for r in self._conn().execute(q, args)]
+
+    def job_for_sid(self, sid: str) -> Optional[Dict]:
+        """Most recent job that committed snapshot ``sid`` (explain())."""
+        cur = self._conn().execute(
+            f"SELECT {', '.join(self._JOB_COLS)} FROM merge_job "
+            f"WHERE sid=? ORDER BY submitted_at DESC LIMIT 1",
+            (sid,),
+        )
+        row = cur.fetchone()
+        return self._job_row(row) if row else None
 
     # --------------------------------------------------------------- Manifest
     def record_manifest(

@@ -36,7 +36,7 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -48,6 +48,21 @@ from repro.core.plan import MergePlan
 from repro.core.transactions import TransactionManager
 from repro.store.iostats import IOStats
 from repro.store.snapshot import SnapshotStore, WriteBehindWriter
+
+
+class MergeCancelled(RuntimeError):
+    """Cooperative cancellation: raised at an executor checkpoint when
+    the caller's cancel event fires.  The in-flight transaction aborts
+    (staged output discarded, nothing published) before this propagates."""
+
+
+#: progress callback signature: (blocks_done, blocks_total)
+ProgressFn = Callable[[int, int], None]
+
+
+def _check_cancel(cancel: Optional[threading.Event], sid: str) -> None:
+    if cancel is not None and cancel.is_set():
+        raise MergeCancelled(f"merge {sid} cancelled at executor checkpoint")
 
 
 def _ranges_from_indices(idxs: List[int]) -> List[Tuple[int, int]]:
@@ -185,6 +200,8 @@ def execute_merge(
     enforce_budget: bool = True,
     expert_readers: Optional[Dict[str, object]] = None,
     pipeline: Optional[PipelineConfig] = None,
+    cancel: Optional[threading.Event] = None,
+    progress: Optional[ProgressFn] = None,
 ) -> MergeResult:
     """Run Algorithm 2 for plan π and return the committed snapshot.
 
@@ -197,6 +214,14 @@ def execute_merge(
 
     ``pipeline`` tunes the overlapped engine when ``compute="pipelined"``
     (ignored otherwise); ``None`` uses :class:`PipelineConfig` defaults.
+
+    ``cancel`` is a cooperative cancellation flag (any object with a
+    boolean ``is_set()``): the engines poll it at block/window
+    checkpoints and raise :class:`MergeCancelled` when it fires — the
+    transaction aborts crash-safely, staged output is discarded, and no
+    snapshot is published.  ``progress`` is called as
+    ``progress(blocks_done, blocks_total)`` as output blocks retire (per
+    tensor on the synchronous engines, per window on the pipelined one).
     """
     t0 = time.time()
     stats: IOStats = snapshots.stats
@@ -255,16 +280,27 @@ def execute_merge(
 
     realized_expert_blocks = 0
     pipe_stats: Optional[Dict] = None
+    progress_total = 0
+    progress_done = 0
+    if progress is not None:
+        progress_total = sum(
+            blk.num_blocks(base_reader.spec(t).nbytes, plan.block_size)
+            for t in plan.tensor_order
+        )
     try:
         # -- (1) Stream selected blocks under plan π -----------------------
+        _check_cancel(cancel, sid)
         if compute == "pipelined":
             engine = _PipelineEngine(
                 plan, writer, base_reader, expert_readers, theta, seed,
                 is_dare, pipeline, kernel_ops, coalesce, touch, coverage_rows,
+                cancel=cancel, progress=progress,
+                progress_total=progress_total,
             )
             realized_expert_blocks, pipe_stats = engine.run()
         else:
             for tensor_id in plan.tensor_order:
+                _check_cancel(cancel, sid)
                 spec = base_reader.spec(tensor_id)
                 writer.begin_tensor(tensor_id, spec.shape, spec.dtype)
                 rev = plan.reverse_index(tensor_id)
@@ -280,11 +316,12 @@ def execute_merge(
                     _run_tensor_batched(
                         kernel_ops, plan, writer, base_reader, D, rev,
                         tensor_id, spec, n_blocks, theta, seed, is_dare,
-                        touched, coverage_rows,
+                        touched, coverage_rows, cancel=cancel, sid=sid,
                     )
                     realized_expert_blocks += sum(len(v) for v in rev.values())
                 else:
                     for b in range(n_blocks):
+                        _check_cancel(cancel, sid)
                         x0 = base_reader.read_block(
                             tensor_id, b, plan.block_size, "base"
                         )
@@ -308,6 +345,9 @@ def execute_merge(
                         writer.write_block(tensor_id, b, x)
                 writer.finish_tensor(tensor_id)
                 touch[tensor_id] = touched
+                if progress is not None:
+                    progress_done += n_blocks
+                    progress(progress_done, progress_total)
 
         # -- (2) Validate and atomically publish --------------------------
         if validate:
@@ -403,6 +443,8 @@ def _run_tensor_batched(
     is_dare: bool,
     touched: List[int],
     coverage_rows: List[Tuple[str, int, str]],
+    cancel: Optional[threading.Event] = None,
+    sid: str = "",
 ) -> None:
     """Batched compute path: group blocks by (K_sel, width) and apply the
     jitted kernel once per group.  Physical I/O identical to the stream
@@ -414,6 +456,7 @@ def _run_tensor_batched(
     deltas_per_block: List[Optional[np.ndarray]] = []
     eidxs_per_block: List[List[int]] = []
     for b in range(n_blocks):
+        _check_cancel(cancel, sid)
         x0 = base_reader.read_block(tensor_id, b, plan.block_size, "base")
         base_blocks.append(x0)
         if b in rev:
@@ -536,6 +579,9 @@ class _PipelineEngine:
         coalesce: bool,
         touch: Dict[str, List[int]],
         coverage_rows: List[Tuple[str, int, str]],
+        cancel: Optional[threading.Event] = None,
+        progress: Optional[ProgressFn] = None,
+        progress_total: int = 0,
     ):
         self.plan = plan
         self.base_reader = base_reader
@@ -548,6 +594,10 @@ class _PipelineEngine:
         self.coalesce = coalesce
         self.touch = touch
         self.coverage_rows = coverage_rows
+        self.cancel = cancel
+        self.progress = progress
+        self.progress_total = progress_total
+        self.progress_done = 0
         self.realized_expert_blocks = 0
         self.gauge = _ResidencyGauge()
         self.windows = 0
@@ -640,6 +690,10 @@ class _PipelineEngine:
                 for ws in range(0, n_blocks, W):
                     if self.stop.is_set():
                         return
+                    # cancellation checkpoint: stop issuing new windows;
+                    # the error propagates to the consumer, whose abort
+                    # path discards everything staged so far
+                    _check_cancel(self.cancel, self.plan.plan_id)
                     window = list(range(ws, min(n_blocks, ws + W)))
                     pending.append(
                         ("window", task, window,
@@ -725,6 +779,9 @@ class _PipelineEngine:
             self.wb.write_block(task.tensor_id, b, out[b])
             self.gauge.sub(retired[b])  # base + delta slots retired
         self.windows += 1
+        if self.progress is not None:
+            self.progress_done += len(window)
+            self.progress(self.progress_done, self.progress_total)
 
     def _finish_tensor(self, task: _TensorTask) -> None:
         self.wb.finish_tensor(task.tensor_id)
@@ -753,6 +810,9 @@ class _PipelineEngine:
                     current.tensor_id, current.spec.shape, current.spec.dtype
                 )
                 continue
+            # consumer-side cancellation checkpoint: a cancel that fires
+            # while the producer is already drained still aborts here
+            _check_cancel(self.cancel, self.plan.plan_id)
             base_blocks, pulled = payload
             self._compute_window(a, window, base_blocks, pulled)
 

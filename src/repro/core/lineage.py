@@ -47,6 +47,23 @@ def explain(catalog: Catalog, snapshots: SnapshotStore, sid: str) -> Dict:
     ]
     spec_id = (plan or {}).get("payload", {}).get("spec_id")
     spec = catalog.get_spec(spec_id) if spec_id else None
+    # MergeService provenance: which job committed this snapshot, under
+    # which tenancy/priority, what admission control decided, and which
+    # scheduling window ran it (None for pre-service merges).
+    job = catalog.job_for_sid(sid)
+    job_record = None
+    if job is not None:
+        job_record = {
+            "job_id": job["job_id"],
+            "tenant": job["tenant"],
+            "priority": job["priority"],
+            "deadline": job["deadline"],
+            "state": job["state"],
+            "admission": job["admission"],
+            "window_id": job["window_id"],
+            "submitted_at": job["submitted_at"],
+            "finished_at": job["finished_at"],
+        }
     return {
         "sid": sid,
         "base_id": man["base_id"],
@@ -75,6 +92,7 @@ def explain(catalog: Catalog, snapshots: SnapshotStore, sid: str) -> Dict:
         "parents": parents,
         "spec_id": spec_id,
         "spec": (spec or {}).get("payload") if spec else None,
+        "job": job_record,
         "output_root": man["output_root"],
         "created_at": man["created_at"],
     }

@@ -390,6 +390,10 @@ class BatchJob:
     parent_sids: List[str] = dataclasses.field(default_factory=list)
     #: packed layout to cost (and execute) this job against, if any
     layout_id: Optional[str] = None
+    #: arbitration group (e.g. MergeService tenant) — jobs sharing a
+    #: group are jointly capped by that group's entry in
+    #: ``plan_batch(group_budgets=...)``
+    group: Optional[str] = None
 
 
 class BatchPlannerResult:
@@ -483,6 +487,7 @@ def plan_batch(
     block_size: int = blk.DEFAULT_BLOCK_SIZE,
     shared_budget_b: Optional[int] = None,
     max_pool_iters: int = 4,
+    group_budgets: Optional[Dict[str, Optional[int]]] = None,
 ) -> BatchPlannerResult:
     """Plan a *set* of merge jobs together (API v2 batch entry point).
 
@@ -496,19 +501,33 @@ def plan_batch(
     union overflows the pool, every job's budget is scaled down
     proportionally and the batch is re-planned (bounded fixed-point
     iteration; decisions recorded in the stats).
+
+    ``group_budgets`` adds per-group caps on the same model: the union of
+    the selections of all jobs whose :attr:`BatchJob.group` is ``g`` must
+    fit ``group_budgets[g]``.  This is the MergeService's weighted-fair
+    tenant arbitration: each scheduling window plans with the tenants'
+    *remaining* pool shares as group caps, so realized physical expert
+    bytes per tenant track the configured weights while the global pool
+    bounds the whole window.  Both constraints converge through the same
+    fixed-point iteration, with the same guaranteed proportional-split
+    fallback (group caps applied first, then the global pool).
     """
     t0 = time.time()
     jobs = list(jobs)
     budgets: List[Optional[int]] = [j.budget_b for j in jobs]
     decisions: List[Dict[str, Any]] = []
     block_bytes_cache: Dict[str, Dict[Tuple[str, int], Tuple[int, Optional[str]]]] = {}
+    group_budgets = {
+        g: cap for g, cap in (group_budgets or {}).items() if cap is not None
+    }
 
     results: List[PlannerResult] = []
     union_bytes = 0
     sum_bytes = 0
+    group_union: Dict[str, int] = {}
 
     def _plan_round(first: bool) -> None:
-        nonlocal results, union_bytes, sum_bytes
+        nonlocal results, union_bytes, sum_bytes, group_union
         results = [
             plan_merge(
                 catalog,
@@ -527,49 +546,92 @@ def plan_batch(
             for i, j in enumerate(jobs)
         ]
         union: Dict[Tuple[str, str, int], Tuple[int, Optional[str]]] = {}
+        per_group: Dict[str, Dict] = {}
         sum_bytes = 0
-        for pr in results:
+        for j, pr in zip(jobs, results):
             sel = _selection_bytes(catalog, pr.plan, block_bytes_cache)
             union.update(sel)
+            if j.group is not None:
+                per_group.setdefault(j.group, {}).update(sel)
             sum_bytes += pr.plan.c_expert_hat
         union_bytes = _union_physical_bytes(union)
+        group_union = {
+            g: _union_physical_bytes(u) for g, u in per_group.items()
+        }
+
+    def _overflowed_groups() -> Dict[str, int]:
+        return {
+            g: cap
+            for g, cap in group_budgets.items()
+            if group_union.get(g, 0) > cap
+        }
 
     for it in range(max(1, max_pool_iters)):
         _plan_round(first=it == 0)
-        if shared_budget_b is None or union_bytes <= shared_budget_b:
+        over_global = shared_budget_b is not None and union_bytes > shared_budget_b
+        over_groups = _overflowed_groups()
+        if not over_global and not over_groups:
             break
         if it == max(1, max_pool_iters) - 1:
             break  # no further round would apply a scaling decision
-        # pool overflow: shrink each job's budget proportionally and replan
-        scale = shared_budget_b / max(union_bytes, 1)
+        # pool overflow: shrink each offending job's budget proportionally
+        # and replan; a job constrained both by its group and the global
+        # pool takes the tighter factor
+        gscale = (
+            shared_budget_b / max(union_bytes, 1) if over_global else 1.0
+        )
         new_budgets: List[Optional[int]] = []
-        for i, pr in enumerate(results):
+        for i, (j, pr) in enumerate(zip(jobs, results)):
+            f = gscale
+            if j.group in over_groups:
+                f = min(
+                    f, over_groups[j.group] / max(group_union[j.group], 1)
+                )
+            if f >= 1.0:
+                new_budgets.append(budgets[i])
+                continue
             cur = budgets[i] if budgets[i] is not None else pr.plan.c_expert_hat
-            new_budgets.append(max(0, int(cur * scale)))
+            new_budgets.append(max(0, int(cur * f)))
         decisions.append(
             {
                 "pool_iteration": it,
                 "union_bytes": union_bytes,
                 "shared_budget_b": shared_budget_b,
-                "scale": scale,
+                "group_union_bytes": dict(group_union),
+                "over_groups": sorted(over_groups),
+                "scale": gscale,
                 "budgets": list(new_budgets),
             }
         )
         budgets = new_budgets
 
-    if shared_budget_b is not None and union_bytes > shared_budget_b:
+    if (shared_budget_b is not None and union_bytes > shared_budget_b) or (
+        _overflowed_groups()
+    ):
         # Fixed point not reached (jobs select disjoint-ish blocks, so the
-        # union shrinks sublinearly).  Guaranteed fallback: split the pool
-        # across jobs proportionally to their current demand — then
-        # union <= Σ Ĉ_i <= Σ budget_i <= pool by construction.
+        # union shrinks sublinearly).  Guaranteed fallback: split each
+        # over-cap group's budget across its jobs proportionally to their
+        # current demand, then the global pool across all jobs — then
+        # per group union <= Σ_{i∈g} Ĉ_i <= cap_g and globally
+        # union <= Σ Ĉ_i <= Σ budget_i <= pool, by construction.
         hats = [pr.plan.c_expert_hat for pr in results]
-        total = max(sum(hats), 1)
-        budgets = [shared_budget_b * h // total for h in hats]
+        alloc = list(hats)
+        for g, cap in group_budgets.items():
+            idxs = [i for i, j in enumerate(jobs) if j.group == g]
+            g_total = max(sum(hats[i] for i in idxs), 1)
+            if sum(hats[i] for i in idxs) > cap:
+                for i in idxs:
+                    alloc[i] = cap * hats[i] // g_total
+        if shared_budget_b is not None and sum(alloc) > shared_budget_b:
+            total = max(sum(alloc), 1)
+            alloc = [shared_budget_b * a // total for a in alloc]
+        budgets = alloc
         decisions.append(
             {
                 "pool_final_split": True,
                 "union_bytes": union_bytes,
                 "shared_budget_b": shared_budget_b,
+                "group_union_bytes": dict(group_union),
                 "budgets": list(budgets),
             }
         )
@@ -585,5 +647,8 @@ def plan_batch(
         "pool_decisions": decisions,
         "pool_respected": shared_budget_b is None
         or union_bytes <= shared_budget_b,
+        "group_union_bytes": dict(group_union),
+        "group_budgets": dict(group_budgets),
+        "groups_respected": not _overflowed_groups(),
     }
     return BatchPlannerResult(results, stats)

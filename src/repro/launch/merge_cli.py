@@ -31,6 +31,22 @@ subcommands::
 Merges auto-prefer a covering lossless layout; ``--no-packed`` forces
 flat reads and ``--layout ID`` forces a specific (possibly lossy) one.
 
+The asynchronous MergeService (docs/SERVICE.md) gets four subcommands
+built on a file spool under ``<workspace>/service/``::
+
+    merge_cli serve   --workspace WS [--budget 2GiB]
+                      [--tenant-weights prod=3,batch=1] [--once]
+    merge_cli submit  --workspace WS --spec merges.yaml
+                      [--tenant T] [--priority N] [--deadline SECS]
+    merge_cli status  --workspace WS [JOB_ID]
+    merge_cli cancel  --workspace WS JOB_ID
+
+``submit`` drops job files into the spool and returns immediately;
+``serve`` runs a MergeService that drains the spool continuously
+(admission control, weighted-fair budget arbitration, overlap-aware
+scheduling windows), honors ``cancel`` markers, and records every job
+in the catalog job table that ``status`` reads — from any process.
+
 Also supports ANALYZE reuse, plan inspection (``--explain SID``) and the
 naive full-read baseline (``--naive``).
 """
@@ -38,15 +54,265 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+import uuid
 
-from repro.api import BudgetSpec, Session, load_spec_file
+from repro.api import BudgetSpec, MergeService, Session, load_spec_file
+from repro.api.jobs import JobState
 from repro.core import MergePipe, naive_merge
 from repro.core.executor import PipelineConfig
 from repro.store.iostats import measure
 
-SUBCOMMANDS = ("repack", "layouts", "delete")
+SUBCOMMANDS = ("repack", "layouts", "delete", "serve", "submit", "status",
+               "cancel")
+
+
+# --------------------------------------------------------------- job spool
+def _spool(workspace: str, sub: str) -> str:
+    d = os.path.join(workspace, "service", sub)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def _cmd_submit(argv) -> None:
+    ap = argparse.ArgumentParser(prog="merge_cli submit")
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("--spec", required=True,
+                    help="YAML/JSON MergeSpec document (one job per spec)")
+    ap.add_argument("--tenant", default="default")
+    ap.add_argument("--priority", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="relative seconds; the job fails if no window "
+                         "ran it in time")
+    args = ap.parse_args(argv)
+    inbox = _spool(args.workspace, "inbox")
+    for spec in load_spec_file(args.spec):
+        job_id = "job-" + uuid.uuid4().hex[:12]
+        doc = {
+            "job_id": job_id,
+            "spec": spec.to_dict(),
+            # unnamed specs target a job-id-derived sid: a serve-loop
+            # crash replay then always adopts the committed snapshot
+            # instead of re-executing under a fresh random sid
+            "sid": spec.name or f"snap-{job_id}",
+            "tenant": args.tenant,
+            "priority": args.priority,
+            "deadline": args.deadline,
+            "submitted_at": time.time(),
+        }
+        tmp = os.path.join(inbox, f".{job_id}.tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(doc, f)
+        os.rename(tmp, os.path.join(inbox, f"{job_id}.json"))
+        print(f"[submit] {job_id}  spec={spec.spec_id}  "
+              f"tenant={args.tenant}  priority={args.priority}")
+
+
+def _cmd_cancel(argv) -> None:
+    ap = argparse.ArgumentParser(prog="merge_cli cancel")
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("job_id")
+    args = ap.parse_args(argv)
+    marker = os.path.join(_spool(args.workspace, "cancel"), args.job_id)
+    with open(marker, "w", encoding="utf-8"):
+        pass
+    # a job still in the inbox never reaches the service: retract it here
+    # (the marker above covers the race where serve claims it first)
+    inbox_file = os.path.join(
+        _spool(args.workspace, "inbox"), f"{args.job_id}.json"
+    )
+    try:
+        os.remove(inbox_file)
+        print(f"[cancel] {args.job_id} retracted from the inbox")
+    except FileNotFoundError:
+        print(f"[cancel] marker written for {args.job_id}")
+
+
+def _cmd_status(argv) -> None:
+    ap = argparse.ArgumentParser(prog="merge_cli status")
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("job_id", nargs="?", default=None)
+    args = ap.parse_args(argv)
+    from repro.core.catalog import Catalog
+
+    catalog = Catalog(os.path.join(args.workspace, "catalog.sqlite"))
+    try:
+        if args.job_id:
+            job = catalog.get_job(args.job_id)
+            if job is None:
+                raise SystemExit(f"no such job {args.job_id!r}")
+            print(json.dumps(job, indent=2, default=str))
+            return
+        jobs = catalog.list_jobs()
+        inbox = _spool(args.workspace, "inbox")
+        # a claimed job keeps its spool file until terminal; only files
+        # with no catalog row are genuinely waiting for a serve loop
+        known = {j["job_id"] for j in jobs}
+        waiting = sorted(
+            f[:-5] for f in os.listdir(inbox)
+            if f.endswith(".json") and f[:-5] not in known
+        )
+        if not jobs and not waiting:
+            print("no jobs")
+        for j in jobs:
+            wall = (
+                f"{j['finished_at'] - j['submitted_at']:.2f}s"
+                if j["finished_at"] else "-"
+            )
+            print(f"{j['job_id']}  {j['state']:<9}  tenant={j['tenant']:<8} "
+                  f"prio={j['priority']:<3} window={j['window_id'] or '-':<11} "
+                  f"sid={j['sid'] or '-':<14} wall={wall}")
+        for job_id in waiting:
+            print(f"{job_id}  inbox      (no serve loop has claimed it yet)")
+    finally:
+        catalog.close()
+
+
+def _parse_tenant_weights(arg):
+    if not arg:
+        return None
+    out = {}
+    for part in arg.split(","):
+        name, _, w = part.partition("=")
+        out[name.strip()] = float(w) if w else 1.0
+    return out
+
+
+def _cmd_serve(argv) -> None:
+    ap = argparse.ArgumentParser(prog="merge_cli serve")
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("--block-size", type=int, default=128 * 1024)
+    ap.add_argument("--budget", default=None,
+                    help="global physical expert-byte pool ('2GiB', bytes)")
+    ap.add_argument("--tenant-weights", default=None, metavar="T=W,...",
+                    help="weighted-fair tenant shares, e.g. prod=3,batch=1")
+    ap.add_argument("--admission", default="reject",
+                    choices=["reject", "queue"],
+                    help="over-budget submissions: reject at admission or "
+                         "hold queued until the pool frees up")
+    ap.add_argument("--max-window-jobs", type=int, default=16)
+    ap.add_argument("--poll", type=float, default=0.2,
+                    help="spool scan interval (seconds)")
+    ap.add_argument("--once", action="store_true",
+                    help="drain the current inbox, wait for completion, "
+                         "then exit (instead of serving forever)")
+    args = ap.parse_args(argv)
+
+    inbox = _spool(args.workspace, "inbox")
+    cancels = _spool(args.workspace, "cancel")
+    handles = {}
+
+    def _scan_inbox(svc):
+        for fname in sorted(os.listdir(inbox)):
+            if not fname.endswith(".json"):
+                continue
+            path = os.path.join(inbox, fname)
+            try:
+                with open(path, "r", encoding="utf-8") as f:
+                    doc = json.load(f)
+            except FileNotFoundError:
+                continue  # retracted (cancelled) between listdir and open
+            job_id = doc.get("job_id") or fname[:-5]
+            if job_id in handles:
+                continue  # already submitted; file stays until terminal
+            prior = svc.catalog.get_job(job_id)
+            if prior is not None and prior["state"] == "done":
+                # a previous serve run finished this job but crashed
+                # before clearing the spool: don't resurrect the row
+                try:
+                    os.remove(path)
+                except FileNotFoundError:
+                    pass
+                print(f"[serve] {job_id} already done "
+                      f"(sid={prior['sid']}); spool entry cleared",
+                      flush=True)
+                continue
+            # the deadline clock starts at CLI submission, not at claim
+            # time: hand the service whatever remains (a negative
+            # remainder fails the job with DeadlineExceeded)
+            deadline = doc.get("deadline")
+            if deadline is not None and doc.get("submitted_at"):
+                deadline -= time.time() - doc["submitted_at"]
+            handle = svc.submit(
+                doc["spec"],
+                sid=doc.get("sid"),
+                tenant=doc.get("tenant", "default"),
+                priority=doc.get("priority", 0),
+                deadline=deadline,
+                job_id=job_id,
+            )
+            handles[job_id] = handle
+            print(f"[serve] accepted {job_id} "
+                  f"(tenant={handle.tenant}, priority={handle.priority})",
+                  flush=True)
+
+    def _scan_cancels():
+        for job_id in os.listdir(cancels):
+            handle = handles.get(job_id)
+            if handle is not None and handle.status not in JobState.TERMINAL:
+                handle.cancel()
+                print(f"[serve] cancel requested for {job_id}", flush=True)
+            os.remove(os.path.join(cancels, job_id))
+
+    def _parked(handle):
+        return (handle.admission or {}).get("decision") == "hold"
+
+    def _report():
+        # a job's inbox file survives until its terminal state is durable
+        # in the catalog: a serve crash mid-execution re-submits the job
+        # on restart (committed-snapshot adoption makes that idempotent)
+        # instead of silently losing it.  Reported handles are pruned so
+        # an always-on loop stays O(live jobs) in memory and per poll.
+        for job_id in list(handles):
+            handle = handles[job_id]
+            if handle.status not in JobState.TERMINAL:
+                continue
+            if handle.status == JobState.DONE:
+                st = handle.result.stats
+                print(f"[serve] {job_id} done  sid={handle.sid}  "
+                      f"expert_read={st['c_expert_run'] / 1e6:.1f}MB  "
+                      f"window={handle.window_id}", flush=True)
+            else:
+                print(f"[serve] {job_id} {handle.status}", flush=True)
+            try:
+                os.remove(os.path.join(inbox, f"{job_id}.json"))
+            except FileNotFoundError:
+                pass
+            del handles[job_id]
+
+    svc = MergeService(
+        args.workspace,
+        block_size=args.block_size,
+        budget=args.budget,
+        tenants=_parse_tenant_weights(args.tenant_weights),
+        admission=args.admission,
+        max_window_jobs=args.max_window_jobs,
+    )
+    print(f"[serve] MergeService on {args.workspace}  "
+          f"pool={args.budget or 'unbounded'}  "
+          f"admission={args.admission}", flush=True)
+    try:
+        while True:
+            _scan_inbox(svc)
+            _scan_cancels()
+            _report()
+            live = [h for h in handles.values() if not _parked(h)]
+            if args.once and not live and not any(
+                f.endswith(".json") and f[:-5] not in handles
+                for f in os.listdir(inbox)
+            ):
+                # admission-held jobs don't block --once: close() below
+                # cancels them (recorded 'cancelled' in the job table;
+                # resubmit once the pool has room)
+                break
+            time.sleep(args.poll)
+    except KeyboardInterrupt:  # pragma: no cover - interactive exit
+        print("[serve] interrupted; draining", flush=True)
+    finally:
+        svc.close()
+        _report()
 
 
 def _pipeline_config(args) -> PipelineConfig:
@@ -209,6 +475,14 @@ def main() -> None:
             return _cmd_repack(argv)
         if cmd == "layouts":
             return _cmd_layouts(argv)
+        if cmd == "serve":
+            return _cmd_serve(argv)
+        if cmd == "submit":
+            return _cmd_submit(argv)
+        if cmd == "status":
+            return _cmd_status(argv)
+        if cmd == "cancel":
+            return _cmd_cancel(argv)
         return _cmd_delete(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--workspace", required=True)

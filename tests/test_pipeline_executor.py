@@ -221,30 +221,29 @@ def test_session_default_pipelined_batch_matches_stream(tmp_path):
     base, experts = make_models()
     results = {}
     for mode, ws in [(None, "wsA"), ("stream", "wsB")]:
-        sess = Session(str(tmp_path / ws), block_size=4096)
-        sess.register_model("base", base)
-        ids = []
-        for i, e in enumerate(experts):
-            sess.register_model(f"e{i}", e)
-            ids.append(f"e{i}")
-        specs = [
-            MergeSpec.build("base", ids, op="ties",
-                            theta={"trim_frac": 0.3}, budget="60%",
-                            name="j-ties"),
-            MergeSpec.build("base", ids[:2], op="dare",
-                            theta={"density": 0.5, "seed": 5}, budget="60%",
-                            name="j-dare"),
-        ]
-        for s in specs:
-            sess.submit(s, sid=s.name)
-        if mode is None:
-            res = sess.run_all(pipeline=SMALL_PIPE)  # default compute
-            assert all(r.stats["compute"] == "pipelined" for r in res)
-        else:
-            res = sess.run_all(compute=mode)
-        results[ws] = {r.sid: {k: v.copy() for k, v in
-                               _load(sess, r.sid).items()} for r in res}
-        sess.close()
+        with Session(str(tmp_path / ws), block_size=4096) as sess:
+            sess.register_model("base", base)
+            ids = []
+            for i, e in enumerate(experts):
+                sess.register_model(f"e{i}", e)
+                ids.append(f"e{i}")
+            specs = [
+                MergeSpec.build("base", ids, op="ties",
+                                theta={"trim_frac": 0.3}, budget="60%",
+                                name="j-ties"),
+                MergeSpec.build("base", ids[:2], op="dare",
+                                theta={"density": 0.5, "seed": 5},
+                                budget="60%", name="j-dare"),
+            ]
+            for s in specs:
+                sess.submit(s, sid=s.name)
+            if mode is None:
+                res = sess.run_all(pipeline=SMALL_PIPE)  # default compute
+                assert all(r.stats["compute"] == "pipelined" for r in res)
+            else:
+                res = sess.run_all(compute=mode)
+            results[ws] = {r.sid: {k: v.copy() for k, v in
+                                   _load(sess, r.sid).items()} for r in res}
     for sid in results["wsA"]:
         a, b = results["wsA"][sid], results["wsB"][sid]
         for k in a:

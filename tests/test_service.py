@@ -1,0 +1,655 @@
+"""MergeService: golden equivalence with Session.run_all, rolling
+scheduling windows with cross-window shared reads, weighted-fair budget
+arbitration + admission control, crash-safe cancellation, IOStats
+scoping, job-table audit, and the CLI job spool."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AdmissionRejected,
+    BudgetSpec,
+    DeadlineExceeded,
+    JobCancelled,
+    JobState,
+    MergeService,
+    MergeSpec,
+    Session,
+)
+from repro.core.executor import PipelineConfig
+from repro.store import tensorstore
+from repro.store.iostats import GLOBAL_STATS, IOStats, measure
+
+from conftest import make_models
+
+
+def _populate(target, n_experts=3, shapes=None, seed=0):
+    base, experts = make_models(
+        rng=np.random.default_rng(seed), n_experts=n_experts, shapes=shapes
+    )
+    target.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        target.register_model(f"ex{i}", e)
+        ids.append(f"ex{i}")
+    return ids
+
+
+def _specs(ids, n=4):
+    cases = [
+        ("avg", {}, "40%"),
+        ("ties", {"trim_frac": 0.3}, "70%"),
+        ("ta", {"lam": 0.5}, "100%"),
+        ("dare", {"density": 0.5, "seed": 7}, "55%"),
+    ]
+    return [
+        MergeSpec.build("base", ids, op=op, theta=theta, budget=b,
+                        name=f"j{i}", reuse_plan=False)
+        for i, (op, theta, b) in enumerate(cases[:n])
+    ]
+
+
+# ===================================================== golden equivalence
+def test_service_matches_run_all_bit_identical(tmp_path):
+    """N specs through MergeService == the same specs through legacy
+    Session.run_all: bit-identical snapshots and identical per-category
+    IOStats, with each selected expert block read once per window."""
+    # equal-length workspace names: manifest JSON embeds the output path,
+    # so path length must match for byte-identical meta accounting
+    sess = Session(str(tmp_path / "wsa"), block_size=4096)
+    ids = _populate(sess)
+    for s in _specs(ids):
+        sess.submit(s)
+    with measure(sess.stats) as sess_io:
+        sess_results = sess.run_all()
+    sess_arrays = {r.sid: sess.load(r.sid) for r in sess_results}
+    sess.close()
+
+    svc = MergeService(str(tmp_path / "wsb"), block_size=4096, start=False)
+    ids2 = _populate(svc)
+    with measure(svc.stats) as svc_io:
+        handles = [svc.submit(s) for s in _specs(ids2)]
+        svc.drain()
+    results = [h.wait(0) for h in handles]
+    assert [h.status for h in handles] == [JobState.DONE] * 4
+
+    # bit-identical outputs
+    assert {r.sid for r in results} == set(sess_arrays)
+    for r in results:
+        got = svc.load(r.sid)
+        for k, v in sess_arrays[r.sid].items():
+            assert np.array_equal(v, got[k]), (r.sid, k)
+
+    # identical per-category IOStats (parameter bytes exact; meta only
+    # differs by variable-length timestamps embedded in manifests)
+    for cat in ("base_read", "expert_read", "out_written"):
+        assert sess_io[cat] == svc_io[cat], cat
+    assert abs(sess_io["meta"] - svc_io["meta"]) <= 32
+
+    # O(K) sharing: the window physically reads exactly the union of the
+    # jobs' selections — each selected expert block once per window
+    batch = results[0].stats["batch"]
+    assert svc_io["expert_read"] == batch["c_expert_hat_union"]
+    assert batch["sharing_factor"] > 1.0
+    assert len(svc.window_log) == 1  # overlapping jobs -> one window
+    svc.close()
+
+
+def test_concurrent_submissions_complete_and_share(tmp_path):
+    """Jobs submitted from concurrent threads to a live service all
+    commit, bit-identical to a reference batch, and overlapping access
+    sets never pay more than the serial per-job sum."""
+    ref = Session(str(tmp_path / "ref"), block_size=4096)
+    ids = _populate(ref)
+    for s in _specs(ids):
+        ref.submit(s)
+    ref_results = ref.run_all()
+    ref_arrays = {r.sid: ref.load(r.sid) for r in ref_results}
+    serial_sum = ref_results[0].stats["batch"]["c_expert_hat_sum"]
+    ref.close()
+
+    with MergeService(str(tmp_path / "svc"), block_size=4096) as svc:
+        _populate(svc)
+        handles = [None] * 4
+        specs = _specs(ids)
+
+        def submit(i):
+            handles[i] = svc.submit(specs[i])
+
+        threads = [threading.Thread(target=submit, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        results = [h.wait(30) for h in handles]
+        for r in results:
+            got = svc.load(r.sid)
+            for k, v in ref_arrays[r.sid].items():
+                assert np.array_equal(v, got[k]), (r.sid, k)
+        assert svc.stats.c_expert <= serial_sum
+
+
+def test_rolling_windows_share_scans_across_windows(tmp_path):
+    """A job arriving after earlier overlapping work still hits the
+    service's persistent block cache: the second scheduling window pays
+    zero additional physical expert bytes for the same selection."""
+    svc = MergeService(str(tmp_path / "roll"), block_size=4096, start=False)
+    ids = _populate(svc)
+    spec = dict(op="ties", theta={"trim_frac": 0.3}, budget="60%")
+    svc.submit(MergeSpec.build("base", ids, name="w1", **spec))
+    svc.drain()
+    first_expert = svc.stats.c_expert
+    assert first_expert > 0
+
+    svc.submit(MergeSpec.build("base", ids, name="w2", **spec))
+    svc.drain()
+    assert len(svc.window_log) == 2  # two rolling windows, not one batch
+    assert svc.stats.c_expert == first_expert  # all cache hits, no re-scan
+    a, b = svc.load("w1"), svc.load("w2")
+    assert all(np.array_equal(a[k], b[k]) for k in a)
+    svc.close()
+
+
+# ====================================================== budget arbitration
+def test_weighted_fair_arbitration_two_tenants(tmp_path):
+    """Global pool, tenants at 3:1 weights, each demanding more than its
+    share over disjoint expert sets: realized physical expert bytes per
+    tenant track the weights and the pool is never exceeded."""
+    boot = Session(str(tmp_path / "fair"), block_size=4096)
+    ids = _populate(boot, n_experts=4)
+    boot.ensure_analyzed("base", ids)
+    naive_total = sum(r[3] for e in ids for r in boot.catalog.tensor_metas(e))
+    boot.close()
+
+    pool = naive_total // 2
+    svc = MergeService(
+        str(tmp_path / "fair"), block_size=4096, start=False,
+        budget=pool, tenants={"alpha": 3.0, "beta": 1.0},
+    )
+    for i in range(2):
+        svc.submit(
+            MergeSpec.build("base", ids[:2], op="ties",
+                            theta={"trim_frac": 0.3}, budget="100%",
+                            name=f"a{i}", reuse_plan=False),
+            tenant="alpha",
+        )
+        svc.submit(
+            MergeSpec.build("base", ids[2:], op="ties",
+                            theta={"trim_frac": 0.3}, budget="100%",
+                            name=f"b{i}", reuse_plan=False),
+            tenant="beta",
+        )
+    svc.drain()
+
+    usage = svc.arbiter.usage()
+    spent_a = usage["tenants"]["alpha"]["spent_b"]
+    spent_b = usage["tenants"]["beta"]["spent_b"]
+    share_a = usage["tenants"]["alpha"]["share_b"]
+    share_b = usage["tenants"]["beta"]["share_b"]
+    assert spent_a > 0 and spent_b > 0
+    assert spent_a <= share_a and spent_b <= share_b  # weights respected
+    assert 2.0 <= spent_a / spent_b <= 4.2  # ~3:1 within block granularity
+    # the pool bounds *physical* reads, verified against the byte counters
+    assert svc.stats.c_expert <= pool
+    svc.close()
+
+
+def test_shared_node_bytes_split_across_tenants(tmp_path):
+    """Two tenants submitting the identical spec dedupe to one executed
+    node; its physical bytes are billed to both tenants in equal parts,
+    not in full to whichever job sorted first."""
+    boot = Session(str(tmp_path / "split"), block_size=4096)
+    ids = _populate(boot)
+    boot.ensure_analyzed("base", ids)
+    naive = sum(r[3] for e in ids for r in boot.catalog.tensor_metas(e))
+    boot.close()
+
+    svc = MergeService(
+        str(tmp_path / "split"), block_size=4096, start=False,
+        budget=naive, tenants={"a": 1.0, "b": 1.0},
+    )
+    spec = MergeSpec.build("base", ids, op="ties",
+                           theta={"trim_frac": 0.3}, budget="60%",
+                           name="shared")
+    ha = svc.submit(spec, tenant="a")
+    hb = svc.submit(spec, tenant="b")
+    svc.drain()
+    assert ha.wait(0).sid == "shared" and hb.wait(0).sid == "shared"
+    usage = svc.arbiter.usage()
+    spent_a = usage["tenants"]["a"]["spent_b"]
+    spent_b = usage["tenants"]["b"]["spent_b"]
+    union = svc.window_log[-1]["stats"]["c_expert_hat_union"]
+    assert spent_a + spent_b == union
+    assert abs(spent_a - spent_b) <= 1  # equal split (rounding aside)
+    svc.close()
+
+
+def test_admission_rejects_over_budget_before_any_io(tmp_path):
+    """A hard (absolute-byte) demand exceeding the pool is rejected at
+    admission: no expert bytes are read, the decision is recorded."""
+    svc = MergeService(
+        str(tmp_path / "adm"), block_size=4096, start=False, budget=10_000
+    )
+    ids = _populate(svc)
+    expert_before = svc.stats.c_expert
+    h = svc.submit(
+        MergeSpec.build("base", ids, op="avg",
+                        budget=BudgetSpec.bytes(1_000_000), name="big")
+    )
+    svc.drain()
+    with pytest.raises(AdmissionRejected):
+        h.wait(0)
+    assert h.status == JobState.REJECTED
+    assert svc.stats.c_expert == expert_before  # rejected before any I/O
+    assert "big" not in svc.list_snapshots()
+    row = svc.catalog.get_job(h.job_id)
+    assert row["state"] == "rejected"
+    assert row["admission"]["decision"] == "reject"
+    assert row["admission"]["demand_b"] == 1_000_000
+
+    # elastic (fraction) demands are admitted and scaled instead
+    h2 = svc.submit(
+        MergeSpec.build("base", ids, op="avg", budget="100%", name="ok")
+    )
+    svc.drain()
+    assert h2.wait(0).sid == "ok"
+    assert svc.stats.c_expert - expert_before <= 10_000
+    svc.close()
+
+
+def test_elastic_job_rejected_once_pool_exhausted(tmp_path):
+    """Elastic (fraction) jobs are admitted while the pool has room but
+    rejected once it is exhausted — never silently planned at budget 0."""
+    boot = Session(str(tmp_path / "drain"), block_size=4096)
+    ids = _populate(boot)
+    boot.ensure_analyzed("base", ids)
+    naive = sum(r[3] for e in ids for r in boot.catalog.tensor_metas(e))
+    boot.close()
+
+    svc = MergeService(
+        str(tmp_path / "drain"), block_size=4096, start=False,
+        budget=naive // 4,
+    )
+    first = svc.submit(
+        MergeSpec.build("base", ids, op="avg", budget="100%", name="eat")
+    )
+    svc.drain()
+    assert first.wait(0).sid == "eat"
+    # the greedy fill leaves less than one block of the pool unspent
+    assert svc.arbiter.global_remaining() < svc.block_size
+
+    second = svc.submit(
+        MergeSpec.build("base", ids, op="ta", budget="100%", name="starved")
+    )
+    svc.drain()
+    with pytest.raises(AdmissionRejected):
+        second.wait(0)
+    assert second.admission["decision"] == "reject"
+    assert second.admission["kind"] == "elastic"
+    assert "starved" not in svc.list_snapshots()
+    svc.close()
+
+
+def test_later_window_in_same_cycle_rejects_when_pool_drained(tmp_path):
+    """Two disjoint elastic jobs admitted in one scheduler cycle run as
+    two windows; when the first window drains the pool the second is
+    rejected at its window — never planned down to a zero-budget merge
+    that commits a base-copy 'successfully'."""
+    boot = Session(str(tmp_path / "xw"), block_size=4096)
+    ids = _populate(boot, n_experts=4)
+    boot.ensure_analyzed("base", ids)
+    naive_first = sum(
+        r[3] for e in ids[:2] for r in boot.catalog.tensor_metas(e)
+    )
+    boot.close()
+
+    svc = MergeService(
+        str(tmp_path / "xw"), block_size=4096, start=False,
+        budget=naive_first,
+    )
+    h1 = svc.submit(MergeSpec.build("base", ids[:2], op="avg",
+                                    budget="100%", name="w1st"))
+    h2 = svc.submit(MergeSpec.build("base", ids[2:], op="avg",
+                                    budget="100%", name="w2nd"))
+    svc.drain()
+    assert h1.wait(0).sid == "w1st"
+    with pytest.raises(AdmissionRejected):
+        h2.wait(0)
+    assert h2.status == JobState.REJECTED
+    assert "w2nd" not in svc.list_snapshots()
+    svc.close()
+
+
+def test_tenant_share_not_double_granted_across_groups(tmp_path):
+    """A tenant whose jobs appear both alone and in a deduped shared
+    group within one window is still bounded by its single share."""
+    boot = Session(str(tmp_path / "dg"), block_size=4096)
+    ids = _populate(boot, n_experts=4)
+    boot.ensure_analyzed("base", ids)
+    naive = sum(r[3] for e in ids for r in boot.catalog.tensor_metas(e))
+    boot.close()
+
+    pool = naive // 2
+    svc = MergeService(
+        str(tmp_path / "dg"), block_size=4096, start=False,
+        budget=pool, tenants={"a": 1.0, "b": 1.0},
+    )
+    shared = MergeSpec.build("base", ids[1:], op="ties",
+                             theta={"trim_frac": 0.3}, budget="100%",
+                             name="sh")
+    svc.submit(MergeSpec.build("base", ids[:3], op="avg", budget="100%",
+                               name="own"), tenant="a")
+    svc.submit(shared, tenant="a")
+    svc.submit(shared, tenant="b")
+    svc.drain()
+    usage = svc.arbiter.usage()
+    assert usage["tenants"]["a"]["spent_b"] <= usage["tenants"]["a"]["share_b"]
+    assert svc.stats.c_expert <= pool
+    svc.close()
+
+
+def test_cancelled_handle_on_shared_node_resolves_cancelled(tmp_path):
+    """When two jobs dedupe to one node and only one is cancelled, the
+    node still executes for the live job — but the cancelled handle
+    honors its contract: wait() raises, status is cancelled."""
+    svc = MergeService(str(tmp_path / "shc"), block_size=4096, start=False)
+    ids = _populate(svc)
+    spec = MergeSpec.build("base", ids, op="avg", name="both")
+    ha = svc.submit(spec, tenant="a")
+    hb = svc.submit(spec, tenant="b")
+    hb._cancel_event.set()  # cancel lands while the window is in flight
+    svc.drain()
+    assert ha.wait(0).sid == "both"
+    with pytest.raises(JobCancelled):
+        hb.wait(0)
+    assert hb.status == JobState.CANCELLED
+    assert "both" in svc.list_snapshots()  # the live job still committed
+    svc.close()
+
+
+def test_admission_queue_policy_holds_job(tmp_path):
+    """admission='queue' parks an over-budget submission instead of
+    rejecting it; it stays queued (not failed) and can be cancelled."""
+    svc = MergeService(
+        str(tmp_path / "hold"), block_size=4096, start=False,
+        budget=10_000, admission="queue",
+    )
+    ids = _populate(svc)
+    h = svc.submit(
+        MergeSpec.build("base", ids, op="avg",
+                        budget=BudgetSpec.bytes(1_000_000), name="held")
+    )
+    svc.drain()
+    assert h.status == JobState.QUEUED
+    assert h.admission["decision"] == "hold"
+    assert h.cancel()
+    assert h.status == JobState.CANCELLED
+    svc.close()
+
+
+# =========================================================== cancellation
+def _slow_reads(monkeypatch, delay_s=0.001):
+    real = tensorstore.ModelReader.read_range
+
+    def slow(self, tensor_id, offset, nbytes, category):
+        time.sleep(delay_s)
+        return real(self, tensor_id, offset, nbytes, category)
+
+    monkeypatch.setattr(tensorstore.ModelReader, "read_range", slow)
+    return real
+
+
+def test_cancel_mid_pipelined_execution_is_crash_safe(tmp_path, monkeypatch):
+    """Cancel a job mid-pipelined-execution: no partial snapshot is
+    visible, the transaction log is clean after recover(), and an
+    identical resubmission commits bit-identically."""
+    shapes = {f"w{i:02d}": (128, 128) for i in range(8)}  # 512KB / model
+    spec_kw = dict(op="ties", theta={"trim_frac": 0.3}, budget="80%")
+
+    # reference output from an untouched workspace
+    ref = Session(str(tmp_path / "ref"), block_size=4096)
+    _populate(ref, shapes=shapes)
+    ref_ids = ["ex0", "ex1", "ex2"]
+    ref.run(MergeSpec.build("base", ref_ids, name="victim", **spec_kw))
+    ref_arrays = ref.load("victim")
+    ref.close()
+
+    svc = MergeService(
+        str(tmp_path / "svc"), block_size=4096,
+        pipeline=PipelineConfig(window_blocks=1, prefetch_windows=1,
+                                read_threads=2),
+    )
+    ids = _populate(svc, shapes=shapes)
+    svc.ensure_analyzed("base", ids)  # analyze before reads get slowed
+
+    real = _slow_reads(monkeypatch)
+    h = svc.submit(MergeSpec.build("base", ids, name="victim", **spec_kw))
+    deadline = time.time() + 30
+    while h.progress()["blocks_done"] < 2:
+        assert time.time() < deadline, f"no progress: {h.progress()}"
+        assert h.status not in JobState.TERMINAL, h.status
+        time.sleep(0.002)
+    assert h.cancel()
+    with pytest.raises(JobCancelled):
+        h.wait(30)
+    assert h.status == JobState.CANCELLED
+
+    # crash safety: nothing published, nothing staged, catalog clean
+    monkeypatch.setattr(tensorstore.ModelReader, "read_range", real)
+    assert "victim" not in svc.list_snapshots()
+    assert svc.catalog.get_manifest("victim") is None
+    assert svc.txn.recover() == {"staging_gc": 0, "manifests_repaired": 0}
+    row = svc.catalog.get_job(h.job_id)
+    assert row["state"] == "cancelled" and row["error"]
+
+    # an identical resubmission succeeds, bit-identical to the reference
+    h2 = svc.submit(MergeSpec.build("base", ids, name="victim", **spec_kw))
+    res = h2.wait(60)
+    assert res.sid == "victim"
+    got = svc.load("victim")
+    assert set(got) == set(ref_arrays)
+    for k in ref_arrays:
+        assert np.array_equal(ref_arrays[k], got[k]), k
+    assert svc.verify("victim")
+    svc.close()
+
+
+def test_run_all_batch_larger_than_window_cap_stays_atomic(tmp_path):
+    """An 18-job run_all batch must execute as ONE scheduling window
+    (atomic groups are never chunked at max_window_jobs): the joint
+    plan, pooled budget, and batch-wide sid validation stay intact."""
+    with Session(str(tmp_path / "big"), block_size=4096) as sess:
+        ids = _populate(sess)
+        for i in range(18):
+            sess.submit(
+                MergeSpec.build("base", ids, op="avg",
+                                budget=f"{40 + (i % 6) * 10}%",
+                                name=f"big{i}", reuse_plan=False)
+            )
+        results = sess.run_all()
+        assert len(results) == 18
+        assert len(sess._service().window_log) == 1
+        assert results[0].stats["batch"]["jobs"] == 18
+
+
+def test_session_cancelled_queued_handle_is_dropped_from_batch(tmp_path):
+    """Cancelling a handle while it is still session-queued drops it
+    from the next run_all: it never executes or publishes."""
+    with Session(str(tmp_path / "drop"), block_size=4096) as sess:
+        ids = _populate(sess)
+        keep = sess.submit(MergeSpec.build("base", ids, op="avg",
+                                           name="kept"))
+        victim = sess.submit(MergeSpec.build("base", ids, op="ta",
+                                             name="dropped"))
+        assert victim.cancel()
+        results = sess.run_all()
+        assert [r.sid for r in results] == ["kept"]
+        assert keep.done and not victim.done
+        assert "dropped" not in sess.list_snapshots()
+        assert len(sess._queue) == 0  # both consumed
+
+
+def test_cancel_queued_job_never_runs(tmp_path):
+    svc = MergeService(str(tmp_path / "cq"), block_size=4096, start=False)
+    ids = _populate(svc)
+    h = svc.submit(MergeSpec.build("base", ids, op="avg", name="never"))
+    assert h.cancel()
+    assert h.status == JobState.CANCELLED
+    expert_before = svc.stats.c_expert
+    svc.drain()
+    assert svc.stats.c_expert == expert_before
+    assert "never" not in svc.list_snapshots()
+    assert not h.cancel()  # already terminal
+    svc.close()
+
+
+# ==================================================== scheduling controls
+def test_priority_orders_windows(tmp_path):
+    """Disjoint jobs schedule as separate windows, highest priority
+    first (then earliest deadline, then arrival)."""
+    svc = MergeService(str(tmp_path / "prio"), block_size=4096, start=False)
+    ids = _populate(svc, n_experts=3)
+    order = [("lo", ids[:1], 0), ("hi", ids[1:2], 5), ("mid", ids[2:], 1)]
+    handles = {
+        name: svc.submit(
+            MergeSpec.build("base", ex, op="avg", name=name), priority=prio
+        )
+        for name, ex, prio in order
+    }
+    svc.drain()
+    for h in handles.values():
+        assert h.wait(0)
+    ran = [w["jobs"][0] for w in svc.window_log]
+    expected = [handles["hi"].job_id, handles["mid"].job_id,
+                handles["lo"].job_id]
+    assert ran == expected
+    assert [w["window_id"] for w in svc.window_log] == [
+        "win-000001", "win-000002", "win-000003"
+    ]
+    svc.close()
+
+
+def test_deadline_expired_job_fails_before_execution(tmp_path):
+    svc = MergeService(str(tmp_path / "dl"), block_size=4096, start=False)
+    ids = _populate(svc)
+    h = svc.submit(
+        MergeSpec.build("base", ids, op="avg", name="late"), deadline=0.0
+    )
+    time.sleep(0.01)
+    svc.drain()
+    with pytest.raises(DeadlineExceeded):
+        h.wait(0)
+    assert "late" not in svc.list_snapshots()
+    svc.close()
+
+
+# ========================================================= IOStats scoping
+def test_concurrent_services_do_not_cross_pollute_stats(tmp_path):
+    """Two services without explicit stats each get their own IOStats;
+    running them concurrently leaves both (and GLOBAL_STATS) clean."""
+    global_before = GLOBAL_STATS.snapshot()
+    svcs = []
+    for tag in ("iso1", "iso2"):
+        svc = MergeService(str(tmp_path / tag), block_size=4096)
+        _populate(svc)
+        svcs.append(svc)
+    assert svcs[0].stats is not svcs[1].stats
+
+    handles = []
+    for svc in svcs:
+        for i, b in enumerate(("50%", "100%")):
+            handles.append(svc.submit(
+                MergeSpec.build("base", ["ex0", "ex1", "ex2"], op="ties",
+                                theta={"trim_frac": 0.3}, budget=b,
+                                name=f"iso{i}", reuse_plan=False)
+            ))
+    results = [h.wait(30) for h in handles]
+    for svc in svcs:
+        # each service counted exactly its own physical reads — no bytes
+        # leaked from the sibling running concurrently.  The two budgets
+        # select nested block sets, so however the arrivals split into
+        # windows the physical bytes equal the largest window union
+        # (later windows hit the persistent cache).
+        unions = [w["stats"]["c_expert_hat_union"] for w in svc.window_log]
+        assert 1 <= len(unions) <= 2
+        assert svc.stats.c_expert == max(unions)
+        svc.close()
+    assert all(r is not None for r in results)
+    assert GLOBAL_STATS.snapshot() == global_before
+
+
+def test_session_context_manager_and_idempotent_close(tmp_path):
+    with Session(str(tmp_path / "cm"), block_size=4096) as sess:
+        ids = _populate(sess)
+        res = sess.run(MergeSpec.build("base", ids, op="avg", name="cm"))
+        assert res.sid == "cm"
+    sess.close()  # idempotent after __exit__
+    sess.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.run(MergeSpec.build("base", ids, op="avg", name="cm2"))
+
+
+# ============================================================ audit / CLI
+def test_explain_includes_job_provenance(tmp_path):
+    svc = MergeService(str(tmp_path / "audit"), block_size=4096, start=False)
+    ids = _populate(svc)
+    h = svc.submit(
+        MergeSpec.build("base", ids, op="ties", theta={"trim_frac": 0.3},
+                        budget="60%", name="aud"),
+        tenant="prod", priority=7,
+    )
+    svc.drain()
+    h.wait(0)
+    ex = svc.explain("aud")
+    job = ex["job"]
+    assert job["job_id"] == h.job_id
+    assert job["tenant"] == "prod"
+    assert job["priority"] == 7
+    assert job["state"] == "done"
+    assert job["window_id"] == h.window_id
+    assert job["admission"]["decision"] == "admit"
+    svc.close()
+
+
+def test_cli_spool_submit_serve_status_cancel(tmp_path, capsys):
+    """submit drops a job file, serve --once drains it through a real
+    MergeService, status reads the catalog job table, cancel retracts an
+    unclaimed inbox job."""
+    from repro.launch import merge_cli
+
+    ws = str(tmp_path / "cliws")
+    with Session(ws, block_size=4096) as sess:
+        ids = _populate(sess)
+    spec_doc = {
+        "name": "cli-out", "base": "base", "experts": ids,
+        "op": "ties", "theta": {"trim_frac": 0.3}, "budget": "50%",
+    }
+    spec_path = tmp_path / "job.json"
+    spec_path.write_text(json.dumps(spec_doc))
+
+    merge_cli._cmd_submit(["--workspace", ws, "--spec", str(spec_path),
+                           "--tenant", "cli", "--priority", "2"])
+    out = capsys.readouterr().out
+    job_id = out.split()[1]
+    assert job_id.startswith("job-")
+
+    merge_cli._cmd_serve(["--workspace", ws, "--once", "--poll", "0.02",
+                          "--block-size", "4096"])
+    with Session(ws, block_size=4096) as sess:
+        assert "cli-out" in sess.list_snapshots()
+        row = sess.catalog.get_job(job_id)
+        assert row["state"] == "done" and row["tenant"] == "cli"
+
+    capsys.readouterr()
+    merge_cli._cmd_status(["--workspace", ws])
+    assert "done" in capsys.readouterr().out
+
+    # cancel an inbox job that no serve loop ever claimed
+    merge_cli._cmd_submit(["--workspace", ws, "--spec", str(spec_path)])
+    job2 = capsys.readouterr().out.split()[1]
+    merge_cli._cmd_cancel(["--workspace", ws, job2])
+    assert not os.listdir(os.path.join(ws, "service", "inbox"))
