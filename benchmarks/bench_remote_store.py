@@ -1,0 +1,253 @@
+"""Remote object-store backend + tiered block cache (docs/STORAGE.md).
+
+One latency-bound fleet — K experts published to an emulated remote
+object store (per-request latency + bandwidth throttle; see
+repro.store.remote) — merged four ways under the same budget:
+
+``local``
+    Flat local checkpoints: the bit-identity golden and the wall-time
+    floor (no remote round-trips at all).
+
+``nocache``
+    Remote stubs registered with ``disk_cache=False``: every expert
+    block read pays the remote round-trip, every time.  This is the
+    regime the tier hierarchy exists to kill.
+
+``cold``
+    Tiered path with the local-disk extent cache freshly evicted: the
+    merge single-flight-fills the cache from remote as it reads
+    (``expert_remote`` IOStats bytes = the cold moved volume the
+    budget B governs).
+
+``warm``
+    The same merge again from a fresh Session: selections replay
+    bit-identically and every expert block is served from the shared
+    disk cache (``expert_disk``) — remote bytes collapse to ~zero and
+    wall time returns to local-class.
+
+``--check`` is the CI smoke (K=8, small models, latency-bound profile):
+warm-run remote expert bytes must be **< 2%** of the cold run's, the
+warm merge must beat the no-cache merge by **>= 2x** wall time, and the
+warm output must be bit-identical to the flat-local golden.  Emits a
+JSON summary (``bench_remote_store.json`` or ``$REPRO_BENCH_JSON``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.harness import bench_mb, cleanup, Csv, fresh_dir, model_shapes
+from repro.api import MergeSpec, Session
+from repro.store.iostats import measure
+
+BLOCK_SIZE = 16 * 1024
+#: latency-bound emulated endpoint: 5 ms per request, 25 MB/s — the
+#: shared-object-store regime where round-trips, not bytes, dominate
+REMOTE_LATENCY_S = 5e-3
+REMOTE_MBPS = 25.0
+
+
+def _fleet_arrays(k: int, total_mb: float) -> Tuple[Dict, List[Dict]]:
+    rng = np.random.default_rng(0)
+    shapes = model_shapes(total_mb)
+    base = {n: rng.normal(size=s).astype(np.float32) for n, s in shapes.items()}
+    experts = []
+    for i in range(k):
+        r = np.random.default_rng(100 + i)
+        experts.append({
+            n: v + 0.02 * r.normal(size=v.shape).astype(np.float32)
+            for n, v in base.items()
+        })
+    return base, experts
+
+
+def _register(sess: Session, base, experts, remote: Optional[str],
+              profile: Optional[Dict] = None, disk_cache: bool = True):
+    sess.register_model("base", base)
+    ids = []
+    for i, ex in enumerate(experts):
+        mid = f"expert-{i:02d}"
+        sess.register_model(mid, ex)
+        if remote is not None:
+            sess.publish_model_remote(mid, remote, profile=profile,
+                                      disk_cache=disk_cache)
+        ids.append(mid)
+    sess.ensure_analyzed("base", ids)
+    return ids
+
+
+def _spec(ids, budget):
+    return MergeSpec.build(base="base", experts=list(ids), op="ties",
+                           theta={"trim_frac": 0.3}, budget=budget)
+
+
+def _merge(ws: str, ids, budget, tier_billing: bool = False) -> Dict:
+    """One merge in a fresh Session (fresh RAM tier; the disk tier and
+    plans persist in the workspace) — returns wall + per-tier bytes."""
+    sess = Session(ws, block_size=BLOCK_SIZE)
+    try:
+        handle = sess.submit(_spec(ids, budget))
+        t0 = time.time()
+        with measure(sess.stats) as io:
+            sess.run_all(tier_billing=tier_billing)
+        wall = time.time() - t0
+        res = handle.result
+        return {
+            "wall_s": wall,
+            "sid": res.sid,
+            "arrays": sess.load(res.sid),
+            "selected_blocks": res.stats["realized_expert_blocks"],
+            "expert_bytes": io["expert_read"],
+            "expert_remote_bytes": io["expert_remote_read"],
+            "expert_disk_bytes": io["expert_disk_read"],
+            "disk_cache": sess.disk_cache_stats(),
+        }
+    finally:
+        sess.close()
+
+
+def _setup_tiered(tag: str, base, experts, profile) -> Tuple[str, List[str]]:
+    ws = fresh_dir(tag)
+    sess = Session(ws, block_size=BLOCK_SIZE)
+    remote = os.path.join(ws, "bucket")
+    ids = _register(sess, base, experts, remote, profile=profile)
+    sess.close()
+    return ws, ids
+
+
+def run(
+    k: int = 8,
+    budget: float = 0.5,
+    total_mb: Optional[float] = None,
+    latency_s: float = REMOTE_LATENCY_S,
+    mbps: float = REMOTE_MBPS,
+    json_path: Optional[str] = None,
+) -> Dict:
+    total_mb = total_mb or bench_mb()
+    profile = {"latency_s": latency_s, "mbps": mbps}
+    csv = Csv("remote_store", [
+        "arm", "k", "wall_s", "expert_mb", "remote_mb", "disk_mb",
+        "selected_blocks", "vs_local_wall",
+    ])
+    base, experts = _fleet_arrays(k, total_mb)
+
+    # flat local golden -------------------------------------------------
+    ws_local = fresh_dir("remote-local")
+    sess = Session(ws_local, block_size=BLOCK_SIZE)
+    ids = _register(sess, base, experts, remote=None)
+    sess.close()
+    local = _merge(ws_local, ids, budget)
+
+    # remote, no disk cache (every read round-trips) --------------------
+    ws_nc = fresh_dir("remote-nocache")
+    sess = Session(ws_nc, block_size=BLOCK_SIZE)
+    _register(sess, base, experts, os.path.join(ws_nc, "bucket"),
+              profile=profile, disk_cache=False)
+    sess.close()
+    nocache = _merge(ws_nc, ids, budget)
+
+    # tiered: cold fill, then warm replay -------------------------------
+    ws_t, _ = _setup_tiered("remote-tiered", base, experts, profile)
+    sess = Session(ws_t, block_size=BLOCK_SIZE)
+    sess.evict_disk_cache(0)  # analyze warmed the cache; force a true cold run
+    sess.close()
+    cold = _merge(ws_t, ids, budget)
+    warm = _merge(ws_t, ids, budget)
+
+    arms = {"local": local, "nocache": nocache, "cold": cold, "warm": warm}
+    summary: Dict = {
+        "workload": {
+            "k": k, "model_mb": total_mb, "block_size": BLOCK_SIZE,
+            "budget": budget,
+            "remote_profile": {"latency_s": latency_s, "mbps": mbps},
+        },
+        "results": {},
+    }
+    for arm, r in arms.items():
+        csv.row(arm, k, r["wall_s"], r["expert_bytes"] / 1e6,
+                r["expert_remote_bytes"] / 1e6, r["expert_disk_bytes"] / 1e6,
+                r["selected_blocks"], r["wall_s"] / max(local["wall_s"], 1e-9))
+        bitident = all(
+            np.array_equal(local["arrays"][t], r["arrays"][t])
+            for t in local["arrays"]
+        )
+        summary["results"][arm] = {
+            "wall_s": r["wall_s"],
+            "expert_bytes": r["expert_bytes"],
+            "expert_remote_bytes": r["expert_remote_bytes"],
+            "expert_disk_bytes": r["expert_disk_bytes"],
+            "selected_blocks": r["selected_blocks"],
+            "bit_identical_to_local": bitident,
+            "disk_cache": r["disk_cache"],
+        }
+    for ws in (ws_local, ws_nc, ws_t):
+        cleanup(ws)
+    out = json_path or os.environ.get(
+        "REPRO_BENCH_JSON", "bench_remote_store.json"
+    )
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# remote_store json summary -> {out}", flush=True)
+    return summary
+
+
+def check(max_warm_frac: float = 0.02, min_speedup: float = 2.0) -> int:
+    """CI smoke: warm remote bytes ~0, >= min_speedup over no-cache,
+    bit-identity with the flat-local golden — K=8, latency-bound."""
+    summary = run(k=8, total_mb=2.0)
+    res = summary["results"]
+    ok = True
+    cold_remote = res["cold"]["expert_remote_bytes"]
+    warm_remote = res["warm"]["expert_remote_bytes"]
+    print(f"# check: cold remote={cold_remote/1e6:.2f}MB  "
+          f"warm remote={warm_remote/1e6:.2f}MB  "
+          f"(require warm < {max_warm_frac:.0%} of cold)")
+    if cold_remote <= 0:
+        print("FAIL: cold run fetched no remote expert bytes "
+              "(eviction or tier accounting broken)")
+        ok = False
+    elif warm_remote > max_warm_frac * cold_remote:
+        print("FAIL: warm run still fetching from remote")
+        ok = False
+    nc, warm = res["nocache"]["wall_s"], res["warm"]["wall_s"]
+    print(f"# check: nocache wall={nc:.2f}s  warm wall={warm:.2f}s  "
+          f"speedup={nc / max(warm, 1e-9):.2f}x (require >= {min_speedup}x)")
+    if nc < min_speedup * warm:
+        print("FAIL: warm tiered merge not enough faster than no-cache")
+        ok = False
+    for arm in ("nocache", "cold", "warm"):
+        if not res[arm]["bit_identical_to_local"]:
+            print(f"FAIL: {arm} merge differs bitwise from flat local")
+            ok = False
+    if res["warm"]["disk_cache"]["hits"] <= 0:
+        print("FAIL: warm run recorded no disk-cache hits")
+        ok = False
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: warm-tier byte collapse + speedup + "
+                         "bit-identity gates")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--budget", type=float, default=0.5)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    if args.fast:
+        run(k=4, budget=args.budget, total_mb=2.0, json_path=args.json)
+    else:
+        run(k=args.k, budget=args.budget, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -196,23 +196,32 @@ class JobHandle:
             self._progress["blocks_done"] = blocks_done
             self._progress["blocks_total"] = blocks_total
 
-    def _finish(self, result) -> None:
+    def _finish(self, result, finished_at: Optional[float] = None) -> None:
         with self._lock:
             if self._state in JobState.TERMINAL:
                 return
             self._state = JobState.DONE
             self._result = result
             self.sid = result.sid
-            self.finished_at = time.time()
+            self.finished_at = (
+                finished_at if finished_at is not None else time.time()
+            )
             self._terminal.set()
 
-    def _fail(self, error: BaseException, state: str = JobState.FAILED) -> None:
+    def _fail(
+        self,
+        error: BaseException,
+        state: str = JobState.FAILED,
+        finished_at: Optional[float] = None,
+    ) -> None:
         with self._lock:
             if self._state in JobState.TERMINAL:
                 return
             self._state = state
             self._error = error
-            self.finished_at = time.time()
+            self.finished_at = (
+                finished_at if finished_at is not None else time.time()
+            )
             self._terminal.set()
 
     def __repr__(self) -> str:  # pragma: no cover

@@ -115,6 +115,7 @@ class WindowOptions:
         cache_max_bytes: Union[int, None, str] = "auto",
         pipeline: Optional[PipelineConfig] = None,
         prefer_packed: Union[bool, str] = True,
+        tier_billing: bool = False,
     ):
         self.shared_reads = shared_reads
         self.shared_budget = shared_budget
@@ -126,6 +127,13 @@ class WindowOptions:
         )
         self.pipeline = pipeline
         self.prefer_packed = prefer_packed
+        # tier-aware planner billing for remote-backed experts: warm-tier
+        # blocks bill below full price, so a fixed budget admits more
+        # blocks as caches fill.  Opt-in because it intentionally changes
+        # block *selection* (better coverage per cold byte) — the default
+        # keeps selections identical to the flat local path, which is
+        # what bit-identity guarantees rely on.
+        self.tier_billing = tier_billing
 
 
 class BudgetArbiter:
@@ -326,17 +334,21 @@ class MergeService(WorkspaceOps):
         cache_max_bytes: Union[int, None, str] = "auto",
         pipeline: Optional[PipelineConfig] = None,
         prefer_packed: Union[bool, str] = True,
+        tier_billing: bool = False,
         persistent_cache: bool = True,
         max_window_jobs: int = 16,
         max_open_readers: int = 64,
         poll_s: float = 0.05,
         start: bool = True,
+        disk_cache_max_bytes: Optional[int] = None,
     ):
         # scoped I/O accounting: a service gets its own IOStats unless
         # the caller opts into a shared (e.g. GLOBAL_STATS) instance
         stats = stats if stats is not None else IOStats()
         os.makedirs(workspace, exist_ok=True)
-        snapshots = SnapshotStore(workspace, stats)
+        snapshots = SnapshotStore(
+            workspace, stats, disk_cache_max_bytes=disk_cache_max_bytes
+        )
         catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), stats)
         snapshots.models.add_delete_guard(catalog.model_references)
         txn = TransactionManager(snapshots, catalog)
@@ -348,6 +360,7 @@ class MergeService(WorkspaceOps):
             shared_reads=shared_reads, compute=compute, coalesce=coalesce,
             analyze=analyze, cache_max_bytes=cache_max_bytes,
             pipeline=pipeline, prefer_packed=prefer_packed,
+            tier_billing=tier_billing,
             persistent_cache=persistent_cache,
             max_window_jobs=max_window_jobs,
             max_open_readers=max_open_readers, poll_s=poll_s,
@@ -392,6 +405,7 @@ class MergeService(WorkspaceOps):
         cache_max_bytes: Union[int, None, str] = "auto",
         pipeline: Optional[PipelineConfig] = None,
         prefer_packed: Union[bool, str] = True,
+        tier_billing: bool = False,
         persistent_cache: bool = True,
         max_window_jobs: int = 16,
         max_open_readers: int = 64,
@@ -421,6 +435,7 @@ class MergeService(WorkspaceOps):
             shared_reads=shared_reads, compute=compute, coalesce=coalesce,
             analyze=analyze, cache_max_bytes=cache_max_bytes,
             pipeline=pipeline, prefer_packed=prefer_packed,
+            tier_billing=tier_billing,
         )
         self.persistent_cache = persistent_cache
         self.max_window_jobs = max(1, int(max_window_jobs))
@@ -582,13 +597,16 @@ class MergeService(WorkspaceOps):
             if job is not None and job in self._pending:
                 self._pending.remove(job)
                 self._settle_reservation(job)
+                # row first, handle second (see _fail_handle)
+                finished_at = time.time()
+                self.catalog.update_job(
+                    handle.job_id, state=JobState.CANCELLED,
+                    finished_at=finished_at,
+                )
                 handle._fail(
                     JobCancelled(f"job {handle.job_id} was cancelled"),
                     state=JobState.CANCELLED,
-                )
-                self.catalog.update_job(
-                    handle.job_id, state=JobState.CANCELLED,
-                    finished_at=handle.finished_at,
+                    finished_at=finished_at,
                 )
                 return True
         if handle.status in JobState.TERMINAL:
@@ -1001,6 +1019,8 @@ class MergeService(WorkspaceOps):
 
         # -- 4. resolve handles -------------------------------------------
         done_updates = []
+        finishes: List[Tuple[JobHandle, _Node]] = []
+        finished_at = time.time()
         for job in wjobs:
             handle = job.handle
             if handle.status in JobState.TERMINAL:
@@ -1016,19 +1036,23 @@ class MergeService(WorkspaceOps):
                 continue
             node = job_nodes[handle.job_id]
             if node.result is not None:
-                handle._finish(node.result)
+                finishes.append((handle, node))
                 done_updates.append((
                     handle.job_id,
                     {"state": JobState.DONE, "sid": node.sid,
                      "admission": handle.admission,
-                     "finished_at": handle.finished_at},
+                     "finished_at": finished_at},
                 ))
             else:
                 err = dead.get(id(node)) or RuntimeError(
                     f"node {node.spec.spec_id} did not execute"
                 )
                 self._fail_handle(handle, err)
+        # rows committed (one batch) before any waiter is woken — same
+        # ordering contract as _fail_handle
         self.catalog.update_jobs(done_updates)
+        for handle, node in finishes:
+            handle._finish(node.result, finished_at=finished_at)
 
     def _fail_window(self, wjobs: List[_Job], error: BaseException) -> None:
         for job in wjobs:
@@ -1038,14 +1062,19 @@ class MergeService(WorkspaceOps):
     def _fail_handle(self, handle: JobHandle, error: BaseException) -> None:
         cancelled = isinstance(error, (MergeCancelled, JobCancelled))
         state = JobState.CANCELLED if cancelled else JobState.FAILED
+        # catalog row BEFORE waking the waiter: a thread returning from
+        # wait() must find the terminal row already committed, or it can
+        # observe status==CANCELLED while the row still says running
+        finished_at = time.time()
+        self.catalog.update_job(
+            handle.job_id, state=state, error=str(error),
+            finished_at=finished_at,
+        )
         handle._fail(
             error if not cancelled or isinstance(error, JobCancelled)
             else JobCancelled(str(error)),
             state=state,
-        )
-        self.catalog.update_job(
-            handle.job_id, state=state, error=str(error),
-            finished_at=handle.finished_at,
+            finished_at=finished_at,
         )
 
     # ----------------------------------------------------- sid validation
@@ -1267,12 +1296,34 @@ class MergeService(WorkspaceOps):
                     len(tenants) * min(grants)
                 )
 
+        # tier-aware billing: when any expert of this level is served from
+        # a remote object store, bill candidates by the tier that would
+        # serve them now (RAM free / disk cheap / remote full) so a fixed
+        # budget admits more blocks as the shared warm tiers fill up
+        tier_probe = None
+        if opts.tier_billing and any(
+            self.snapshots.models.is_remote(e) for e in level_experts
+        ):
+            from repro.store.tiered import make_tier_probe
+
+            ram_readers = {
+                m: r
+                for (lid, m), r in self._readers.items()
+                if lid is None and m in level_experts
+            }
+            tier_probe = make_tier_probe(
+                self.snapshots.models,
+                self.block_size,
+                ram_readers=ram_readers,
+            )
+
         bp = plan_batch(
             self.catalog,
             batch_jobs,
             block_size=self.block_size,
             shared_budget_b=pool_b,
             group_budgets=group_budgets,
+            tier_probe=tier_probe,
         )
         # weighted-fair accounting: each tenant group is charged the
         # physical union of its own nodes' selections (what a shared-read
@@ -1312,7 +1363,9 @@ class MergeService(WorkspaceOps):
             else:
                 open_one = self.snapshots.models.open_model
             cache_readers = owned_readers = {
-                e: CachingModelReader(open_one(e), budget=cache_budget)
+                e: CachingModelReader(
+                    open_one(e), budget=cache_budget, stats=self.stats
+                )
                 for e in level_experts
             }
             expert_readers = cache_readers
@@ -1421,7 +1474,9 @@ class MergeService(WorkspaceOps):
                     inner = layout.open_member(model_id)
                 else:
                     inner = self.snapshots.models.open_model(model_id)
-                reader = CachingModelReader(inner, budget=self._cache_budget)
+                reader = CachingModelReader(
+                    inner, budget=self._cache_budget, stats=self.stats
+                )
             self._readers[key] = reader  # re-insert = most recently used
             out[model_id] = reader
         while len(self._readers) > self.max_open_readers:

@@ -66,13 +66,16 @@ class Session(WorkspaceOps):
         block_size: int = blk.DEFAULT_BLOCK_SIZE,
         stats: Optional[IOStats] = None,
         recover: bool = True,
+        disk_cache_max_bytes: Optional[int] = None,
     ):
         self.workspace = workspace
         self.block_size = block_size
         # session-scoped accounting by default; GLOBAL_STATS is opt-in
         self.stats = stats if stats is not None else IOStats()
         os.makedirs(workspace, exist_ok=True)
-        self.snapshots = SnapshotStore(workspace, self.stats)
+        self.snapshots = SnapshotStore(
+            workspace, self.stats, disk_cache_max_bytes=disk_cache_max_bytes
+        )
         self.catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), self.stats)
         # referential integrity: deleting a model that snapshots' lineage
         # or a packed layout still references needs an explicit force=True
@@ -144,6 +147,7 @@ class Session(WorkspaceOps):
         cache_max_bytes: Union[int, None, str] = "auto",
         pipeline: Optional[PipelineConfig] = None,
         prefer_packed: Union[bool, str] = True,
+        tier_billing: bool = False,
     ) -> List[MergeResult]:
         """Plan and execute every queued job, sharing expert block reads.
 
@@ -172,6 +176,14 @@ class Session(WorkspaceOps):
         selected blocks).  Pass a layout id to force a specific layout
         (including lossy ones — an explicit opt-in), or ``False`` to
         always read flat checkpoints.
+
+        ``tier_billing=True`` bills candidate blocks of remote-backed
+        experts at their *tier* cost (RAM free, disk cheap, remote full
+        price; see docs/STORAGE.md), so a warm cache buys more blocks
+        per budget.  Opt-in because the discounted bill changes block
+        selection — outputs can differ from an all-local run of the
+        same spec (the default keeps selections, and therefore bytes,
+        identical to flat local reads).
         Returns results in submission order; handles cancelled while
         still queued are dropped from the batch (and from the results).
         """
@@ -192,6 +204,7 @@ class Session(WorkspaceOps):
             cache_max_bytes=cache_max_bytes,
             pipeline=pipeline,
             prefer_packed=prefer_packed,
+            tier_billing=tier_billing,
         )
         # one atomic group: the whole batch is a single scheduling window
         # (plan-together semantics, batch-wide sid validation)

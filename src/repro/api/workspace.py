@@ -55,6 +55,56 @@ class WorkspaceOps:
         for e in expert_ids:
             self.analyze(e, base_id=base_id)
 
+    # ------------------------------------------------- remote-backed models
+    def register_remote_model(
+        self,
+        model_id: str,
+        remote_root: str,
+        profile: Optional[Dict[str, Any]] = None,
+        disk_cache: bool = True,
+        analyze: bool = False,
+        base_id: Optional[str] = None,
+    ) -> str:
+        """Register a model already published in a remote object store
+        (``<remote_root>/<model_id>/...``).  Reads are served through the
+        tier hierarchy RAM -> local disk cache -> remote; ``profile``
+        sets the emulated endpoint's latency/bandwidth/fault shape (see
+        :class:`repro.store.remote.RemoteProfile`)."""
+        self.snapshots.models.register_remote(
+            model_id, remote_root, profile=profile, disk_cache=disk_cache
+        )
+        if analyze:
+            self.analyze(model_id, base_id=base_id)
+        return model_id
+
+    def publish_model_remote(
+        self,
+        model_id: str,
+        remote_root: str,
+        profile: Optional[Dict[str, Any]] = None,
+        keep_local: bool = False,
+        disk_cache: bool = True,
+    ) -> str:
+        """Upload a locally registered model to a remote object store and
+        (unless ``keep_local``) replace the local bytes with a remote
+        stub, so later reads exercise the tiered path."""
+        return self.snapshots.models.publish_remote(
+            model_id,
+            remote_root,
+            profile=profile,
+            keep_local=keep_local,
+            disk_cache=disk_cache,
+        )
+
+    def disk_cache_stats(self) -> Dict[str, int]:
+        """Usage/hit counters of the shared local-disk extent cache."""
+        return self.snapshots.disk_cache.cache_stats()
+
+    def evict_disk_cache(self, target_bytes: int = 0) -> int:
+        """Shrink the shared disk cache to ``target_bytes`` (0 = clear).
+        Returns bytes freed."""
+        return self.snapshots.disk_cache.evict(target_bytes)
+
     # ---------------------------------------------------------------- audit
     def explain(self, sid: str) -> Dict:
         return _explain(self.catalog, self.snapshots, sid)

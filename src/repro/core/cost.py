@@ -33,6 +33,42 @@ class CostEstimate:
         return dataclasses.asdict(self) | {"c_total_hat": self.c_total_hat}
 
 
+@dataclasses.dataclass(frozen=True)
+class TierCostModel:
+    """Per-tier billing weights and latency shape for tiered storage
+    (repro.store.tiered).
+
+    The planner multiplies each candidate block's physical bytes by the
+    weight of the tier that would serve it *right now*: RAM-resident
+    blocks are free (re-reading them moves nothing — same rule the
+    budget-soundness check applies), local-disk extent-cache hits cost a
+    token fraction (seek + page-cache traffic, no network), and cold
+    remote blocks bill at full weight.  A fixed budget therefore admits
+    strictly more blocks as the warm tiers fill — the §3.2 budget keeps
+    governing *cold moved bytes*, which is what object storage charges
+    for.
+
+    ``remote_latency_s`` / ``remote_mbps`` describe the endpoint for
+    wall-time estimation (``seconds``); they do not affect billing.
+    """
+
+    ram_weight: float = 0.0
+    disk_weight: float = 0.05
+    remote_weight: float = 1.0
+    remote_latency_s: float = 0.0
+    remote_mbps: float = 0.0
+
+    def seconds(self, nbytes: int, requests: int, tier: str = "remote") -> float:
+        """Estimated wall time to move ``nbytes`` in ``requests`` round
+        trips from one tier (metadata-only; disk/RAM modeled as free)."""
+        if tier != "remote":
+            return 0.0
+        t = requests * self.remote_latency_s
+        if self.remote_mbps:
+            t += nbytes / (self.remote_mbps * 1e6)
+        return t
+
+
 def model_nbytes(catalog: Catalog, model_id: str) -> int:
     """Total parameter bytes of a cataloged model (Σ size(T))."""
     rows = catalog.tensor_metas(model_id)

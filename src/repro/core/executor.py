@@ -115,6 +115,18 @@ class PipelineConfig:
     kernel: str = "numpy"
     coalesce_gap_bytes: int = 0
 
+    @classmethod
+    def for_remote(cls) -> "PipelineConfig":
+        """Deeper defaults for remote-backed readers: more read threads
+        and more windows in flight so per-request remote latency is
+        hidden behind compute, plus gap-tolerant coalescing (a slightly
+        larger sequential GET beats an extra round trip)."""
+        return cls(
+            prefetch_windows=4,
+            read_threads=8,
+            coalesce_gap_bytes=1 << 14,
+        )
+
     # NOTE on the numpy kernel: blocks are *prepared* (expert deltas
     # pulled, upcast, DARE masks generated) window-at-a-time on the
     # prefetch pool, but the operator applies per block — profiling shows
@@ -171,6 +183,21 @@ def _is_mergeable(spec) -> bool:
     return np.issubdtype(
         np.asarray([], dtype=spec.dtype).dtype, np.floating
     ) or spec["dtype"] in ("bfloat16", "float16", "float32", "float64")
+
+
+def _tiered_readers_behind(readers) -> List[object]:
+    """Distinct TieredReader objects behind the given readers (direct or
+    wrapped in a CachingModelReader).  Used to (a) auto-deepen the
+    pipelined prefetch for remote-latency hiding and (b) widen budget
+    slack by honestly-recorded eviction re-fetches."""
+    out: List[object] = []
+    for r in readers:
+        inner = getattr(r, "_reader", r)
+        if hasattr(inner, "evict_refetch_bytes") and all(
+            inner is not x for x in out
+        ):
+            out.append(inner)
+    return out
 
 
 def _packed_layouts_behind(expert_readers: Dict[str, object]) -> List[object]:
@@ -233,10 +260,11 @@ def execute_merge(
     if compute == "batched":
         from repro.kernels import ops as kernel_ops  # lazy: jax import
     elif compute == "pipelined":
-        pipeline = pipeline or PipelineConfig()
-        pipeline.validate()
-        if pipeline.kernel == "jax":
-            from repro.kernels import ops as kernel_ops  # lazy: jax import
+        # default PipelineConfig is resolved *after* readers are open, so
+        # remote-backed readers can deepen the prefetch (see below); an
+        # explicit config is validated here, before any txn state exists
+        if pipeline is not None:
+            pipeline.validate()
     elif compute != "stream":
         raise ValueError(f"unknown compute mode {compute!r}")
     owns_expert_readers = expert_readers is None
@@ -274,6 +302,25 @@ def execute_merge(
         else _packed_layouts_behind(expert_readers)
     )
     reread_before = sum(l.reread_bytes for l in merge_layouts)
+    # tiered (remote-backed) readers serving this merge: a disk-cache
+    # extent evicted between plan and read is honestly re-fetched from
+    # remote — those bytes widen the budget slack, mirroring packed
+    # extent re-reads under memory-cap pressure
+    tiered_readers = _tiered_readers_behind(
+        [base_reader, *expert_readers.values()]
+    )
+    evict_refetch_before = sum(r.evict_refetch_bytes for r in tiered_readers)
+    if compute == "pipelined" and pipeline is None:
+        pipeline = (
+            PipelineConfig.for_remote()
+            if any(
+                getattr(r, "prefers_deep_prefetch", False)
+                for r in tiered_readers
+            )
+            else PipelineConfig()
+        )
+    if compute == "pipelined" and pipeline.kernel == "jax" and kernel_ops is None:
+        from repro.kernels import ops as kernel_ops  # lazy: jax import
     theta = dict(plan.theta)
     seed = int(theta.get("seed", 0))
     is_dare = plan.op.lower() == "dare"
@@ -366,6 +413,14 @@ def execute_merge(
                 # memory-cap tradeoff, not a plan violation
                 slack += (
                     sum(l.reread_bytes for l in merge_layouts) - reread_before
+                )
+            if tiered_readers:
+                # disk-cache extents evicted mid-run are re-fetched from
+                # remote at full price — a cache-pressure tradeoff the
+                # plan could not have foreseen, not a plan violation
+                slack += (
+                    sum(r.evict_refetch_bytes for r in tiered_readers)
+                    - evict_refetch_before
                 )
             if realized_expert_bytes > plan.c_expert_hat + slack:
                 raise RuntimeError(

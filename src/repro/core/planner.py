@@ -65,6 +65,7 @@ def plan_merge(
     spec_id: Optional[str] = None,
     parent_sids: Optional[Sequence[str]] = None,
     layout_id: Optional[str] = None,
+    tier_probe=None,
 ) -> PlannerResult:
     """Generate (or reuse) a budget-feasible merge plan.
 
@@ -83,6 +84,17 @@ def plan_merge(
     more selected blocks on a packed store; ``plan.c_expert_hat`` becomes
     the physical planned cost and ``plan.c_expert_logical_hat`` keeps the
     flat-store equivalent.
+
+    ``tier_probe`` (see ``repro.store.tiered.make_tier_probe``) bills
+    candidates by storage tier: ``probe(expert, tensor, block, nbytes)``
+    returns a weight in [0, 1] and the candidate is charged
+    ``nbytes * weight`` — free for RAM-resident blocks, a token fraction
+    for local-disk cache hits, full price for cold remote fetches.  The
+    budget then governs *cold moved bytes*, so warm tiers let the same B
+    admit more blocks.  Applied only to flat-costed candidates (packed
+    layouts carry their own physical costing); note that plan *reuse*
+    short-circuits re-billing — pass ``reuse=False`` to re-plan against
+    the current cache state.
     """
     t0 = time.time()
     theta = dict(theta or {})
@@ -183,6 +195,7 @@ def plan_merge(
     cand_sig: List[int] = []
     fallback_events: List[Dict] = []
     tensor_fallback: List[Tuple[int, str, int, float]] = []  # (ei, tensor, nbytes, score)
+    tier_discount = 0  # logical-minus-billed bytes granted by tier_probe
 
     for ei, e in enumerate(expert_ids):
         rows = catalog.block_metas(e, block_size)
@@ -202,6 +215,12 @@ def plan_merge(
                     )
                     cand_phys.append(int(phys))
                     cand_hash.append(ehash if kind == "extent" else None)
+                elif tier_probe is not None:
+                    w = float(tier_probe(e, tensor_id, block_idx, nbytes))
+                    billed = int(round(nbytes * w))
+                    tier_discount += nbytes - billed
+                    cand_phys.append(billed)
+                    cand_hash.append(None)
                 else:
                     cand_phys.append(nbytes)
                     cand_hash.append(None)
@@ -370,6 +389,8 @@ def plan_merge(
         "c_expert_naive": naive_cost,
         "layout_id": layout_id,
         "fallbacks": len(fallback_events),
+        "tier_billed": tier_probe is not None,
+        "tier_discount_bytes": tier_discount,
     }
     return PlannerResult(plan, stats)
 
@@ -488,6 +509,7 @@ def plan_batch(
     shared_budget_b: Optional[int] = None,
     max_pool_iters: int = 4,
     group_budgets: Optional[Dict[str, Optional[int]]] = None,
+    tier_probe=None,
 ) -> BatchPlannerResult:
     """Plan a *set* of merge jobs together (API v2 batch entry point).
 
@@ -511,6 +533,12 @@ def plan_batch(
     bounds the whole window.  Both constraints converge through the same
     fixed-point iteration, with the same guaranteed proportional-split
     fallback (group caps applied first, then the global pool).
+
+    ``tier_probe`` is forwarded to every per-job :func:`plan_merge` for
+    tier-aware billing of remote-backed experts.  The *union pool* keeps
+    charging full block bytes (conservative: a warm block still counts
+    against the shared pool), so pool arbitration never over-admits when
+    the cache turns out colder than probed.
     """
     t0 = time.time()
     jobs = list(jobs)
@@ -542,6 +570,7 @@ def plan_batch(
                 spec_id=j.spec_id,
                 parent_sids=j.parent_sids,
                 layout_id=j.layout_id,
+                tier_probe=tier_probe,
             )
             for i, j in enumerate(jobs)
         ]

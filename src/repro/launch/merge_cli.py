@@ -41,6 +41,20 @@ built on a file spool under ``<workspace>/service/``::
     merge_cli status  --workspace WS [JOB_ID]
     merge_cli cancel  --workspace WS JOB_ID
 
+Remote-backed models (store/remote + store/tiered; docs/STORAGE.md) get
+two subcommands::
+
+    merge_cli remote push     --workspace WS MODEL --remote-root DIR
+                              [--latency-s X] [--mbps X] [--fail-every N]
+                              [--keep-local] [--no-disk-cache]
+    merge_cli remote register --workspace WS MODEL --remote-root DIR [...]
+    merge_cli cache stats     --workspace WS
+    merge_cli cache evict     --workspace WS [--target-bytes N]
+
+``remote push`` uploads a local model and replaces its bytes with a
+stub so later reads flow RAM -> local-disk extent cache -> remote;
+``cache`` inspects or LRU-shrinks the shared warm tier.
+
 ``submit`` drops job files into the spool and returns immediately;
 ``serve`` runs a MergeService that drains the spool continuously
 (admission control, weighted-fair budget arbitration, overlap-aware
@@ -66,7 +80,7 @@ from repro.core.executor import PipelineConfig
 from repro.store.iostats import measure
 
 SUBCOMMANDS = ("repack", "layouts", "delete", "serve", "submit", "status",
-               "cancel")
+               "cancel", "remote", "cache")
 
 
 # --------------------------------------------------------------- job spool
@@ -425,6 +439,100 @@ def _cmd_delete(argv) -> None:
         sess.close()
 
 
+def _remote_profile(args):
+    if not (args.latency_s or args.mbps or args.fail_every):
+        return None
+    return {
+        "latency_s": args.latency_s,
+        "mbps": args.mbps,
+        "fail_every": args.fail_every,
+    }
+
+
+def _cmd_remote(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="merge_cli remote",
+        description="Move models to / register models from a remote "
+                    "object store (docs/STORAGE.md, tier hierarchy).",
+    )
+    ap.add_argument("action", choices=["push", "register"],
+                    help="push: upload a local model and replace it with "
+                         "a remote stub; register: point at a model "
+                         "already published under --remote-root")
+    ap.add_argument("model_id")
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("--remote-root", required=True,
+                    help="object-store root directory (the emulated "
+                         "endpoint); models live at <root>/<model_id>/")
+    ap.add_argument("--latency-s", type=float, default=0.0,
+                    help="emulated per-request latency (seconds)")
+    ap.add_argument("--mbps", type=float, default=0.0,
+                    help="emulated bandwidth (MB/s; 0 = unthrottled)")
+    ap.add_argument("--fail-every", type=int, default=0,
+                    help="inject a transient fault every Nth request "
+                         "(exercises the retry path; 0 = never)")
+    ap.add_argument("--keep-local", action="store_true",
+                    help="push only: keep the local tensor files instead "
+                         "of replacing them with the remote stub")
+    ap.add_argument("--no-disk-cache", action="store_true",
+                    help="serve reads straight from remote, bypassing "
+                         "the local-disk extent cache")
+    args = ap.parse_args(argv)
+    sess = Session(args.workspace)
+    try:
+        profile = _remote_profile(args)
+        if args.action == "push":
+            sess.publish_model_remote(
+                args.model_id, args.remote_root, profile=profile,
+                keep_local=args.keep_local,
+                disk_cache=not args.no_disk_cache,
+            )
+            print(f"[remote] pushed {args.model_id} -> {args.remote_root}"
+                  f"{'  (local copy kept)' if args.keep_local else ''}")
+        else:
+            sess.register_remote_model(
+                args.model_id, args.remote_root, profile=profile,
+                disk_cache=not args.no_disk_cache,
+            )
+            print(f"[remote] registered {args.model_id} "
+                  f"<- {args.remote_root}")
+    except (ValueError, FileNotFoundError, IOError) as e:
+        raise SystemExit(str(e))
+    finally:
+        sess.close()
+
+
+def _cmd_cache(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="merge_cli cache",
+        description="Inspect / shrink the workspace's shared local-disk "
+                    "extent cache (the warm tier between RAM and remote).",
+    )
+    ap.add_argument("action", choices=["stats", "evict"])
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("--target-bytes", type=int, default=0,
+                    help="evict: LRU-shrink usage to this size (0 = clear)")
+    args = ap.parse_args(argv)
+    sess = Session(args.workspace)
+    try:
+        if args.action == "stats":
+            st = sess.disk_cache_stats()
+            cap = st["max_bytes"]
+            print(f"extents={st['extents']}  "
+                  f"usage={st['usage_bytes']/1e6:.2f}MB  "
+                  f"cap={'unbounded' if not cap else f'{cap/1e6:.2f}MB'}")
+            print(f"hits={st['hits']}  misses={st['misses']}  "
+                  f"fills={st['fills']}  evictions={st['evictions']}")
+        else:
+            freed = sess.evict_disk_cache(args.target_bytes)
+            st = sess.disk_cache_stats()
+            print(f"[cache] freed {freed/1e6:.1f}MB  "
+                  f"(now {st['extents']} extents, "
+                  f"{st['usage_bytes']/1e6:.1f}MB)")
+    finally:
+        sess.close()
+
+
 def _run_specs(args) -> None:
     specs = load_spec_file(args.spec)
     sess = Session(args.workspace, block_size=args.block_size)
@@ -483,6 +591,10 @@ def main() -> None:
             return _cmd_status(argv)
         if cmd == "cancel":
             return _cmd_cancel(argv)
+        if cmd == "remote":
+            return _cmd_remote(argv)
+        if cmd == "cache":
+            return _cmd_cache(argv)
         return _cmd_delete(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--workspace", required=True)

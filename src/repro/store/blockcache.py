@@ -63,6 +63,7 @@ class CachingModelReader:
         reader: ModelReader,
         max_bytes: Optional[int] = None,
         budget: Optional[CacheBudget] = None,
+        stats=None,
     ):
         self._reader = reader
         self.budget = budget or CacheBudget(max_bytes)
@@ -76,6 +77,13 @@ class CachingModelReader:
         self.hits = 0
         self.misses = 0
         self.bytes_saved = 0
+        #: optional IOStats for RAM-tier hit/miss counters (hits still
+        #: record zero read bytes — they are free by construction)
+        self.stats = stats
+
+    def _record_cache(self, nbytes: int, hit: bool) -> None:
+        if self.stats is not None:
+            self.stats.record_cache("ram", nbytes, hit)
 
     # -- delegated structure ----------------------------------------------
     @property
@@ -124,12 +132,23 @@ class CachingModelReader:
             if hit is not None:
                 self.hits += 1
                 self.bytes_saved += hit.nbytes
+                self._record_cache(hit.nbytes, hit=True)
                 return hit
             self.misses += 1
         arr = self._reader.read_block(tensor_id, block_idx, block_size, category)
+        self._record_cache(arr.nbytes, hit=False)
         with self._lock:
             self._admit(key, arr)
         return arr
+
+    def has_block(self, tensor_id: str, block_idx: int, block_size: int) -> bool:
+        """Tier probe: is this block RAM-resident right now? (Planner
+        billing hook — see repro.store.tiered.make_tier_probe.)"""
+        with self._lock:
+            return (
+                (tensor_id, block_idx, block_size) in self._blocks
+                or tensor_id in self._tensors
+            )
 
     def read_blocks_coalesced(
         self,
@@ -147,6 +166,7 @@ class CachingModelReader:
                 if hit is not None:
                     self.hits += 1
                     self.bytes_saved += hit.nbytes
+                    self._record_cache(hit.nbytes, hit=True)
                     out[b] = hit
                 else:
                     missing.append(b)
@@ -159,6 +179,7 @@ class CachingModelReader:
             with self._lock:
                 for b, arr in fetched.items():
                     self._admit((tensor_id, b, block_size), arr)
+                    self._record_cache(arr.nbytes, hit=False)
                     out[b] = arr
         return out
 
@@ -168,9 +189,11 @@ class CachingModelReader:
             if hit is not None:
                 self.hits += 1
                 self.bytes_saved += hit.nbytes
+                self._record_cache(hit.nbytes, hit=True)
                 return hit
             self.misses += 1
         arr = self._reader.read_tensor(tensor_id, category)
+        self._record_cache(arr.nbytes, hit=False)
         with self._lock:
             if tensor_id not in self._tensors and self.budget.admit(arr.nbytes):
                 self._tensors[tensor_id] = arr

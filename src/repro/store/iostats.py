@@ -11,6 +11,15 @@ mirroring the paper's cost decomposition (§3.2):
               same cost term, just with smaller bytes behind each read —
               but kept as its own category so packed-vs-flat physical
               volume stays directly comparable.
+    expert_remote — expert bytes fetched from a remote object store
+              (repro.store.remote) on a tiered-cache miss.  Counted into
+              C_expert: these are the cold moved bytes the budget B
+              governs.
+    expert_disk — expert bytes served from the local-disk extent cache
+              (repro.store.tiered).  Like RAM-cache hits these are NOT
+              part of the budget-enforced C_expert term (the budget
+              bounds cold fetches, §3.2) but they are real local I/O, so
+              they appear in ``total_expert_bytes``.
     out     — writes of the merged output      (C_out)
     meta    — catalog / manifest / hash I/O    (C_meta)
     repack  — one-time PackedStore repack I/O (amortized, like analyze)
@@ -28,9 +37,13 @@ from collections import defaultdict
 from typing import Dict, Iterator
 
 CATEGORIES = (
-    "base", "expert", "expert_packed", "out", "meta", "analyze", "repack",
-    "other",
+    "base", "expert", "expert_packed", "expert_remote", "expert_disk",
+    "out", "meta", "analyze", "repack", "other",
 )
+
+#: every category that serves plan-selected expert blocks, regardless of
+#: which storage tier the bytes physically came from
+EXPERT_CATEGORIES = ("expert", "expert_packed", "expert_remote", "expert_disk")
 
 
 @dataclasses.dataclass
@@ -50,6 +63,10 @@ class IOStats:
         self._lock = threading.Lock()
         self.read: Dict[str, Counter] = defaultdict(Counter)
         self.written: Dict[str, Counter] = defaultdict(Counter)
+        # per-tier cache effectiveness ("ram" / "disk"): a hit is a read
+        # served without touching the next tier down
+        self.cache_hits: Dict[str, Counter] = defaultdict(Counter)
+        self.cache_misses: Dict[str, Counter] = defaultdict(Counter)
 
     # -- recording -----------------------------------------------------
     def record_read(self, category: str, nbytes: int) -> None:
@@ -59,6 +76,10 @@ class IOStats:
     def record_write(self, category: str, nbytes: int) -> None:
         with self._lock:
             self.written[category].add(nbytes)
+
+    def record_cache(self, tier: str, nbytes: int, hit: bool) -> None:
+        with self._lock:
+            (self.cache_hits if hit else self.cache_misses)[tier].add(nbytes)
 
     # -- queries (paper cost terms) -------------------------------------
     # Queries must not mutate the defaultdicts (a bare ``self.read[cat]``
@@ -80,10 +101,34 @@ class IOStats:
 
     @property
     def c_expert(self) -> int:
-        """Expert-read cost term: flat checkpoint reads plus physical
-        packed-extent reads (both serve plan-selected expert blocks; the
-        budget B governs their sum)."""
-        return self.bytes_read("expert") + self.bytes_read("expert_packed")
+        """Budget-enforced expert-read cost term: flat checkpoint reads,
+        physical packed-extent reads, and cold remote fetches (all move
+        bytes the budget B governs).  Warm-tier hits — RAM (recorded as
+        zero I/O) and local-disk extent-cache reads (``expert_disk``) —
+        are deliberately excluded: the budget bounds cold moved bytes."""
+        return (
+            self.bytes_read("expert")
+            + self.bytes_read("expert_packed")
+            + self.bytes_read("expert_remote")
+        )
+
+    @property
+    def total_expert_bytes(self) -> int:
+        """All bytes that served expert blocks, across every tier —
+        the full physical expert-side volume (>= ``c_expert``)."""
+        return sum(self.bytes_read(c) for c in EXPERT_CATEGORIES)
+
+    def cache_counters(self, tier: str) -> Dict[str, int]:
+        """Hit/miss counters for one cache tier (``"ram"`` / ``"disk"``)."""
+        with self._lock:
+            h = self.cache_hits.get(tier)
+            m = self.cache_misses.get(tier)
+            return {
+                "hits": h.calls if h else 0,
+                "hit_bytes": h.bytes if h else 0,
+                "misses": m.calls if m else 0,
+                "miss_bytes": m.bytes if m else 0,
+            }
 
     @property
     def c_out(self) -> int:
@@ -114,12 +159,20 @@ class IOStats:
             return {
                 "read": {k: dataclasses.asdict(v) for k, v in self.read.items()},
                 "written": {k: dataclasses.asdict(v) for k, v in self.written.items()},
+                "cache_hits": {
+                    k: dataclasses.asdict(v) for k, v in self.cache_hits.items()
+                },
+                "cache_misses": {
+                    k: dataclasses.asdict(v) for k, v in self.cache_misses.items()
+                },
             }
 
     def reset(self) -> None:
         with self._lock:
             self.read.clear()
             self.written.clear()
+            self.cache_hits.clear()
+            self.cache_misses.clear()
 
     def delta_since(self, before: Dict[str, Dict[str, int]]) -> Dict[str, int]:
         now = self.snapshot()
@@ -129,14 +182,24 @@ class IOStats:
 
         return {
             "base_read": _get(now, "read", "base") - _get(before, "read", "base"),
-            "expert_read": (
-                _get(now, "read", "expert") - _get(before, "read", "expert")
-                + _get(now, "read", "expert_packed")
-                - _get(before, "read", "expert_packed")
+            # total expert-serving bytes across every tier (matches
+            # ``total_expert_bytes``); warm disk hits included — use
+            # ``expert_remote_read`` for cold remote volume alone
+            "expert_read": sum(
+                _get(now, "read", c) - _get(before, "read", c)
+                for c in EXPERT_CATEGORIES
             ),
             "expert_packed_read": (
                 _get(now, "read", "expert_packed")
                 - _get(before, "read", "expert_packed")
+            ),
+            "expert_remote_read": (
+                _get(now, "read", "expert_remote")
+                - _get(before, "read", "expert_remote")
+            ),
+            "expert_disk_read": (
+                _get(now, "read", "expert_disk")
+                - _get(before, "read", "expert_disk")
             ),
             "out_written": _get(now, "written", "out") - _get(before, "written", "out"),
             # "meta" keeps its historical definition (meta + other, so

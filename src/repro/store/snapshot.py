@@ -226,10 +226,25 @@ class WriteBehindWriter:
 class SnapshotStore:
     """Workspace-level snapshot management with atomic publish."""
 
-    def __init__(self, workspace: str, stats: Optional[IOStats] = None):
+    def __init__(
+        self,
+        workspace: str,
+        stats: Optional[IOStats] = None,
+        disk_cache_max_bytes: Optional[int] = None,
+    ):
         self.workspace = workspace
         self.stats = stats or GLOBAL_STATS
         self.models = CheckpointStore(os.path.join(workspace, "models"), self.stats)
+        # one local-disk extent cache per workspace, shared by every
+        # tenant / session on the box: the warm tier for remote-backed
+        # models (repro.store.tiered); attached so open_model can build
+        # tiered readers over it
+        from repro.store.tiered import DiskExtentCache
+
+        self.disk_cache = DiskExtentCache(
+            os.path.join(workspace, "diskcache"), max_bytes=disk_cache_max_bytes
+        )
+        self.models.disk_cache = self.disk_cache
         self.packed = PackedStore(
             os.path.join(workspace, "packed"), self.stats, models=self.models
         )

@@ -32,6 +32,9 @@ from repro.store.iostats import GLOBAL_STATS, IOStats
 
 MODEL_MANIFEST = "MODEL.json"
 TENSOR_DIR = "tensors"
+#: presence of this stub (instead of MODEL.json) marks a model whose
+#: bytes live in a remote object store (see repro.store.remote)
+REMOTE_STUB = "REMOTE.json"
 
 
 def _hash_bytes(data: bytes) -> str:
@@ -58,31 +61,24 @@ class TensorSpec(dict):
         return self["file"]
 
 
-class ModelReader:
-    """Read-only, block-granular view over one stored model."""
+class BlockReaderMixin:
+    """Block-granular read surface over any ``read_range`` provider.
 
-    def __init__(self, root: str, model_id: str, stats: IOStats):
-        self.root = root
-        self.model_id = model_id
-        self.stats = stats
-        self.dir = os.path.join(root, model_id)
-        manifest_path = os.path.join(self.dir, MODEL_MANIFEST)
-        with open(manifest_path, "rb") as f:
-            raw = f.read()
-        stats.record_read("meta", len(raw))
-        doc = json.loads(raw)
-        self.meta: Dict = doc.get("meta", {})
-        self.specs: Dict[str, TensorSpec] = {
-            name: TensorSpec(spec) for name, spec in doc["tensors"].items()
-        }
-        self._fds: Dict[str, int] = {}
-        self._fd_lock = threading.Lock()
+    Everything here is derived purely from ``self.specs`` (a
+    ``{tensor_id: TensorSpec}`` map) plus the subclass's ``read_range`` —
+    the local :class:`ModelReader` and the remote-backed
+    :class:`repro.store.tiered.TieredReader` share it, so the executor,
+    delta iterator, and block cache see one reader interface regardless
+    of which storage backend serves the bytes.
+    """
+
+    specs: Dict[str, "TensorSpec"]
 
     # -- structure -------------------------------------------------------
     def tensor_names(self) -> List[str]:
         return list(self.specs.keys())
 
-    def spec(self, tensor_id: str) -> TensorSpec:
+    def spec(self, tensor_id: str) -> "TensorSpec":
         return self.specs[tensor_id]
 
     def total_nbytes(self) -> int:
@@ -91,55 +87,7 @@ class ModelReader:
     def num_blocks(self, tensor_id: str, block_size: int) -> int:
         return blk.num_blocks(self.specs[tensor_id].nbytes, block_size)
 
-    # -- physical reads ----------------------------------------------------
-    def _fd(self, tensor_id: str) -> int:
-        fd = self._fds.get(tensor_id)
-        if fd is None:
-            with self._fd_lock:
-                fd = self._fds.get(tensor_id)
-                if fd is None:
-                    path = os.path.join(self.dir, self.specs[tensor_id].file)
-                    fd = os.open(path, os.O_RDONLY)
-                    self._fds[tensor_id] = fd
-        return fd
-
-    def read_range(
-        self,
-        tensor_id: str,
-        offset: int,
-        nbytes: int,
-        category: str,
-        waste_nbytes: int = 0,
-    ) -> bytes:
-        """Positional read — safe under arbitrary thread concurrency
-        (``pread`` never moves a shared file offset).
-
-        ``waste_nbytes`` marks bytes inside the range that no caller
-        requested (gap-tolerant coalescing reads them to save a round
-        trip); they are tagged ``other`` instead of ``category`` so
-        budget categories count payload bytes only while total physical
-        volume stays fully accounted.
-        """
-        fd = self._fd(tensor_id)
-        chunks = []
-        got = 0
-        while got < nbytes:  # pread may return short on signals / EOF
-            chunk = os.pread(fd, nbytes - got, offset + got)
-            if not chunk:
-                break
-            chunks.append(chunk)
-            got += len(chunk)
-        data = chunks[0] if len(chunks) == 1 else b"".join(chunks)
-        if len(data) != nbytes:
-            raise IOError(
-                f"short read on {self.model_id}/{tensor_id} "
-                f"[{offset}:{offset+nbytes}]: got {len(data)}"
-            )
-        self.stats.record_read(category, nbytes - waste_nbytes)
-        if waste_nbytes:
-            self.stats.record_read("other", waste_nbytes)
-        return data
-
+    # -- derived reads ---------------------------------------------------
     def read_block(
         self, tensor_id: str, block_idx: int, block_size: int, category: str
     ) -> np.ndarray:
@@ -209,17 +157,90 @@ class ModelReader:
         data = self.read_range(tensor_id, 0, spec.nbytes, category)
         return np.frombuffer(data, dtype=spec.dtype).reshape(spec.shape)
 
-    def close(self) -> None:
-        with self._fd_lock:
-            for fd in self._fds.values():
-                os.close(fd)
-            self._fds.clear()
+    def close(self) -> None:  # pragma: no cover — overridden where needed
+        pass
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
         self.close()
+
+
+class ModelReader(BlockReaderMixin):
+    """Read-only, block-granular view over one stored model."""
+
+    def __init__(self, root: str, model_id: str, stats: IOStats):
+        self.root = root
+        self.model_id = model_id
+        self.stats = stats
+        self.dir = os.path.join(root, model_id)
+        manifest_path = os.path.join(self.dir, MODEL_MANIFEST)
+        with open(manifest_path, "rb") as f:
+            raw = f.read()
+        stats.record_read("meta", len(raw))
+        doc = json.loads(raw)
+        self.meta: Dict = doc.get("meta", {})
+        self.specs: Dict[str, TensorSpec] = {
+            name: TensorSpec(spec) for name, spec in doc["tensors"].items()
+        }
+        self._fds: Dict[str, int] = {}
+        self._fd_lock = threading.Lock()
+
+    # -- physical reads ----------------------------------------------------
+    def _fd(self, tensor_id: str) -> int:
+        fd = self._fds.get(tensor_id)
+        if fd is None:
+            with self._fd_lock:
+                fd = self._fds.get(tensor_id)
+                if fd is None:
+                    path = os.path.join(self.dir, self.specs[tensor_id].file)
+                    fd = os.open(path, os.O_RDONLY)
+                    self._fds[tensor_id] = fd
+        return fd
+
+    def read_range(
+        self,
+        tensor_id: str,
+        offset: int,
+        nbytes: int,
+        category: str,
+        waste_nbytes: int = 0,
+    ) -> bytes:
+        """Positional read — safe under arbitrary thread concurrency
+        (``pread`` never moves a shared file offset).
+
+        ``waste_nbytes`` marks bytes inside the range that no caller
+        requested (gap-tolerant coalescing reads them to save a round
+        trip); they are tagged ``other`` instead of ``category`` so
+        budget categories count payload bytes only while total physical
+        volume stays fully accounted.
+        """
+        fd = self._fd(tensor_id)
+        chunks = []
+        got = 0
+        while got < nbytes:  # pread may return short on signals / EOF
+            chunk = os.pread(fd, nbytes - got, offset + got)
+            if not chunk:
+                break
+            chunks.append(chunk)
+            got += len(chunk)
+        data = chunks[0] if len(chunks) == 1 else b"".join(chunks)
+        if len(data) != nbytes:
+            raise IOError(
+                f"short read on {self.model_id}/{tensor_id} "
+                f"[{offset}:{offset+nbytes}]: got {len(data)}"
+            )
+        self.stats.record_read(category, nbytes - waste_nbytes)
+        if waste_nbytes:
+            self.stats.record_read("other", waste_nbytes)
+        return data
+
+    def close(self) -> None:
+        with self._fd_lock:
+            for fd in self._fds.values():
+                os.close(fd)
+            self._fds.clear()
 
 
 class CheckpointStore:
@@ -233,6 +254,15 @@ class CheckpointStore:
         #: make deletion unsafe (catalog lineage, packed layouts, ...).
         #: Wired by MergePipe/Session; a bare store has no guards.
         self._delete_guards: List = []
+        #: shared local-disk extent cache for remote-backed models
+        #: (repro.store.tiered.DiskExtentCache); wired by SnapshotStore so
+        #: every tenant on the box shares one warm tier.  None => tiered
+        #: readers skip the disk tier and fetch straight from remote.
+        self.disk_cache = None
+        # one RemoteObjectStore per remote root, shared across readers so
+        # fault-injection / request counters are coherent per endpoint
+        self._remote_stores: Dict[str, object] = {}
+        self._remote_lock = threading.Lock()
 
     def add_delete_guard(self, guard) -> None:
         """Register a referential-integrity check consulted by
@@ -283,12 +313,124 @@ class CheckpointStore:
         self.stats.record_write("meta", len(raw_manifest))
         return mdir
 
+    # -- remote-backed models (repro.store.remote / .tiered) -----------------
+    def register_remote(
+        self,
+        model_id: str,
+        remote_root: str,
+        profile: Optional[Dict] = None,
+        disk_cache: bool = True,
+    ) -> str:
+        """Register a model whose bytes live in a remote object store.
+
+        Writes a ``REMOTE.json`` stub in place of a local ``MODEL.json``;
+        ``open_model`` then returns a :class:`repro.store.tiered.
+        TieredReader` serving reads RAM -> disk cache -> remote.
+        ``disk_cache=False`` opts this model out of the shared disk tier
+        (every miss pays the remote round trip — benchmark baseline).
+        """
+        if self.exists(model_id):
+            raise ValueError(f"model {model_id!r} already registered")
+        # validate now, not at first read: a typo'd id would otherwise
+        # plant a stub that only fails deep inside a merge (HEAD is a
+        # cheap control-plane request, never fault-injected)
+        self.remote_store(remote_root).head(f"{model_id}/{MODEL_MANIFEST}")
+        mdir = os.path.join(self.root, model_id)
+        os.makedirs(mdir, exist_ok=True)
+        stub = {
+            "model_id": model_id,
+            "remote_root": os.path.abspath(remote_root),
+            "profile": dict(profile or {}),
+            "disk_cache": bool(disk_cache),
+        }
+        raw = json.dumps(stub, indent=1).encode()
+        tmp = os.path.join(mdir, REMOTE_STUB + ".tmp")
+        with open(tmp, "wb") as f:
+            f.write(raw)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(mdir, REMOTE_STUB))
+        self.stats.record_write("meta", len(raw))
+        return mdir
+
+    def is_remote(self, model_id: str) -> bool:
+        return not os.path.exists(
+            os.path.join(self.root, model_id, MODEL_MANIFEST)
+        ) and os.path.exists(os.path.join(self.root, model_id, REMOTE_STUB))
+
+    def remote_stub(self, model_id: str) -> Dict:
+        path = os.path.join(self.root, model_id, REMOTE_STUB)
+        with open(path, "rb") as f:
+            raw = f.read()
+        self.stats.record_read("meta", len(raw))
+        return json.loads(raw)
+
+    def remote_store(self, remote_root: str):
+        """Shared :class:`repro.store.remote.RemoteObjectStore` per remote
+        root (so request/fault counters are per-endpoint, not per-reader)."""
+        from repro.store.remote import RemoteObjectStore
+
+        key = os.path.abspath(remote_root)
+        with self._remote_lock:
+            store = self._remote_stores.get(key)
+            if store is None:
+                store = RemoteObjectStore(key)
+                self._remote_stores[key] = store
+            return store
+
+    def publish_remote(
+        self,
+        model_id: str,
+        remote_root: str,
+        profile: Optional[Dict] = None,
+        keep_local: bool = False,
+        disk_cache: bool = True,
+    ) -> str:
+        """Upload a locally stored model to a remote object store and
+        replace its local copy with a ``REMOTE.json`` stub (unless
+        ``keep_local``).  Subsequent reads go through the tiered path."""
+        from repro.store.remote import publish_model
+
+        if not os.path.exists(os.path.join(self.root, model_id, MODEL_MANIFEST)):
+            raise ValueError(f"model {model_id!r} has no local copy to publish")
+        remote = self.remote_store(remote_root)
+        publish_model(self, model_id, remote)
+        if not keep_local:
+            import shutil
+
+            mdir = os.path.join(self.root, model_id)
+            shutil.rmtree(os.path.join(mdir, TENSOR_DIR), ignore_errors=True)
+            os.remove(os.path.join(mdir, MODEL_MANIFEST))
+            stub = {
+                "model_id": model_id,
+                "remote_root": os.path.abspath(remote_root),
+                "profile": dict(profile or {}),
+                "disk_cache": bool(disk_cache),
+            }
+            raw = json.dumps(stub, indent=1).encode()
+            tmp = os.path.join(mdir, REMOTE_STUB + ".tmp")
+            with open(tmp, "wb") as f:
+                f.write(raw)
+            os.replace(tmp, os.path.join(mdir, REMOTE_STUB))
+            self.stats.record_write("meta", len(raw))
+        return remote.root
+
     # -- read ----------------------------------------------------------------
-    def open_model(self, model_id: str) -> ModelReader:
+    def open_model(self, model_id: str):
+        if os.path.exists(os.path.join(self.root, model_id, MODEL_MANIFEST)):
+            return ModelReader(self.root, model_id, self.stats)
+        if self.is_remote(model_id):
+            from repro.store.tiered import open_tiered_reader
+
+            return open_tiered_reader(self, model_id)
+        # fall through to ModelReader's "no such manifest" error
         return ModelReader(self.root, model_id, self.stats)
 
     def exists(self, model_id: str) -> bool:
-        return os.path.exists(os.path.join(self.root, model_id, MODEL_MANIFEST))
+        mdir = os.path.join(self.root, model_id)
+        return os.path.exists(os.path.join(mdir, MODEL_MANIFEST)) or os.path.exists(
+            os.path.join(mdir, REMOTE_STUB)
+        )
 
     def list_models(self) -> List[str]:
         if not os.path.isdir(self.root):
@@ -297,6 +439,7 @@ class CheckpointStore:
             d
             for d in os.listdir(self.root)
             if os.path.exists(os.path.join(self.root, d, MODEL_MANIFEST))
+            or os.path.exists(os.path.join(self.root, d, REMOTE_STUB))
         )
 
     def delete_model(self, model_id: str, force: bool = False) -> None:

@@ -1,0 +1,572 @@
+"""Tiered block cache over a remote backend: RAM -> local disk -> remote.
+
+The hierarchy (paper §2.1: expert reads dominate; the fix is to stop
+paying for them repeatedly):
+
+* **RAM** — the existing :class:`repro.store.blockcache.
+  CachingModelReader` wraps a :class:`TieredReader` exactly like a local
+  reader; hits are free (no I/O recorded), admission is bounded by the
+  shared ``CacheBudget``.
+* **Local disk** — :class:`DiskExtentCache`, a content-hash-keyed extent
+  cache shared by every tenant of one MergeService box (wired through
+  ``SnapshotStore``).  Extents are immutable files published by atomic
+  rename, so a crash mid-fill leaves only an invisible temp file, never
+  a torn extent.  Concurrent readers missing on the same extent share
+  one fill (single-flight latch — the remote sees exactly one request).
+  Hits are charged to the ``expert_disk`` IOStats category: real local
+  I/O, but *not* part of the budget-enforced cold-byte term.
+* **Remote** — :class:`repro.store.remote.RemoteObjectStore` ranged
+  GETs, wrapped in bounded :class:`~repro.store.remote.RetryPolicy`
+  retry/backoff against injected faults.  Cold fetches are charged to
+  ``expert_remote`` — the bytes the merge budget governs.
+
+Cache keying and invalidation: an extent is keyed by the *tensor
+content hash* from the model manifest plus the byte range, so the cache
+never needs invalidation messages — republishing a changed model
+changes its tensor hashes, new reads key to new extents, and stale ones
+age out by LRU eviction.  The locally cached manifest itself is
+revalidated against the remote's etag on every reader open.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import blocks as blk
+from repro.store.iostats import IOStats
+from repro.store.remote import (
+    RemoteObjectStore,
+    RemoteProfile,
+    RetryPolicy,
+    model_key,
+)
+from repro.store.tensorstore import (
+    MODEL_MANIFEST,
+    BlockReaderMixin,
+    CheckpointStore,
+    TensorSpec,
+)
+
+#: locally cached copy of a remote model's manifest (etag-validated)
+MANIFEST_CACHE = "MODEL.cache.json"
+
+_EXT_DIR = "ext"
+_TMP_DIR = "tmp"
+
+
+def _key_hash(content_key: str) -> str:
+    return hashlib.blake2b(content_key.encode(), digest_size=16).hexdigest()
+
+
+class DiskExtentCache:
+    """Crash-safe, content-addressed extent cache on local disk.
+
+    One extent file per cached byte range, named
+    ``<blake2b(content_key)>__<offset>__<nbytes>.ext`` under a 2-hex
+    fanout directory — the name *is* the index entry, so the in-memory
+    index can always be rebuilt from a directory listing (other
+    processes' fills become visible on rescan).  A read hits when a
+    single cached extent fully covers the requested range; partial
+    overlaps miss and fill a new extent (deterministic coalescing plus
+    plan reuse make warm re-runs exact-key hits, so overlap storage is
+    transient and reclaimed by LRU eviction).
+
+    ``max_bytes`` bounds usage: fills evict least-recently-used extents
+    (hit reads refresh mtime) until the new extent fits; an extent
+    larger than the whole cap is served but never cached.
+    """
+
+    def __init__(self, root: str, max_bytes: Optional[int] = None):
+        self.root = os.path.abspath(root)
+        self.max_bytes = max_bytes
+        os.makedirs(os.path.join(self.root, _EXT_DIR), exist_ok=True)
+        os.makedirs(os.path.join(self.root, _TMP_DIR), exist_ok=True)
+        self._lock = threading.Lock()
+        self._index: Dict[str, Dict[Tuple[int, int], int]] = {}
+        self._usage = 0
+        self._seq = 0
+        self.hits = 0
+        self.misses = 0
+        self.fills = 0
+        self.evictions = 0
+        self._inflight: Dict[Tuple[str, int, int], threading.Event] = {}
+        self._rebuild_index()
+
+    # -- paths / index ------------------------------------------------------
+    def _ext_dir(self, kh: str) -> str:
+        return os.path.join(self.root, _EXT_DIR, kh[:2])
+
+    def _ext_path(self, kh: str, offset: int, nbytes: int) -> str:
+        return os.path.join(self._ext_dir(kh), f"{kh}__{offset}__{nbytes}.ext")
+
+    def _rebuild_index(self) -> None:
+        index: Dict[str, Dict[Tuple[int, int], int]] = {}
+        usage = 0
+        ext_root = os.path.join(self.root, _EXT_DIR)
+        for dirpath, _dirs, files in os.walk(ext_root):
+            for fname in files:
+                if not fname.endswith(".ext"):
+                    continue
+                try:
+                    kh, off_s, n_s = fname[: -len(".ext")].split("__")
+                    offset, nbytes = int(off_s), int(n_s)
+                except ValueError:
+                    continue
+                index.setdefault(kh, {})[(offset, nbytes)] = nbytes
+                usage += nbytes
+        with self._lock:
+            self._index = index
+            self._usage = usage
+
+    def _rescan(self, kh: str) -> None:
+        """Refresh one key's extents from disk (picks up fills by other
+        processes sharing the cache directory)."""
+        entries: Dict[Tuple[int, int], int] = {}
+        try:
+            names = os.listdir(self._ext_dir(kh))
+        except FileNotFoundError:
+            names = []
+        for fname in names:
+            if not fname.startswith(kh) or not fname.endswith(".ext"):
+                continue
+            try:
+                _kh, off_s, n_s = fname[: -len(".ext")].split("__")
+            except ValueError:
+                continue
+            entries[(int(off_s), int(n_s))] = int(n_s)
+        with self._lock:
+            old = self._index.get(kh, {})
+            self._usage += sum(entries.values()) - sum(old.values())
+            self._index[kh] = entries
+
+    def _assemble(
+        self, kh: str, offset: int, nbytes: int
+    ) -> Optional[List[Tuple[Tuple[int, int], int, int]]]:
+        """Greedy cover of ``[offset, offset+nbytes)`` by cached extents —
+        ``[(extent, lo, hi), ...]`` slices, or None on any gap.  Multi-
+        extent assembly matters because fill granularity varies: ANALYZE
+        caches per-block extents while the executor reads coalesced
+        multi-block runs; a run whose blocks are all cached individually
+        is still a warm hit."""
+        with self._lock:
+            extents = sorted(self._index.get(kh, {}))
+        end = offset + nbytes
+        plan: List[Tuple[Tuple[int, int], int, int]] = []
+        pos = offset
+        i = 0
+        while pos < end:
+            best = None
+            best_end = pos
+            while i < len(extents) and extents[i][0] <= pos:
+                o, n = extents[i]
+                if o + n > best_end:
+                    best_end = o + n
+                    best = (o, n)
+                i += 1
+            if best is None:
+                return None
+            plan.append((best, pos, min(best_end, end)))
+            pos = best_end
+        return plan
+
+    # -- queries ------------------------------------------------------------
+    def covers(self, content_key: str, offset: int, nbytes: int) -> bool:
+        kh = _key_hash(content_key)
+        if self._assemble(kh, offset, nbytes) is not None:
+            return True
+        self._rescan(kh)
+        return self._assemble(kh, offset, nbytes) is not None
+
+    def extents_for(self, content_key: str) -> List[Tuple[int, int]]:
+        kh = _key_hash(content_key)
+        self._rescan(kh)
+        with self._lock:
+            return sorted(self._index.get(kh, {}))
+
+    def cache_stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "extents": sum(len(v) for v in self._index.values()),
+                "usage_bytes": self._usage,
+                "max_bytes": self.max_bytes or 0,
+                "hits": self.hits,
+                "misses": self.misses,
+                "fills": self.fills,
+                "evictions": self.evictions,
+            }
+
+    # -- data path ----------------------------------------------------------
+    def read(self, content_key: str, offset: int, nbytes: int) -> Optional[bytes]:
+        """Serve a range if cached extents cover it without gaps (one
+        extent or a contiguous assembly of several)."""
+        kh = _key_hash(content_key)
+        plan = self._assemble(kh, offset, nbytes)
+        if plan is None:
+            self._rescan(kh)
+            plan = self._assemble(kh, offset, nbytes)
+        if plan is None:
+            with self._lock:
+                self.misses += 1
+            return None
+        parts: List[bytes] = []
+        for (o, n), lo, hi in plan:
+            path = self._ext_path(kh, o, n)
+            try:
+                with open(path, "rb") as f:
+                    f.seek(lo - o)
+                    chunk = f.read(hi - lo)
+                os.utime(path, None)  # LRU touch
+            except (FileNotFoundError, OSError):
+                # evicted (possibly by another process) between index + open
+                with self._lock:
+                    ent = self._index.get(kh, {})
+                    if (o, n) in ent:
+                        del ent[(o, n)]
+                        self._usage -= n
+                    self.misses += 1
+                return None
+            if len(chunk) != hi - lo:
+                with self._lock:
+                    self.misses += 1
+                return None
+            parts.append(chunk)
+        with self._lock:
+            self.hits += 1
+        return parts[0] if len(parts) == 1 else b"".join(parts)
+
+    def put(self, content_key: str, offset: int, data: bytes) -> bool:
+        """Cache one extent (atomic rename publish). Returns False when
+        the extent is larger than the entire cap and was not cached."""
+        nbytes = len(data)
+        if self.max_bytes is not None and nbytes > self.max_bytes:
+            return False
+        if self.max_bytes is not None:
+            self._evict_to(self.max_bytes - nbytes)
+        kh = _key_hash(content_key)
+        path = self._ext_path(kh, offset, nbytes)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+        tmp = os.path.join(self.root, _TMP_DIR, f"fill-{os.getpid()}-{seq}.tmp")
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        with self._lock:
+            ent = self._index.setdefault(kh, {})
+            if (offset, nbytes) not in ent:
+                ent[(offset, nbytes)] = nbytes
+                self._usage += nbytes
+            self.fills += 1
+        return True
+
+    def fill(
+        self,
+        content_key: str,
+        offset: int,
+        nbytes: int,
+        fetch: Callable[[], bytes],
+    ) -> Tuple[bytes, bool]:
+        """Single-flight miss fill: concurrent callers for the same extent
+        share one ``fetch`` — the rest wait and re-read from disk.
+
+        Returns ``(data, we_fetched)``; ``we_fetched=False`` means the
+        range was served warm from another caller's fill.
+        """
+        key = (_key_hash(content_key), offset, nbytes)
+        while True:
+            with self._lock:
+                ev = self._inflight.get(key)
+                we_fill = ev is None
+                if we_fill:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+            if we_fill:
+                try:
+                    data = fetch()
+                    self.put(content_key, offset, data)
+                    return data, True
+                finally:
+                    with self._lock:
+                        self._inflight.pop(key, None)
+                    ev.set()
+            ev.wait()
+            data = self.read(content_key, offset, nbytes)
+            if data is not None:
+                return data, False
+            # the filler failed (or the extent was immediately evicted):
+            # loop and become the filler ourselves
+
+    # -- eviction -----------------------------------------------------------
+    def _evict_to(self, target: int) -> int:
+        """Evict LRU extents until usage <= max(target, 0)."""
+        target = max(0, target)
+        with self._lock:
+            if self._usage <= target:
+                return 0
+        victims: List[Tuple[float, int, str, str, Tuple[int, int]]] = []
+        ext_root = os.path.join(self.root, _EXT_DIR)
+        for dirpath, _dirs, files in os.walk(ext_root):
+            for fname in files:
+                if not fname.endswith(".ext"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                try:
+                    st = os.stat(path)
+                except FileNotFoundError:
+                    continue
+                try:
+                    kh, off_s, n_s = fname[: -len(".ext")].split("__")
+                    ext = (int(off_s), int(n_s))
+                except ValueError:
+                    continue
+                victims.append((st.st_mtime, st.st_size, path, kh, ext))
+        victims.sort()
+        freed = 0
+        for _mtime, size, path, kh, ext in victims:
+            with self._lock:
+                if self._usage <= target:
+                    break
+            try:
+                os.remove(path)
+            except FileNotFoundError:
+                pass
+            with self._lock:
+                ent = self._index.get(kh, {})
+                if ext in ent:
+                    del ent[ext]
+                    self._usage -= ext[1]
+                self.evictions += 1
+            freed += size
+        return freed
+
+    def evict(self, target_bytes: int = 0) -> int:
+        """Explicit eviction (CLI / operator): shrink usage to
+        ``target_bytes`` (0 = clear everything). Returns bytes freed."""
+        return self._evict_to(target_bytes)
+
+
+class TieredReader(BlockReaderMixin):
+    """Block-granular reader over a remote model, served through the
+    local-disk extent cache.  Drop-in for :class:`ModelReader` — the
+    executor, delta iterator, and ``CachingModelReader`` (the RAM tier)
+    see the identical surface.
+
+    IOStats tagging: expert reads become ``expert_disk`` (warm hit) or
+    ``expert_remote`` (cold fetch); every other category (``base``,
+    ``analyze``, ``meta``...) keeps its name regardless of tier, so the
+    paper's cost decomposition is unchanged and the budget term counts
+    exactly the cold expert bytes.
+    """
+
+    #: hints execute_merge to deepen the pipelined engine's prefetch
+    #: (more read threads / windows in flight) to hide remote latency
+    prefers_deep_prefetch = True
+
+    def __init__(
+        self,
+        model_id: str,
+        remote: RemoteObjectStore,
+        stats: IOStats,
+        local_dir: str,
+        disk: Optional[DiskExtentCache] = None,
+        retry: Optional[RetryPolicy] = None,
+    ):
+        self.model_id = model_id
+        self.remote = remote
+        self.stats = stats
+        self.local_dir = local_dir
+        self.disk = disk
+        self.retry = retry or RetryPolicy()
+        #: bytes re-fetched from remote for ranges that were disk-cached
+        #: when this reader first touched the tensor (mid-run eviction);
+        #: the executor widens its budget-soundness slack by the delta
+        self.evict_refetch_bytes = 0
+        #: remote requests that failed and were retried (fault injection)
+        self.retries = 0
+        self._mut = threading.Lock()
+        self._cover_snapshots: Dict[str, List[Tuple[int, int]]] = {}
+        doc = self._load_manifest()
+        self.meta: Dict = doc.get("meta", {})
+        self.specs: Dict[str, TensorSpec] = {
+            name: TensorSpec(spec) for name, spec in doc["tensors"].items()
+        }
+
+    # -- manifest (etag-validated local cache) ------------------------------
+    def _load_manifest(self) -> Dict:
+        mkey = model_key(self.model_id, MODEL_MANIFEST)
+        head = self.remote.head(mkey)
+        cache_path = os.path.join(self.local_dir, MANIFEST_CACHE)
+        try:
+            with open(cache_path, "rb") as f:
+                cached = json.loads(f.read())
+            if cached.get("etag") == head["etag"]:
+                # manifest served from the local cache: meta-sized local read
+                raw_len = len(json.dumps(cached["manifest"]))
+                self.stats.record_read("meta", raw_len)
+                return cached["manifest"]
+        except (FileNotFoundError, ValueError, KeyError):
+            pass
+        raw = self.retry.call(
+            lambda: self.remote.get_range(mkey), on_retry=self._on_retry
+        )
+        self.stats.record_read("meta", len(raw))
+        doc = json.loads(raw)
+        os.makedirs(self.local_dir, exist_ok=True)
+        tmp = cache_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"etag": head["etag"], "manifest": doc}, f)
+        os.replace(tmp, cache_path)
+        return doc
+
+    # -- helpers ------------------------------------------------------------
+    def _on_retry(self, _attempt: int) -> None:
+        with self._mut:
+            self.retries += 1
+
+    def _content_key(self, tensor_id: str) -> str:
+        spec = self.specs[tensor_id]
+        return spec.get("hash") or f"{self.model_id}:{spec['file']}"
+
+    @staticmethod
+    def _tier_category(category: str, tier: str) -> str:
+        if category in ("expert", "expert_packed"):
+            return "expert_remote" if tier == "remote" else "expert_disk"
+        return category
+
+    def _record(self, category: str, tier: str, payload: int, waste: int) -> None:
+        self.stats.record_read(self._tier_category(category, tier), payload)
+        if waste:
+            self.stats.record_read("other", waste)
+
+    def _fetch_remote(self, tensor_id: str, offset: int, nbytes: int) -> Callable[[], bytes]:
+        key = model_key(self.model_id, self.specs[tensor_id]["file"])
+        return lambda: self.retry.call(
+            lambda: self.remote.get_range(key, offset, nbytes),
+            on_retry=self._on_retry,
+        )
+
+    # -- the read path -------------------------------------------------------
+    def read_range(
+        self,
+        tensor_id: str,
+        offset: int,
+        nbytes: int,
+        category: str,
+        waste_nbytes: int = 0,
+    ) -> bytes:
+        payload = nbytes - waste_nbytes
+        if self.disk is None:
+            data = self._fetch_remote(tensor_id, offset, nbytes)()
+            self._record(category, "remote", payload, waste_nbytes)
+            return data
+        ckey = self._content_key(tensor_id)
+        with self._mut:
+            if ckey not in self._cover_snapshots:
+                # what the disk tier held when this reader first touched
+                # the tensor — a later miss inside this set means the
+                # extent was evicted mid-run and must be re-fetched
+                self._cover_snapshots[ckey] = self.disk.extents_for(ckey)
+        data = self.disk.read(ckey, offset, nbytes)
+        if data is not None:
+            self.stats.record_cache("disk", nbytes, hit=True)
+            self._record(category, "disk", payload, waste_nbytes)
+            return data
+        snap = self._cover_snapshots.get(ckey, [])
+        if any(o <= offset and offset + nbytes <= o + n for o, n in snap):
+            with self._mut:
+                self.evict_refetch_bytes += payload
+        self.stats.record_cache("disk", nbytes, hit=False)
+        data, we_fetched = self.disk.fill(
+            ckey, offset, nbytes, self._fetch_remote(tensor_id, offset, nbytes)
+        )
+        # a waiter served by another caller's fill got the bytes warm
+        self._record(category, "remote" if we_fetched else "disk", payload, waste_nbytes)
+        return data
+
+
+def open_tiered_reader(store: CheckpointStore, model_id: str) -> TieredReader:
+    """Open a remote-registered model through the tier hierarchy (used by
+    ``CheckpointStore.open_model`` when it finds a ``REMOTE.json`` stub)."""
+    stub = store.remote_stub(model_id)
+    remote = store.remote_store(stub["remote_root"])
+    if stub.get("profile"):
+        remote.profile = RemoteProfile.from_dict(stub["profile"])
+    disk = store.disk_cache if stub.get("disk_cache", True) else None
+    return TieredReader(
+        model_id,
+        remote,
+        store.stats,
+        local_dir=os.path.join(store.root, model_id),
+        disk=disk,
+    )
+
+
+def cached_remote_specs(store: CheckpointStore, model_id: str) -> Optional[Dict]:
+    """Tensor specs of a remote model from its locally cached manifest —
+    metadata only, never touches the remote.  None when the manifest has
+    not been fetched yet (probe falls back to full remote billing)."""
+    path = os.path.join(store.root, model_id, MANIFEST_CACHE)
+    try:
+        with open(path, "rb") as f:
+            return json.loads(f.read())["manifest"]["tensors"]
+    except (FileNotFoundError, ValueError, KeyError):
+        return None
+
+
+def make_tier_probe(
+    store: CheckpointStore,
+    block_size: int,
+    ram_readers: Optional[Dict[str, object]] = None,
+    costs=None,
+):
+    """Build a planner tier probe: ``probe(expert_id, tensor_id,
+    block_idx, nbytes) -> billing weight`` in [0, 1].
+
+    Local models bill at full weight (1.0, unchanged semantics); remote
+    models bill by the tier that would serve the block right now — free
+    for RAM-cached blocks, cheap for disk-cached extents, full for cold
+    remote fetches — so a fixed budget admits strictly more blocks as
+    the warm tiers fill up.  Pure metadata: probing never performs
+    remote I/O.
+    """
+    if costs is None:
+        from repro.core.cost import TierCostModel
+
+        costs = TierCostModel()
+    specs_cache: Dict[str, object] = {}
+
+    def probe(expert_id: str, tensor_id: str, block_idx: int, nbytes: int) -> float:
+        if expert_id not in specs_cache:
+            specs_cache[expert_id] = (
+                cached_remote_specs(store, expert_id)
+                if store.is_remote(expert_id)
+                else "local"
+            )
+        info = specs_cache[expert_id]
+        if info == "local":
+            return 1.0
+        reader = (ram_readers or {}).get(expert_id)
+        if reader is not None:
+            has = getattr(reader, "has_block", None)
+            if has is not None and has(tensor_id, block_idx, block_size):
+                return costs.ram_weight
+        if info is None:
+            return costs.remote_weight  # manifest not cached yet: bill cold
+        spec = info.get(tensor_id)
+        if spec is None:
+            return costs.remote_weight
+        rng = blk.block_range(int(spec["nbytes"]), block_idx, block_size)
+        ckey = spec.get("hash") or f"{expert_id}:{spec['file']}"
+        if store.disk_cache is not None and store.disk_cache.covers(
+            ckey, rng.offset, rng.nbytes
+        ):
+            return costs.disk_weight
+        return costs.remote_weight
+
+    return probe
