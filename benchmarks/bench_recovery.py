@@ -1,0 +1,213 @@
+"""Crash-resume recovery benchmark (docs/RECOVERY.md).
+
+One merge killed halfway through and resumed from its durable progress
+journal, measured against the same merge run uninterrupted:
+
+``full``
+    The uninterrupted golden: wall time and expert bytes for a scratch
+    run, and the bit-identity reference for the resumed output.
+
+``crashed``
+    The first attempt, killed by a chaos injector at the midpoint of its
+    ``executor:block`` visits (a simulated SIGKILL: staging and journal
+    survive on disk, nothing is published).
+
+``resumed``
+    The second attempt of the same sid, handed the ``ResumeState``
+    recovered from the journal.  It skips every journaled block, reads
+    only the residual expert bytes, and must commit output bit-identical
+    to ``full``.
+
+The point of the table: ``resumed`` expert bytes + ``crashed`` expert
+bytes ~= ``full`` expert bytes — a crash costs the work not yet
+journaled, not the whole merge.
+
+``--check`` is the CI smoke: the resumed attempt must read **<= 60%**
+of the full run's expert bytes (the crash fires at ~50%, so a resume
+that re-reads the prefix blows past this), must skip at least one
+journaled block, must commit bit-identically, and must leave no journal
+or staging residue behind.  Emits a JSON summary
+(``bench_recovery.json`` or ``$REPRO_BENCH_JSON``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from benchmarks.harness import bench_mb, build_zoo, cleanup, Csv, fresh_dir
+from repro.core.executor import execute_merge
+from repro.store.iostats import IOStats, measure
+from repro.testing import chaos
+
+#: where the injected death lands: the stream engine's per-block base
+#: read.  Deterministic visit order -> the journaled prefix is exactly
+#: the blocks before the kill, so the 60% residual gate is stable.
+CRASH_POINT = "executor:block"
+
+
+def _run(mp, plan, sid: str, compute: str, resume=None) -> Dict:
+    t0 = time.time()
+    with measure(mp.stats) as io:
+        res = execute_merge(plan, mp.snapshots, mp.catalog, sid=sid,
+                            txn=mp.txn, compute=compute, resume=resume)
+    return {
+        "wall_s": time.time() - t0,
+        "io": dict(io),
+        "stats": res.stats,
+    }
+
+
+def run(
+    k: int = 8,
+    budget: float = 0.5,
+    total_mb: Optional[float] = None,
+    compute: str = "stream",
+    json_path: Optional[str] = None,
+) -> Dict:
+    total_mb = total_mb or bench_mb()
+    csv = Csv("recovery", [
+        "arm", "k", "wall_s", "expert_mb", "out_mb", "journal_mb",
+        "resumed_blocks", "vs_full_expert",
+    ])
+    ws = fresh_dir("recovery")
+    stats = IOStats()
+    mp, base, ids = build_zoo(ws, k, total_mb, stats=stats)
+    # journal every block: the bench measures the maximal-durability
+    # cadence, so journal_mb is the worst-case overhead column
+    mp.snapshots.journal_sync_every = 1
+    mp.ensure_analyzed(base, ids)
+    plan = mp.plan(base, ids, "ties", theta={"trim_frac": 0.2},
+                   budget=budget).plan
+
+    # full golden run; the probe injector (skip beyond reach) counts the
+    # crash point's visits without ever firing
+    with chaos.inject(CRASH_POINT, skip=1 << 30) as probe:
+        full = _run(mp, plan, "full", compute)
+    if probe.hits == 0:
+        raise RuntimeError(
+            f"{CRASH_POINT} never visited under compute={compute!r}"
+        )
+
+    # attempt 1: killed at the midpoint visit
+    t0 = time.time()
+    try:
+        with chaos.inject(CRASH_POINT, skip=probe.hits // 2):
+            with measure(mp.stats) as crash_io:
+                execute_merge(plan, mp.snapshots, mp.catalog, sid="res",
+                              txn=mp.txn, compute=compute)
+        raise RuntimeError("chaos injector never fired")
+    except chaos.SimulatedCrash:
+        pass
+    crashed = {"wall_s": time.time() - t0, "io": dict(crash_io),
+               "stats": {"resumed_blocks": 0}}
+    mp.txn.forsake()
+
+    # attempt 2: resume from the journal's validated high-water mark
+    state = mp.txn.prepare_resume("res")
+    if state is None:
+        raise RuntimeError("crashed attempt left no resumable journal")
+    resumed = _run(mp, plan, "res", compute, resume=state)
+
+    full_arrays = mp.load("full")
+    res_arrays = mp.load("res")
+    bitident = all(np.array_equal(full_arrays[t], res_arrays[t])
+                   for t in full_arrays)
+    residue = (mp.snapshots.list_journal_paths()
+               or os.listdir(mp.snapshots.staging_root))
+
+    arms = {"full": full, "crashed": crashed, "resumed": resumed}
+    full_expert = max(full["io"]["expert_read"], 1)
+    summary: Dict = {
+        "workload": {
+            "k": k, "model_mb": total_mb, "budget": budget,
+            "compute": compute, "crash_point": CRASH_POINT,
+            "crash_at_visit": probe.hits // 2 + 1,
+            "point_visits": probe.hits,
+        },
+        "results": {},
+        "bit_identical": bitident,
+        "residue_after_commit": bool(residue),
+    }
+    for arm, r in arms.items():
+        io = r["io"]
+        csv.row(arm, k, r["wall_s"], io["expert_read"] / 1e6,
+                io["out_written"] / 1e6, io["journal_write"] / 1e6,
+                r["stats"].get("resumed_blocks", 0),
+                io["expert_read"] / full_expert)
+        summary["results"][arm] = {
+            "wall_s": r["wall_s"],
+            "expert_bytes": io["expert_read"],
+            "out_bytes": io["out_written"],
+            "journal_bytes": io["journal_write"],
+            "resumed_skipped_bytes": io.get("resumed_skipped", 0),
+            "resumed_blocks": r["stats"].get("resumed_blocks", 0),
+        }
+    cleanup(ws)
+    out = json_path or os.environ.get(
+        "REPRO_BENCH_JSON", "bench_recovery.json"
+    )
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# recovery json summary -> {out}", flush=True)
+    return summary
+
+
+def check(max_resumed_frac: float = 0.60) -> int:
+    """CI smoke: resume reads only the residual, commits bit-identically,
+    and cleans up after itself — K=4, small models."""
+    summary = run(k=4, total_mb=2.0)
+    res = summary["results"]
+    ok = True
+    full_b = res["full"]["expert_bytes"]
+    resumed_b = res["resumed"]["expert_bytes"]
+    frac = resumed_b / max(full_b, 1)
+    print(f"# check: full expert={full_b/1e6:.2f}MB  "
+          f"resumed expert={resumed_b/1e6:.2f}MB  frac={frac:.0%} "
+          f"(require <= {max_resumed_frac:.0%})")
+    if full_b <= 0:
+        print("FAIL: full run read no expert bytes (accounting broken)")
+        ok = False
+    elif frac > max_resumed_frac:
+        print("FAIL: resumed attempt re-read too much of the prefix")
+        ok = False
+    if res["resumed"]["resumed_blocks"] <= 0:
+        print("FAIL: resumed attempt skipped no journaled blocks")
+        ok = False
+    if res["resumed"]["resumed_skipped_bytes"] <= 0:
+        print("FAIL: resume accounting recorded no skipped bytes")
+        ok = False
+    if not summary["bit_identical"]:
+        print("FAIL: resumed output differs bitwise from the full run")
+        ok = False
+    if summary["residue_after_commit"]:
+        print("FAIL: journal or staging residue left after commit")
+        ok = False
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: residual-bytes + bit-identity + "
+                         "cleanup gates")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--budget", type=float, default=0.5)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    if args.fast:
+        run(k=4, budget=args.budget, total_mb=2.0, json_path=args.json)
+    else:
+        run(k=args.k, budget=args.budget, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

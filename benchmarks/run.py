@@ -23,6 +23,7 @@ from benchmarks import (
     bench_pipeline,
     bench_planner_scale,
     bench_quality,
+    bench_recovery,
     bench_remote_store,
     bench_roofline,
     bench_scaling_k,
@@ -67,6 +68,9 @@ ALL = {
         ks=(4,) if fast else (8,),
         storage_profiles=("hot",) if fast else ("hot", "shared")),
     "remote_store": lambda fast: bench_remote_store.run(
+        k=4 if fast else 8,
+        total_mb=2.0 if fast else None),
+    "recovery": lambda fast: bench_recovery.run(
         k=4 if fast else 8,
         total_mb=2.0 if fast else None),
     "service": lambda fast: bench_service.run(

@@ -12,6 +12,12 @@ A merge job moves through a small state machine::
 
 ``pending`` is the pre-service state used by :meth:`Session.submit`
 (jobs queued locally until ``run_all`` hands them to the service).
+A job whose execution dies on a *transient* fault (simulated or real
+worker death, I/O timeouts) is requeued with jittered backoff and — when
+a progress journal survives — resumed at its block-level high-water
+mark; after ``max_job_attempts`` such deaths it lands in the terminal
+``quarantined`` state (poison work that keeps killing workers must not
+be retried forever).  See docs/RECOVERY.md.
 Admission control happens *before* any parameter I/O: a job whose hard
 byte demand cannot fit the budget pool is rejected (or held queued,
 depending on the service's admission policy) — never aborted
@@ -44,8 +50,9 @@ class JobState:
     FAILED = "failed"
     CANCELLED = "cancelled"
     REJECTED = "rejected"    # refused at admission (budget pool)
+    QUARANTINED = "quarantined"  # poison: crashed/retried past the limit
 
-    TERMINAL = frozenset({DONE, FAILED, CANCELLED, REJECTED})
+    TERMINAL = frozenset({DONE, FAILED, CANCELLED, REJECTED, QUARANTINED})
 
 
 class JobCancelled(RuntimeError):

@@ -57,11 +57,15 @@ from repro.core.executor import (
     PipelineConfig,
     execute_merge,
 )
+from repro.core.plan import MergePlan
 from repro.core.planner import BatchJob, plan_batch
 from repro.core.transactions import TransactionManager
 from repro.store.blockcache import CacheBudget, CachingModelReader
 from repro.store.iostats import IOStats
+from repro.store.journal import ResumeState
+from repro.store.retry import RetryPolicy, is_transient
 from repro.store.snapshot import SnapshotStore
+from repro.testing.chaos import SimulatedCrash
 
 #: default bound on the shared-read block cache (per window, or service-
 #: wide in persistent-cache mode); misses beyond the cap stream uncached
@@ -134,6 +138,10 @@ class WindowOptions:
         # keeps selections identical to the flat local path, which is
         # what bit-identity guarantees rely on.
         self.tier_billing = tier_billing
+
+
+#: default cap on executions per job before it is quarantined as poison
+DEFAULT_MAX_JOB_ATTEMPTS = 3
 
 
 class BudgetArbiter:
@@ -262,6 +270,23 @@ class BudgetArbiter:
         with self._lock:
             self.global_spent += int(n)
 
+    def refund(self, tenant: str, n: int) -> None:
+        """Return previously-charged bytes to a tenant's share — the
+        resume path: a re-attempted node is charged its full planned
+        union by ``plan_batch`` accounting, but the journaled prefix was
+        already paid for by the dead attempt, so crash + resume must
+        charge each expert byte once."""
+        if n <= 0:
+            return
+        with self._lock:
+            self.spent[tenant] = max(0, self.spent.get(tenant, 0) - int(n))
+
+    def refund_global(self, n: int) -> None:
+        if n <= 0:
+            return
+        with self._lock:
+            self.global_spent = max(0, self.global_spent - int(n))
+
     def usage(self) -> Dict:
         with self._lock:
             tenants = sorted(
@@ -286,15 +311,20 @@ class _Job:
     """Internal scheduler record for one submitted handle."""
 
     __slots__ = ("handle", "opts", "group", "seq", "reserved_b",
-                 "deadline_at")
+                 "deadline_at", "attempts", "not_before")
 
     def __init__(self, handle: JobHandle, opts: WindowOptions,
-                 group: Optional[str], seq: int):
+                 group: Optional[str], seq: int, attempts: int = 0):
         self.handle = handle
         self.opts = opts
         self.group = group  # atomic-window token (run_all batches)
         self.seq = seq
         self.reserved_b = 0
+        #: executions so far (carried across service restarts via the
+        #: catalog row) — the poison-quarantine counter
+        self.attempts = int(attempts)
+        #: jittered retry backoff: admission skips this job until then
+        self.not_before = 0.0
         self.deadline_at: Optional[float] = (
             None
             if handle.deadline is None
@@ -341,6 +371,7 @@ class MergeService(WorkspaceOps):
         poll_s: float = 0.05,
         start: bool = True,
         disk_cache_max_bytes: Optional[int] = None,
+        max_job_attempts: int = DEFAULT_MAX_JOB_ATTEMPTS,
     ):
         # scoped I/O accounting: a service gets its own IOStats unless
         # the caller opts into a shared (e.g. GLOBAL_STATS) instance
@@ -352,8 +383,7 @@ class MergeService(WorkspaceOps):
         catalog = Catalog(os.path.join(workspace, "catalog.sqlite"), stats)
         snapshots.models.add_delete_guard(catalog.model_references)
         txn = TransactionManager(snapshots, catalog)
-        if recover:
-            txn.recover()
+        recovery = txn.recover() if recover else None
         self._init_parts(
             snapshots, catalog, txn, block_size, stats,
             budget=budget, tenants=tenants, admission=admission,
@@ -365,7 +395,11 @@ class MergeService(WorkspaceOps):
             max_window_jobs=max_window_jobs,
             max_open_readers=max_open_readers, poll_s=poll_s,
             owns_substrate=True,
+            max_job_attempts=max_job_attempts,
         )
+        if recovery is not None:
+            self._resume_states.update(recovery.get("resumable", {}))
+            self._readopt()
         if start:
             self.start()
 
@@ -411,6 +445,7 @@ class MergeService(WorkspaceOps):
         max_open_readers: int = 64,
         poll_s: float = 0.05,
         owns_substrate: bool = True,
+        max_job_attempts: int = DEFAULT_MAX_JOB_ATTEMPTS,
     ) -> None:
         self.snapshots = snapshots
         self.catalog = catalog
@@ -441,6 +476,15 @@ class MergeService(WorkspaceOps):
         self.max_window_jobs = max(1, int(max_window_jobs))
         self.max_open_readers = max(1, int(max_open_readers))
         self.poll_s = poll_s
+        self.max_job_attempts = max(1, int(max_job_attempts))
+        #: jittered backoff between retry attempts of transiently-failed
+        #: jobs (full jitter; shared with the remote store's retry story)
+        self.retry_policy = RetryPolicy(
+            attempts=self.max_job_attempts, base_backoff_s=0.01
+        )
+        #: sid -> validated ResumeState for crashed-but-resumable merges
+        #: (from startup recovery, or stashed live after a worker death)
+        self._resume_states: Dict[str, ResumeState] = {}
 
         self._cond = threading.Condition()
         self._pending: List[_Job] = []
@@ -553,6 +597,7 @@ class MergeService(WorkspaceOps):
         job_id: Optional[str] = None,
         _opts: Optional[WindowOptions] = None,
         _group: Optional[str] = None,
+        _attempts: int = 0,
     ) -> JobHandle:
         """Submit one merge job; returns immediately with a JobHandle.
 
@@ -572,10 +617,19 @@ class MergeService(WorkspaceOps):
         handle.submitted_at = time.time()
         handle._service = self
         handle._set_state(JobState.QUEUED)
-        job = _Job(handle, _opts or self.defaults, _group, self._next_seq())
+        job = _Job(
+            handle, _opts or self.defaults, _group, self._next_seq(),
+            attempts=_attempts,
+        )
+        # the spec is persisted at submit (not first execution) so a
+        # service restart can re-adopt jobs that never reached a window
+        self.catalog.record_spec(
+            spec.spec_id, spec.name, spec.op, spec.to_dict()
+        )
         self.catalog.record_job(
             handle.job_id, spec.spec_id, tenant, priority, JobState.QUEUED,
             sid=sid or spec.name, deadline=job.deadline_at,
+            attempts=_attempts,
         )
         with self._cond:
             self._pending.append(job)
@@ -587,6 +641,57 @@ class MergeService(WorkspaceOps):
         with self._cond:
             self._seq += 1
             return self._seq
+
+    # ----------------------------------------------------- restart recovery
+    def _readopt(self) -> None:
+        """Re-adopt catalog job rows a dead service process left
+        non-terminal (queued / admitted / running): each is re-submitted
+        under its original job id, tenant, and priority, replaying the
+        spec persisted at submit time.  A job whose sid has a validated
+        progress journal resumes at its block-level high-water mark; one
+        that already burned ``max_job_attempts`` executions is
+        quarantined instead of being retried forever."""
+        rows: List[Dict] = []
+        for state in (JobState.QUEUED, JobState.ADMITTED, JobState.RUNNING):
+            rows.extend(self.catalog.list_jobs(state=state))
+        for row in rows:
+            attempts = int(row.get("attempts") or 0)
+            if attempts >= self.max_job_attempts:
+                self._quarantine_row(
+                    row,
+                    f"{attempts} execution(s) died without committing",
+                )
+                continue
+            spec_doc = self.catalog.get_spec(row["spec_id"])
+            if spec_doc is None:
+                self._quarantine_row(row, "spec payload missing from catalog")
+                continue
+            deadline = None
+            if row.get("deadline") is not None:
+                # catalog rows store the absolute instant; submit() takes
+                # relative seconds — an already-missed deadline re-enters
+                # at zero and fails cleanly at the next admission pass
+                deadline = max(0.0, float(row["deadline"]) - time.time())
+            self.submit(
+                MergeSpec.from_dict(spec_doc["payload"]),
+                sid=row.get("sid"),
+                tenant=row["tenant"],
+                priority=row["priority"],
+                deadline=deadline,
+                job_id=row["job_id"],
+                _attempts=attempts,
+            )
+
+    def _quarantine_row(self, row: Dict, why: str) -> None:
+        sid = row.get("sid")
+        state = self._resume_states.pop(sid, None) if sid else None
+        if state is not None:
+            state.discard()
+        self.catalog.update_job(
+            row["job_id"], state=JobState.QUARANTINED,
+            error=f"quarantined at restart: {why}",
+            finished_at=time.time(),
+        )
 
     # --------------------------------------------------------------- cancel
     def _cancel_job(self, handle: JobHandle) -> bool:
@@ -635,8 +740,15 @@ class MergeService(WorkspaceOps):
         until no submitted job remains non-terminal.  Jobs held back by
         ``admission='queue'`` stay queued — drain does not force them."""
         if self._thread is None:
-            while self._cycle():
-                pass
+            while True:
+                if self._cycle():
+                    continue
+                # nothing ran — but a job requeued after a transient
+                # crash may just be waiting out its backoff
+                delay = self._retry_delay_s()
+                if delay is None:
+                    return
+                time.sleep(delay)
         else:
             deadline = None if timeout is None else time.time() + timeout
             while True:
@@ -652,6 +764,23 @@ class MergeService(WorkspaceOps):
                         f"{len(live)} job(s) still live after {timeout}s"
                     )
                 live[0].handle._terminal.wait(timeout=self.poll_s)
+
+    def _retry_delay_s(self) -> Optional[float]:
+        """Inline mode: seconds until the earliest backed-off retry is
+        due, or None when no pending job is waiting on a retry (held or
+        terminal jobs don't count — drain never forces those)."""
+        now = time.time()
+        with self._cond:
+            waits = [
+                j.not_before - now
+                for j in self._pending
+                if j.not_before > 0
+                and j.handle.status not in JobState.TERMINAL
+                and (j.handle.admission or {}).get("decision") != "hold"
+            ]
+        if not waits:
+            return None
+        return max(0.0, min(waits)) + 0.001
 
     def _is_parked(self, job: _Job) -> bool:
         """True for queue-policy jobs admission is still holding back."""
@@ -723,6 +852,11 @@ class MergeService(WorkspaceOps):
                         error="deadline exceeded",
                         finished_at=handle.finished_at,
                     )
+                    continue
+                if job.not_before > now:
+                    # requeued after a transient crash: still waiting out
+                    # its jittered backoff
+                    still_pending.append(job)
                     continue
                 demand = self._hard_demand_b(handle.spec)
                 if not self.arbiter.enabled:
@@ -949,11 +1083,13 @@ class MergeService(WorkspaceOps):
         for job in wjobs:
             # this window realizes (or forfeits) any admission hold
             self._settle_reservation(job)
+            job.attempts += 1
             job.handle.window_id = window_id
             job.handle._set_state(JobState.RUNNING)
             running_updates.append((
                 job.handle.job_id,
-                {"state": JobState.RUNNING, "window_id": window_id},
+                {"state": JobState.RUNNING, "window_id": window_id,
+                 "attempts": job.attempts},
             ))
         self.catalog.update_jobs(running_updates)
 
@@ -1025,6 +1161,8 @@ class MergeService(WorkspaceOps):
             handle = job.handle
             if handle.status in JobState.TERMINAL:
                 continue  # cancelled/failed during level execution
+            if handle.status == JobState.QUEUED:
+                continue  # requeued for a later attempt (transient crash)
             if handle.cancel_requested:
                 # the node may still have completed for OTHER jobs that
                 # dedupe to it — this handle's cancel() contract holds
@@ -1076,6 +1214,61 @@ class MergeService(WorkspaceOps):
             state=state,
             finished_at=finished_at,
         )
+
+    def _requeue_or_quarantine(
+        self,
+        node: _Node,
+        handles: List[JobHandle],
+        error: BaseException,
+        dead: Dict[int, BaseException],
+    ) -> None:
+        """After a transient worker death: send each surviving job back
+        to the scheduling queue with jittered backoff, or move it to the
+        terminal ``quarantined`` state once it has burned
+        ``max_job_attempts`` executions (poison work that keeps killing
+        workers must not be retried forever)."""
+        updates: List[Tuple[str, Dict[str, Any]]] = []
+        requeued = 0
+        now = time.time()
+        for h in handles:
+            if h.status in JobState.TERMINAL or h.cancel_requested:
+                continue
+            job = self._jobs.get(h.job_id)
+            if job is None or job.attempts >= self.max_job_attempts:
+                quarantine_err = RuntimeError(
+                    f"job {h.job_id} quarantined after "
+                    f"{job.attempts if job else '?'} execution(s) died: "
+                    f"{error}"
+                )
+                updates.append((h.job_id, {
+                    "state": JobState.QUARANTINED,
+                    "error": str(quarantine_err),
+                    "finished_at": now,
+                }))
+                h._fail(
+                    quarantine_err, state=JobState.QUARANTINED,
+                    finished_at=now,
+                )
+                continue
+            job.not_before = now + self.retry_policy.backoff_s(
+                job.attempts - 1
+            )
+            h._set_state(JobState.QUEUED)
+            updates.append((h.job_id, {
+                "state": JobState.QUEUED, "error": str(error),
+            }))
+            with self._cond:
+                if job not in self._pending:
+                    self._pending.append(job)
+                self._cond.notify_all()
+            requeued += 1
+        self.catalog.update_jobs(updates)
+        if not requeued:
+            # nobody left to retry this node: dependents must fail too
+            dead[id(node)] = (
+                error if isinstance(error, Exception)
+                else RuntimeError(str(error))
+            )
 
     # ----------------------------------------------------- sid validation
     def _validate_sids(
@@ -1159,6 +1352,13 @@ class MergeService(WorkspaceOps):
         # terminal or cancel-requested (queued-cancel), or an input died
         live_nodes: List[_Node] = []
         for node in level_nodes:
+            handles_n = interested.get(id(node), [])
+            if handles_n and all(
+                h.status == JobState.QUEUED for h in handles_n
+            ):
+                # every consumer was requeued (transient crash earlier in
+                # this window) — skip quietly; a later attempt re-runs it
+                continue
             dead_child = next(
                 (
                     c for c in node.spec.children()
@@ -1374,12 +1574,36 @@ class MergeService(WorkspaceOps):
             for node, pr in zip(level_nodes, bp.results):
                 handles = interested.get(id(node), [])
                 cancel = _NodeCancel(handles) if handles else None
+                # pin the executing sid before any I/O: a crash mid-merge
+                # (or a service restart) can only find the progress
+                # journal again if the snapshot id is stable and recorded
+                # on the job rows, so generate it here instead of letting
+                # the executor pick one
+                exec_sid = node.sid_hint or TransactionManager.new_sid()
+                if node.sid_hint is None and handles:
+                    self.catalog.update_jobs(
+                        [(h.job_id, {"sid": exec_sid}) for h in handles]
+                    )
+                plan = pr.plan
+                resume = self._resume_states.pop(exec_sid, None)
+                if resume is not None:
+                    # re-planning under today's arbitration could shift
+                    # the block selection and invalidate the journal:
+                    # replay the dead attempt's exact plan from the
+                    # catalog so digests line up and the journaled prefix
+                    # stays bit-compatible
+                    orig = self.catalog.get_plan(resume.plan_id)
+                    if orig is not None:
+                        plan = MergePlan.from_payload(orig["payload"])
+                    if resume.plan_digest != plan.digest():
+                        resume.discard()
+                        resume = None
                 try:
                     result = execute_merge(
-                        pr.plan,
+                        plan,
                         self.snapshots,
                         self.catalog,
-                        sid=node.sid_hint,
+                        sid=exec_sid,
                         txn=self.txn,
                         compute=opts.compute,
                         coalesce=opts.coalesce,
@@ -1387,6 +1611,7 @@ class MergeService(WorkspaceOps):
                         pipeline=opts.pipeline,
                         cancel=cancel,
                         progress=self._node_progress(handles),
+                        resume=resume,
                     )
                 except MergeCancelled as e:
                     dead[id(node)] = e
@@ -1394,12 +1619,53 @@ class MergeService(WorkspaceOps):
                         if h.status not in JobState.TERMINAL:
                             self._fail_handle(h, e)
                     continue
+                except SimulatedCrash as e:
+                    # in-process worker death: the transaction was NOT
+                    # aborted, so staging and the progress journal
+                    # survive — salvage the validated prefix and requeue
+                    # the survivors with backoff (the scheduler thread
+                    # must outlive the crash: only this node dies)
+                    self.txn.forsake()
+                    state = self.txn.prepare_resume(exec_sid)
+                    if state is not None:
+                        self._resume_states[exec_sid] = state
+                    self._requeue_or_quarantine(node, handles, e, dead)
+                    continue
                 except Exception as e:
+                    if is_transient(e):
+                        # transient I/O failure (timeouts, dropped
+                        # connections): the executor already aborted, but
+                        # a journal left by an earlier forsaken attempt
+                        # may still be salvageable
+                        state = self.txn.prepare_resume(exec_sid)
+                        if state is not None:
+                            self._resume_states[exec_sid] = state
+                        self._requeue_or_quarantine(node, handles, e, dead)
+                        continue
                     dead[id(node)] = e
                     for h in handles:
                         if h.status not in JobState.TERMINAL:
                             self._fail_handle(h, e)
                     continue
+                if resume is not None:
+                    # budget soundness across attempts: the dead attempt
+                    # already paid for the journaled prefix, and this
+                    # window's plan_batch charge re-billed the full union
+                    # — refund the overlap so each expert byte is charged
+                    # exactly once per committed merge
+                    refund = resume.journaled_expert_bytes(plan)
+                    if refund > 0:
+                        tenants = node_tenants.get(id(node), ())
+                        if tenants:
+                            each = refund // len(tenants)
+                            for i, t in enumerate(tenants):
+                                self.arbiter.refund(
+                                    t,
+                                    refund - each * (len(tenants) - 1)
+                                    if i == 0 else each,
+                                )
+                        self.arbiter.refund_global(refund)
+                    result.stats["resumed"] = True
                 result.stats["plan"] = pr.stats
                 node.sid = result.sid
                 node.result = result
@@ -1559,3 +1825,27 @@ class MergeService(WorkspaceOps):
              tenant: Optional[str] = None) -> List[Dict]:
         """Job table view (catalog-backed; survives restarts)."""
         return self.catalog.list_jobs(state=state, tenant=tenant)
+
+    def status(self) -> Dict[str, Any]:
+        """Service health snapshot: in-memory job-state counts, pending
+        queue depth, budget-pool usage, sids holding a validated resume
+        state (crashed work awaiting its next attempt), and quarantined
+        job ids (catalog-backed, so restarts are included)."""
+        with self._cond:
+            jobs = list(self._jobs.values())
+            pending = len(self._pending)
+        counts: Dict[str, int] = {}
+        for j in jobs:
+            s = j.handle.status
+            counts[s] = counts.get(s, 0) + 1
+        return {
+            "jobs": counts,
+            "pending": pending,
+            "windows_run": self._window_seq,
+            "budget": self.arbiter.usage(),
+            "resumable_sids": sorted(self._resume_states),
+            "quarantined": [
+                r["job_id"]
+                for r in self.catalog.list_jobs(state=JobState.QUARANTINED)
+            ],
+        }

@@ -151,7 +151,8 @@ CREATE TABLE IF NOT EXISTS merge_job (
     window_id  TEXT,
     error      TEXT,
     submitted_at REAL NOT NULL,
-    finished_at  REAL
+    finished_at  REAL,
+    attempts   INTEGER NOT NULL DEFAULT 0
 );
 CREATE TABLE IF NOT EXISTS manifest (
     sid        TEXT PRIMARY KEY,
@@ -176,7 +177,19 @@ class Catalog:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self._local = threading.local()
         self._conn().executescript(_SCHEMA)
+        self._migrate()
         self._conn().commit()
+
+    def _migrate(self) -> None:
+        """Guarded column additions for workspaces created by older
+        builds (CREATE TABLE IF NOT EXISTS never alters existing tables)."""
+        conn = self._conn()
+        cols = {r[1] for r in conn.execute("PRAGMA table_info(merge_job)")}
+        if "attempts" not in cols:
+            conn.execute(
+                "ALTER TABLE merge_job "
+                "ADD COLUMN attempts INTEGER NOT NULL DEFAULT 0"
+            )
 
     def _conn(self) -> sqlite3.Connection:
         conn = getattr(self._local, "conn", None)
@@ -598,7 +611,7 @@ class Catalog:
     _JOB_COLS = (
         "job_id", "spec_id", "sid", "tenant", "priority", "deadline",
         "state", "admission", "window_id", "error", "submitted_at",
-        "finished_at",
+        "finished_at", "attempts",
     )
 
     def record_job(
@@ -610,14 +623,18 @@ class Catalog:
         state: str,
         sid: Optional[str] = None,
         deadline: Optional[float] = None,
+        attempts: int = 0,
     ) -> None:
         """Insert one MergeService job row (audit: who asked for what,
-        when, under which tenancy; updated as the job advances)."""
+        when, under which tenancy; updated as the job advances).
+        ``attempts`` carries the execution count across restarts so a
+        re-adopted job keeps its poison-quarantine history."""
         self._conn().execute(
-            "INSERT OR REPLACE INTO merge_job VALUES (?,?,?,?,?,?,?,?,?,?,?,?)",
+            "INSERT OR REPLACE INTO merge_job "
+            "VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?)",
             (
                 job_id, spec_id, sid, tenant, int(priority), deadline,
-                state, None, None, None, time.time(), None,
+                state, None, None, None, time.time(), None, int(attempts),
             ),
         )
         self._conn().commit()
@@ -634,7 +651,7 @@ class Catalog:
         ``run_all`` path is not taxed per job.  ``updates`` is a sequence
         of ``(job_id, fields)`` pairs."""
         allowed = {"state", "sid", "admission", "window_id", "error",
-                   "finished_at"}
+                   "finished_at", "attempts"}
         conn = self._conn()
         n = 0
         for job_id, fields in updates:

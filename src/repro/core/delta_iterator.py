@@ -229,7 +229,12 @@ class DeltaIterator:
         coalesce: bool = True,
         windowed: bool = False,
         coalesce_gap: int = 0,
+        read_from: int = 0,
     ):
+        """``read_from`` restricts the realized read set to blocks at or
+        above that index — the resume path: blocks below the journaled
+        high-water mark are already staged, so their expert bytes must
+        never be read (or charged) again."""
         self.tensor_id = tensor_id
         self.plan = plan
         self.base_spec = base_reader.spec(tensor_id)
@@ -238,6 +243,8 @@ class DeltaIterator:
         self._sources: List[Tuple[int, str, _ExpertTensorSource]] = []
         for ei, e in enumerate(plan.expert_ids):
             sel = plan.blocks_for(e, tensor_id)
+            if read_from > 0:
+                sel = [b for b in sel if b >= read_from]
             if not sel:
                 continue
             src = _ExpertTensorSource(

@@ -47,7 +47,9 @@ from repro.core.operators import apply_operator, dare_mask_batch
 from repro.core.plan import MergePlan
 from repro.core.transactions import TransactionManager
 from repro.store.iostats import IOStats
+from repro.store.journal import ResumeState
 from repro.store.snapshot import SnapshotStore, WriteBehindWriter
+from repro.testing.chaos import chaos_point
 
 
 class MergeCancelled(RuntimeError):
@@ -229,6 +231,7 @@ def execute_merge(
     pipeline: Optional[PipelineConfig] = None,
     cancel: Optional[threading.Event] = None,
     progress: Optional[ProgressFn] = None,
+    resume: Optional[ResumeState] = None,
 ) -> MergeResult:
     """Run Algorithm 2 for plan π and return the committed snapshot.
 
@@ -249,12 +252,49 @@ def execute_merge(
     snapshot is published.  ``progress`` is called as
     ``progress(blocks_done, blocks_total)`` as output blocks retire (per
     tensor on the synchronous engines, per window on the pipelined one).
+
+    ``resume`` is a validated :class:`~repro.store.journal.ResumeState`
+    (from ``TransactionManager.recover()`` / ``prepare_resume``): the
+    engines skip every block below its per-tensor high-water marks —
+    no base read, no expert read, no write — and the budget accounting
+    only sees the residual set.  The resumed snapshot is bit-identical
+    to an uninterrupted run.  A resume state whose plan digest does not
+    match ``plan`` is discarded and the merge restarts from scratch
+    (staged blocks computed under a different plan are worthless).
     """
     t0 = time.time()
     stats: IOStats = snapshots.stats
     expert_read_before = stats.c_expert
     txn = txn or TransactionManager(snapshots, catalog)
     sid = sid or TransactionManager.new_sid()
+
+    resumed_from: Dict[str, int] = {}
+    if resume is not None:
+        if resume.sid != sid:
+            raise ValueError(
+                f"resume state is for sid {resume.sid!r}, not {sid!r}"
+            )
+        if resume.plan_digest != plan.digest():
+            # the plan changed under the journal (different budget /
+            # selection): staged blocks were computed under the old plan
+            # and can never validate against the new one — start fresh
+            resume.discard()
+            resume = None
+        else:
+            resumed_from = {
+                t: n for t, n in resume.completed.items() if n > 0
+            }
+            # residual accounting: the skipped logical volume is recorded
+            # (never into any C_* term) so tests can assert that crashed +
+            # resumed reads cover each selected byte exactly once
+            for t, tr in resume.tensors.items():
+                if tr.n_validated:
+                    stats.record_skip("base", tr.validated_nbytes)
+                    stats.record_skip(
+                        "expert",
+                        resume.skipped_expert_bytes(plan.reverse_index(t), t),
+                    )
+                    stats.record_skip("out", tr.validated_nbytes)
 
     kernel_ops = None
     if compute == "batched":
@@ -275,7 +315,10 @@ def execute_merge(
             raise KeyError(f"injected expert_readers missing {missing}")
 
     # -- Transaction and staging -----------------------------------------
-    writer = txn.begin()
+    if resume is not None:
+        writer = txn.begin(resume=resume)
+    else:
+        writer = txn.begin(sid=sid, plan=plan)
     touch: Dict[str, List[int]] = {}
     coverage_rows: List[Tuple[str, int, str]] = []
 
@@ -343,35 +386,49 @@ def execute_merge(
                 is_dare, pipeline, kernel_ops, coalesce, touch, coverage_rows,
                 cancel=cancel, progress=progress,
                 progress_total=progress_total,
+                resume=resume,
             )
             realized_expert_blocks, pipe_stats = engine.run()
         else:
             for tensor_id in plan.tensor_order:
                 _check_cancel(cancel, sid)
+                chaos_point("executor:tensor")
                 spec = base_reader.spec(tensor_id)
                 writer.begin_tensor(tensor_id, spec.shape, spec.dtype)
                 rev = plan.reverse_index(tensor_id)
                 mergeable = _is_mergeable(spec)
+                n_blocks = blk.num_blocks(spec.nbytes, plan.block_size)
+                skip = min(resumed_from.get(tensor_id, 0), n_blocks)
                 D = DeltaIterator(
                     tensor_id, plan, base_reader, expert_readers,
-                    coalesce=coalesce,
+                    coalesce=coalesce, read_from=skip,
                 )
-                n_blocks = blk.num_blocks(spec.nbytes, plan.block_size)
                 touched: List[int] = []
+                if skip:
+                    # lineage already earned by the dead run, re-seeded
+                    # straight from the journal — zero I/O
+                    for b, experts in resume.coverage(tensor_id):
+                        touched.append(b)
+                        coverage_rows.append((tensor_id, b, experts))
 
                 if compute == "batched" and mergeable:
                     _run_tensor_batched(
                         kernel_ops, plan, writer, base_reader, D, rev,
                         tensor_id, spec, n_blocks, theta, seed, is_dare,
                         touched, coverage_rows, cancel=cancel, sid=sid,
+                        skip=skip,
                     )
-                    realized_expert_blocks += sum(len(v) for v in rev.values())
+                    realized_expert_blocks += sum(
+                        len(v) for b, v in rev.items() if b >= skip
+                    )
                 else:
-                    for b in range(n_blocks):
+                    for b in range(skip, n_blocks):
                         _check_cancel(cancel, sid)
+                        chaos_point("executor:block")
                         x0 = base_reader.read_block(
                             tensor_id, b, plan.block_size, "base"
                         )
+                        experts_csv = None
                         if mergeable and b in rev:
                             deltas, eidxs, eids = D.pull(b, x0)
                             realized_expert_blocks += len(eids)
@@ -384,12 +441,13 @@ def execute_merge(
                             theta.pop("_masks", None)
                             if len(eids):
                                 touched.append(b)
+                                experts_csv = ",".join(eids)
                                 coverage_rows.append(
-                                    (tensor_id, b, ",".join(eids))
+                                    (tensor_id, b, experts_csv)
                                 )
                         else:
                             x = x0  # base passthrough (no expert selected)
-                        writer.write_block(tensor_id, b, x)
+                        writer.write_block(tensor_id, b, x, experts=experts_csv)
                 writer.finish_tensor(tensor_id)
                 touch[tensor_id] = touched
                 if progress is not None:
@@ -458,6 +516,10 @@ def execute_merge(
                     for p in plan.parent_sids
                 ],
             )
+        # lineage is in the catalog — only now is the journal obsolete
+        # (a crash since publish replays coverage from it at recovery)
+        if writer.journal is not None:
+            writer.journal.remove()
         txn.commit()
     except Exception:
         txn.abort()
@@ -477,6 +539,7 @@ def execute_merge(
         "realized_expert_blocks": realized_expert_blocks,
         "compute": compute,
         "coalesce": coalesce,
+        "resumed_blocks": sum(resumed_from.values()),
     }
     if pipe_stats is not None:
         run_stats["pipeline"] = pipe_stats
@@ -500,34 +563,40 @@ def _run_tensor_batched(
     coverage_rows: List[Tuple[str, int, str]],
     cancel: Optional[threading.Event] = None,
     sid: str = "",
+    skip: int = 0,
 ) -> None:
     """Batched compute path: group blocks by (K_sel, width) and apply the
     jitted kernel once per group.  Physical I/O identical to the stream
-    path; only operator application is vectorized."""
-    eid_to_idx = {e: i for i, e in enumerate(plan.expert_ids)}
-    # gather all blocks first (full tensor streams block-by-block for I/O
+    path; only operator application is vectorized.  ``skip`` is the
+    resume high-water mark: blocks below it are already staged and are
+    neither read nor written again."""
+    # gather the residual blocks first (they stream block-by-block for I/O
     # accounting, then math runs in grouped batches)
-    base_blocks: List[np.ndarray] = []
-    deltas_per_block: List[Optional[np.ndarray]] = []
-    eidxs_per_block: List[List[int]] = []
-    for b in range(n_blocks):
+    base_blocks: Dict[int, np.ndarray] = {}
+    deltas_per_block: Dict[int, Optional[np.ndarray]] = {}
+    eidxs_per_block: Dict[int, List[int]] = {}
+    experts_per_block: Dict[int, Optional[str]] = {}
+    for b in range(skip, n_blocks):
         _check_cancel(cancel, sid)
+        chaos_point("executor:block")
         x0 = base_reader.read_block(tensor_id, b, plan.block_size, "base")
-        base_blocks.append(x0)
+        base_blocks[b] = x0
+        experts_per_block[b] = None
         if b in rev:
             deltas, eidxs, eids = D.pull(b, x0)
-            deltas_per_block.append(deltas)
-            eidxs_per_block.append(eidxs)
+            deltas_per_block[b] = deltas
+            eidxs_per_block[b] = eidxs
             if len(eids):
                 touched.append(b)
-                coverage_rows.append((tensor_id, b, ",".join(eids)))
+                experts_per_block[b] = ",".join(eids)
+                coverage_rows.append((tensor_id, b, experts_per_block[b]))
         else:
-            deltas_per_block.append(None)
-            eidxs_per_block.append([])
+            deltas_per_block[b] = None
+            eidxs_per_block[b] = []
 
-    out_blocks: List[Optional[np.ndarray]] = [None] * n_blocks
+    out_blocks: Dict[int, np.ndarray] = {}
     groups: Dict[Tuple[int, int], List[int]] = {}
-    for b in range(n_blocks):
+    for b in range(skip, n_blocks):
         d = deltas_per_block[b]
         if d is None or d.shape[0] == 0:
             out_blocks[b] = base_blocks[b]
@@ -553,8 +622,10 @@ def _run_tensor_batched(
         for j, b in enumerate(idxs):
             out_blocks[b] = outs[j]
 
-    for b in range(n_blocks):
-        writer.write_block(tensor_id, b, out_blocks[b])
+    for b in range(skip, n_blocks):
+        writer.write_block(
+            tensor_id, b, out_blocks[b], experts=experts_per_block[b]
+        )
 
 
 # ======================================================================
@@ -637,6 +708,7 @@ class _PipelineEngine:
         cancel: Optional[threading.Event] = None,
         progress: Optional[ProgressFn] = None,
         progress_total: int = 0,
+        resume: Optional[ResumeState] = None,
     ):
         self.plan = plan
         self.base_reader = base_reader
@@ -652,7 +724,12 @@ class _PipelineEngine:
         self.cancel = cancel
         self.progress = progress
         self.progress_total = progress_total
-        self.progress_done = 0
+        self.resume = resume
+        self.resumed_from: Dict[str, int] = (
+            {t: n for t, n in resume.completed.items() if n > 0}
+            if resume is not None else {}
+        )
+        self.progress_done = sum(self.resumed_from.values())
         self.realized_expert_blocks = 0
         self.gauge = _ResidencyGauge()
         self.windows = 0
@@ -687,6 +764,10 @@ class _PipelineEngine:
         receives ready-to-apply inputs and only does operator math.
         Multiple windows stage concurrently on the pool (pread readers
         are offset-explicit, block sets are disjoint)."""
+        # prompt failure propagation: a doomed merge (writer thread died)
+        # must stop pouring expert reads into staging it will never keep
+        self.wb.raise_if_failed()
+        chaos_point("executor:prefetch")
         base_blocks = self._read_base_window(task.tensor_id, window)
         pulled: Dict[int, Tuple] = {}
         if task.D is not None:
@@ -731,6 +812,7 @@ class _PipelineEngine:
                 n_blocks = blk.num_blocks(spec.nbytes, self.plan.block_size)
                 mergeable = _is_mergeable(spec)
                 rev = self.plan.reverse_index(tensor_id) if mergeable else {}
+                skip = min(self.resumed_from.get(tensor_id, 0), n_blocks)
                 D = None
                 if mergeable and rev:
                     D = DeltaIterator(
@@ -738,17 +820,25 @@ class _PipelineEngine:
                         self.expert_readers, coalesce=self.coalesce,
                         windowed=True,
                         coalesce_gap=self.cfg.coalesce_gap_bytes,
+                        read_from=skip,
                     )
                 task = _TensorTask(tensor_id, spec, n_blocks, mergeable, rev, D)
+                if skip:
+                    # lineage from the dead run, re-seeded from the journal
+                    for b, experts in self.resume.coverage(tensor_id):
+                        task.touched.append(b)
+                        self.coverage_rows.append((tensor_id, b, experts))
                 pending.append(("tensor", task, None, None))
                 W = self.cfg.window_blocks
-                for ws in range(0, n_blocks, W):
+                for ws in range(skip, n_blocks, W):
                     if self.stop.is_set():
                         return
                     # cancellation checkpoint: stop issuing new windows;
                     # the error propagates to the consumer, whose abort
                     # path discards everything staged so far
                     _check_cancel(self.cancel, self.plan.plan_id)
+                    # prompt failure propagation (see _stage_window)
+                    self.wb.raise_if_failed()
                     window = list(range(ws, min(n_blocks, ws + W)))
                     pending.append(
                         ("window", task, window,
@@ -778,9 +868,11 @@ class _PipelineEngine:
         self, task: _TensorTask, window: List[int], base_blocks: Dict,
         pulled: Dict[int, Tuple],
     ) -> None:
+        chaos_point("executor:window")
         out: Dict[int, np.ndarray] = {}
         retired: Dict[int, int] = {}
         merged: List[int] = []
+        experts_csv: Dict[int, str] = {}
         for b in window:
             got = pulled.get(b)
             if got is None:
@@ -791,7 +883,8 @@ class _PipelineEngine:
             self.realized_expert_blocks += len(eids)
             if eids:
                 task.touched.append(b)
-                self.coverage_rows.append((task.tensor_id, b, ",".join(eids)))
+                experts_csv[b] = ",".join(eids)
+                self.coverage_rows.append((task.tensor_id, b, experts_csv[b]))
             retired[b] = 1 + deltas.shape[0]
             if deltas.shape[0] == 0:
                 out[b] = base_blocks[b]
@@ -831,7 +924,8 @@ class _PipelineEngine:
                     out[b] = outs[j]
 
         for b in window:
-            self.wb.write_block(task.tensor_id, b, out[b])
+            self.wb.write_block(task.tensor_id, b, out[b],
+                                experts=experts_csv.get(b))
             self.gauge.sub(retired[b])  # base + delta slots retired
         self.windows += 1
         if self.progress is not None:
@@ -860,6 +954,7 @@ class _PipelineEngine:
             if kind == "tensor":
                 if current is not None:
                     self._finish_tensor(current)
+                chaos_point("executor:tensor")
                 current = a
                 self.wb.begin_tensor(
                     current.tensor_id, current.spec.shape, current.spec.dtype

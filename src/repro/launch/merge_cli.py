@@ -55,6 +55,19 @@ two subcommands::
 stub so later reads flow RAM -> local-disk extent cache -> remote;
 ``cache`` inspects or LRU-shrinks the shared warm tier.
 
+Crash recovery (docs/RECOVERY.md)::
+
+    merge_cli resume --workspace WS              # list resumable journals
+    merge_cli resume --workspace WS SID          # resume + commit SID
+    merge_cli resume --workspace WS SID --discard
+
+A merge killed mid-execution (power loss, OOM-kill) leaves a
+block-level progress journal; ``resume`` validates the staged prefix
+and re-reads only the residual blocks.  The ``--chaos-crash POINT`` /
+``--chaos-skip N`` flags inject a simulated worker death into a one-shot
+merge — the embedded service requeues and resumes it in-process, so the
+run reports the recovery instead of dying.
+
 ``submit`` drops job files into the spool and returns immediately;
 ``serve`` runs a MergeService that drains the spool continuously
 (admission control, weighted-fair budget arbitration, overlap-aware
@@ -80,7 +93,7 @@ from repro.core.executor import PipelineConfig
 from repro.store.iostats import measure
 
 SUBCOMMANDS = ("repack", "layouts", "delete", "serve", "submit", "status",
-               "cancel", "remote", "cache")
+               "cancel", "remote", "cache", "resume")
 
 
 # --------------------------------------------------------------- job spool
@@ -533,6 +546,79 @@ def _cmd_cache(argv) -> None:
         sess.close()
 
 
+def _cmd_resume(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="merge_cli resume",
+        description="List, resume, or discard crashed merges left "
+                    "restartable by their block-level progress journals "
+                    "(docs/RECOVERY.md).",
+    )
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("sid", nargs="?", default=None,
+                    help="crashed snapshot id to resume (omit to list)")
+    ap.add_argument("--discard", action="store_true",
+                    help="drop the journal and staged blocks instead of "
+                         "resuming")
+    ap.add_argument("--block-size", type=int, default=128 * 1024)
+    ap.add_argument("--compute", default="pipelined",
+                    choices=["stream", "batched", "pipelined"])
+    args = ap.parse_args(argv)
+    from repro.core.executor import execute_merge
+    from repro.core.plan import MergePlan
+    from repro.store.journal import parse_journal
+
+    mp = MergePipe(args.workspace, block_size=args.block_size)
+    try:
+        if args.sid is None:
+            paths = mp.snapshots.list_journal_paths()
+            if not paths:
+                print("no resumable merges")
+                return
+            for path in paths:
+                parsed = parse_journal(path, mp.stats)
+                if parsed is None:
+                    continue
+                journaled = sum(len(b) for b in parsed.blocks.values())
+                print(f"{parsed.sid}  attempt={parsed.attempt}  "
+                      f"tensors_finished={len(parsed.finished)}"
+                      f"/{len(parsed.tensors)}  "
+                      f"blocks_journaled={journaled}")
+            return
+        state = mp.txn.prepare_resume(args.sid)
+        if state is None:
+            raise SystemExit(
+                f"no usable journal for {args.sid!r} (already committed, "
+                f"or nothing validated)"
+            )
+        if args.discard:
+            state.discard()
+            print(f"[resume] discarded journal + staging for {args.sid}")
+            return
+        plan_row = mp.catalog.get_plan(state.plan_id)
+        if plan_row is None:
+            raise SystemExit(
+                f"journal for {args.sid!r} references plan "
+                f"{state.plan_id!r}, which is not in the catalog — "
+                f"use --discard and re-merge"
+            )
+        plan = MergePlan.from_payload(plan_row["payload"])
+        t0 = time.time()
+        with measure(mp.stats) as io:
+            res = execute_merge(
+                plan, mp.snapshots, mp.catalog, sid=args.sid, txn=mp.txn,
+                compute=args.compute, resume=state,
+            )
+        print(f"[resume] committed {res.sid}  "
+              f"resumed_blocks={res.stats['resumed_blocks']}  "
+              f"expert_read={res.stats['c_expert_run']/1e6:.1f} MB "
+              f"(planned {res.stats['c_expert_hat']/1e6:.1f} MB)")
+        print(f"wall={time.time()-t0:.2f}s  "
+              f"expert_read={io['expert_read']/1e6:.1f}MB  "
+              f"out_written={io['out_written']/1e6:.1f}MB")
+    finally:
+        mp.close()
+
+
 def _run_specs(args) -> None:
     specs = load_spec_file(args.spec)
     sess = Session(args.workspace, block_size=args.block_size)
@@ -595,6 +681,8 @@ def main() -> None:
             return _cmd_remote(argv)
         if cmd == "cache":
             return _cmd_cache(argv)
+        if cmd == "resume":
+            return _cmd_resume(argv)
         return _cmd_delete(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--workspace", required=True)
@@ -652,6 +740,13 @@ def main() -> None:
     ap.add_argument("--layout", default=None, metavar="LAYOUT_ID",
                     help="force merging from a specific packed layout "
                          "(explicit opt-in required for lossy layouts)")
+    ap.add_argument("--chaos-crash", default=None, metavar="POINT",
+                    help="fault injection: simulate a worker death at "
+                         "this point (e.g. 'executor:block'); the service "
+                         "requeues the job and resumes it from the "
+                         "progress journal (docs/RECOVERY.md)")
+    ap.add_argument("--chaos-skip", type=int, default=0,
+                    help="let the crash point pass N times before firing")
     ap.add_argument("--naive", action="store_true",
                     help="run the stateless full-read baseline instead")
     ap.add_argument("--explain", default=None, metavar="SID",
@@ -668,6 +763,11 @@ def main() -> None:
     if not args.base or not args.experts:
         raise SystemExit("--base/--experts are required without --spec")
 
+    chaos_inj = None
+    if args.chaos_crash:
+        from repro.testing import chaos
+
+        chaos_inj = chaos.arm(args.chaos_crash, skip=args.chaos_skip)
     mp = MergePipe(args.workspace, block_size=args.block_size)
     budget = None
     if args.budget is not None:
@@ -688,12 +788,29 @@ def main() -> None:
             )
             print(f"[naive] wrote {out}")
         else:
-            res = mp.merge(
-                args.base, args.experts, op=args.op, theta=theta,
-                budget=budget, sid=args.sid, compute=args.compute,
-                pipeline=_pipeline_config(args),
-                prefer_packed=_prefer_packed(args),
-            )
+            try:
+                res = mp.merge(
+                    args.base, args.experts, op=args.op, theta=theta,
+                    budget=budget, sid=args.sid, compute=args.compute,
+                    pipeline=_pipeline_config(args),
+                    prefer_packed=_prefer_packed(args),
+                )
+            except BaseException as e:
+                from repro.testing.chaos import SimulatedCrash
+
+                if not isinstance(e, SimulatedCrash):
+                    raise
+                # a crash that escaped the service's requeue/resume path
+                # (it ran out of attempts, or fired outside execution):
+                # like SIGKILL, staging and the journal survive
+                print(f"[chaos] {e}; journal kept — run "
+                      f"'merge_cli resume --workspace {args.workspace} "
+                      f"{args.sid or '<sid>'}' to continue", file=sys.stderr)
+                raise SystemExit(3)
+            if chaos_inj is not None and chaos_inj.fired:
+                print(f"[chaos] injected crash at {chaos_inj.point} was "
+                      f"recovered in-process: job requeued and resumed "
+                      f"at its journaled high-water mark")
             print(f"[mergepipe] committed {res.sid}  "
                   f"expert_read={res.stats['c_expert_run']/1e6:.1f} MB "
                   f"(planned {res.stats['c_expert_hat']/1e6:.1f} MB)")

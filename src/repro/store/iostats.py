@@ -23,6 +23,18 @@ mirroring the paper's cost decomposition (§3.2):
     out     — writes of the merged output      (C_out)
     meta    — catalog / manifest / hash I/O    (C_meta)
     repack  — one-time PackedStore repack I/O (amortized, like analyze)
+    journal — progress-journal appends + recovery validation re-reads
+              (repro.store.journal).  Counted into C_meta — it is
+              bookkeeping I/O, not parameter movement — but kept as its
+              own category so the crash-resumability overhead is
+              directly measurable.
+
+Resumed runs additionally track *skipped* bytes: logical volume a
+resumed merge did NOT move because the journal proved those blocks were
+already staged (``record_skip`` / ``resumed_skipped_bytes``).  Skips are
+bookkeeping only — they never enter any C_* cost term — but they let
+tests assert residual-read accounting exactly: bytes(full run) ==
+bytes(crashed run) + bytes(resumed run) + 0·skipped.
 
 The benchmark harness reads these counters to reproduce the paper's
 tables; the executor's budget-soundness property test asserts
@@ -38,7 +50,7 @@ from typing import Dict, Iterator
 
 CATEGORIES = (
     "base", "expert", "expert_packed", "expert_remote", "expert_disk",
-    "out", "meta", "analyze", "repack", "other",
+    "out", "meta", "analyze", "repack", "journal", "other",
 )
 
 #: every category that serves plan-selected expert blocks, regardless of
@@ -67,6 +79,8 @@ class IOStats:
         # served without touching the next tier down
         self.cache_hits: Dict[str, Counter] = defaultdict(Counter)
         self.cache_misses: Dict[str, Counter] = defaultdict(Counter)
+        # logical bytes a resumed run skipped thanks to journaled progress
+        self.skipped: Dict[str, Counter] = defaultdict(Counter)
 
     # -- recording -----------------------------------------------------
     def record_read(self, category: str, nbytes: int) -> None:
@@ -80,6 +94,12 @@ class IOStats:
     def record_cache(self, tier: str, nbytes: int, hit: bool) -> None:
         with self._lock:
             (self.cache_hits if hit else self.cache_misses)[tier].add(nbytes)
+
+    def record_skip(self, category: str, nbytes: int) -> None:
+        """Logical bytes NOT moved because a resume state proved the work
+        already done (journal high-water mark).  Never part of C_*."""
+        with self._lock:
+            self.skipped[category].add(nbytes)
 
     # -- queries (paper cost terms) -------------------------------------
     # Queries must not mutate the defaultdicts (a bare ``self.read[cat]``
@@ -141,7 +161,21 @@ class IOStats:
             + self.bytes_written("meta")
             + self.bytes_read("other")
             + self.bytes_written("other")
+            + self.c_journal
         )
+
+    @property
+    def c_journal(self) -> int:
+        """Progress-journal overhead: appended records plus recovery
+        validation re-reads.  A component of C_meta, broken out so the
+        crash-resumability tax is directly visible."""
+        return self.bytes_read("journal") + self.bytes_written("journal")
+
+    @property
+    def resumed_skipped_bytes(self) -> int:
+        """Logical bytes a resumed run avoided moving (all categories)."""
+        with self._lock:
+            return sum(c.bytes for c in self.skipped.values())
 
     @property
     def c_analyze(self) -> int:
@@ -165,6 +199,9 @@ class IOStats:
                 "cache_misses": {
                     k: dataclasses.asdict(v) for k, v in self.cache_misses.items()
                 },
+                "skipped": {
+                    k: dataclasses.asdict(v) for k, v in self.skipped.items()
+                },
             }
 
     def reset(self) -> None:
@@ -173,6 +210,7 @@ class IOStats:
             self.written.clear()
             self.cache_hits.clear()
             self.cache_misses.clear()
+            self.skipped.clear()
 
     def delta_since(self, before: Dict[str, Dict[str, int]]) -> Dict[str, int]:
         now = self.snapshot()
@@ -202,15 +240,30 @@ class IOStats:
                 - _get(before, "read", "expert_disk")
             ),
             "out_written": _get(now, "written", "out") - _get(before, "written", "out"),
-            # "meta" keeps its historical definition (meta + other, so
-            # benchmark totals stay complete); "waste_read" breaks out the
-            # 'other' read component — e.g. gap-coalescing bytes — so
-            # data-path waste is not misread as catalog overhead
+            # "meta" keeps its historical definition (meta + other + now
+            # journal, so benchmark totals stay complete); "waste_read"
+            # breaks out the 'other' read component — e.g. gap-coalescing
+            # bytes — so data-path waste is not misread as catalog overhead
             "meta": (
-                sum(_get(now, k, c) for k in ("read", "written") for c in ("meta", "other"))
-                - sum(_get(before, k, c) for k in ("read", "written") for c in ("meta", "other"))
+                sum(_get(now, k, c) for k in ("read", "written")
+                    for c in ("meta", "other", "journal"))
+                - sum(_get(before, k, c) for k in ("read", "written")
+                      for c in ("meta", "other", "journal"))
             ),
             "waste_read": _get(now, "read", "other") - _get(before, "read", "other"),
+            # crash-resumability accounting: journal overhead (also inside
+            # "meta"-adjacent totals via c_meta) and the logical bytes a
+            # resumed run proved it could skip
+            "journal_write": (
+                _get(now, "written", "journal") - _get(before, "written", "journal")
+            ),
+            "journal_read": (
+                _get(now, "read", "journal") - _get(before, "read", "journal")
+            ),
+            "resumed_skipped": (
+                sum(v.get("bytes", 0) for v in now.get("skipped", {}).values())
+                - sum(v.get("bytes", 0) for v in before.get("skipped", {}).values())
+            ),
         }
 
 

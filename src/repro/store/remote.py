@@ -36,8 +36,11 @@ import dataclasses
 import os
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
+# RetryPolicy grew up and moved out (shared by tiered reads, cache fills,
+# and the service's executor-level retry); re-exported for compatibility.
+from repro.store.retry import RetryPolicy  # noqa: F401
 from repro.store.tensorstore import MODEL_MANIFEST, CheckpointStore
 
 
@@ -184,37 +187,6 @@ class RemoteObjectStore:
                 "bytes_served": self.bytes_served,
                 "faults_injected": self.faults_injected,
             }
-
-
-@dataclasses.dataclass(frozen=True)
-class RetryPolicy:
-    """Bounded retry with exponential backoff for transient remote faults.
-
-    ``attempts`` is the total try count (1 = no retry).  Backoff sleeps
-    ``base_backoff_s * multiplier**i`` after the i-th failure — kept tiny
-    by default so fault-injection tests stay fast while the shape is the
-    production one.
-    """
-
-    attempts: int = 4
-    base_backoff_s: float = 0.002
-    multiplier: float = 2.0
-
-    def call(self, fn: Callable[[], bytes], on_retry: Optional[Callable[[int], None]] = None) -> bytes:
-        last: Optional[BaseException] = None
-        for i in range(max(1, self.attempts)):
-            try:
-                return fn()
-            except RemoteError as e:
-                last = e
-                if i + 1 >= max(1, self.attempts):
-                    break
-                if on_retry is not None:
-                    on_retry(i + 1)
-                time.sleep(self.base_backoff_s * (self.multiplier ** i))
-        raise RemoteError(
-            f"remote request failed after {max(1, self.attempts)} attempts: {last}"
-        ) from last
 
 
 def model_key(model_id: str, rel_file: str) -> str:

@@ -10,6 +10,8 @@ Layout under the workspace root:
     models/                  # CheckpointStore root (bases, experts, snapshots)
     staging/txn-<token>/     # invisible until publish
     manifests/<sid>.json     # existence == committed
+    journals/<sid>.journal   # block-level progress (crash resume; see
+                             # repro.store.journal and docs/RECOVERY.md)
 """
 from __future__ import annotations
 
@@ -27,8 +29,10 @@ import numpy as np
 
 from repro.store import dtypes
 from repro.store.iostats import GLOBAL_STATS, IOStats
+from repro.store.journal import ProgressJournal, ResumeState, journal_path
 from repro.store.packed import PackedStore
 from repro.store.tensorstore import MODEL_MANIFEST, TENSOR_DIR, CheckpointStore
+from repro.testing.chaos import chaos_point
 
 
 class StagingWriter:
@@ -37,11 +41,25 @@ class StagingWriter:
     The executor (Algorithm 2) materializes every output block in plan
     order; this writer appends them, maintaining streaming hashes so
     ``ValidateHashes`` never needs to re-read the data files.
+
+    With a ``journal`` attached, every block append is also recorded in
+    the durable progress journal (content hash + contributing experts),
+    making a crash resumable.  With a ``resume`` state, tensors the dead
+    run already (partially) staged are reopened in place: the file is
+    truncated to the validated prefix, the streaming hash is seeded from
+    the validation pass, and writes continue at the high-water block.
     """
 
-    def __init__(self, staging_dir: str, stats: IOStats):
+    def __init__(
+        self,
+        staging_dir: str,
+        stats: IOStats,
+        journal: Optional[ProgressJournal] = None,
+        resume: Optional[ResumeState] = None,
+    ):
         self.dir = staging_dir
         self.stats = stats
+        self.journal = journal
         os.makedirs(os.path.join(staging_dir, TENSOR_DIR), exist_ok=True)
         self.specs: Dict[str, Dict] = {}
         self._open_name: Optional[str] = None
@@ -50,21 +68,40 @@ class StagingWriter:
         self._block_hashes: List[str] = []
         self._written = 0
         self._next_block = 0
-        self._tensor_count = 0
+        self._resume_tensors = dict(resume.tensors) if resume is not None else {}
+        self._tensor_count = resume.n_tensor_files if resume is not None else 0
         self.aborted = False
 
     # -- per-tensor streaming ------------------------------------------------
     def begin_tensor(self, tensor_id: str, shape, dtype) -> None:
         if self._open_name is not None:
             raise RuntimeError(f"tensor {self._open_name} still open")
-        fname = os.path.join(TENSOR_DIR, f"{self._tensor_count:05d}.bin")
-        self._tensor_count += 1
+        tr = self._resume_tensors.pop(tensor_id, None)
+        if tr is not None:
+            # resumed tensor: reopen its staged file, drop any torn tail
+            # beyond the validated prefix, and seed the streaming state
+            fname = tr.file
+            path = os.path.join(self.dir, fname)
+            try:
+                f = open(path, "r+b")
+            except FileNotFoundError:
+                f = open(path, "wb")
+            f.truncate(tr.validated_nbytes)
+            f.seek(tr.validated_nbytes)
+            self._open_file = f
+            self._open_hash = tr.hash_obj.copy()
+            self._block_hashes = list(tr.block_hashes)
+            self._written = tr.validated_nbytes
+            self._next_block = tr.n_validated
+        else:
+            fname = os.path.join(TENSOR_DIR, f"{self._tensor_count:05d}.bin")
+            self._tensor_count += 1
+            self._open_file = open(os.path.join(self.dir, fname), "wb")
+            self._open_hash = hashlib.blake2b(digest_size=16)
+            self._block_hashes = []
+            self._written = 0
+            self._next_block = 0
         self._open_name = tensor_id
-        self._open_file = open(os.path.join(self.dir, fname), "wb")
-        self._open_hash = hashlib.blake2b(digest_size=16)
-        self._block_hashes = []
-        self._written = 0
-        self._next_block = 0
         self.specs[tensor_id] = {
             "shape": list(shape),
             "dtype": dtypes.dtype_name(dtype),
@@ -73,8 +110,21 @@ class StagingWriter:
             "hash": "",
             "block_hashes": self._block_hashes,
         }
+        if self.journal is not None:
+            self.journal.tensor(
+                tensor_id, fname, list(shape), dtypes.dtype_name(dtype)
+            )
 
-    def write_block(self, tensor_id: str, block_idx: int, block: np.ndarray) -> None:
+    def write_block(
+        self,
+        tensor_id: str,
+        block_idx: int,
+        block: np.ndarray,
+        experts: Optional[str] = None,
+    ) -> None:
+        """Append one output block.  ``experts`` is the comma-joined list
+        of experts that contributed (coverage) — journaled with the block
+        so a resumed run can re-seed lineage without re-reading anything."""
         if tensor_id != self._open_name:
             raise RuntimeError(f"tensor {tensor_id} is not the open tensor")
         if block_idx != self._next_block:
@@ -85,12 +135,13 @@ class StagingWriter:
         raw = np.ascontiguousarray(block).tobytes()
         self._open_file.write(raw)
         self._open_hash.update(raw)
-        self._block_hashes.append(
-            hashlib.blake2b(raw, digest_size=8).hexdigest()
-        )
+        h8 = hashlib.blake2b(raw, digest_size=8).hexdigest()
+        self._block_hashes.append(h8)
         self._written += len(raw)
         self._next_block += 1
         self.stats.record_write("out", len(raw))
+        if self.journal is not None:
+            self.journal.block(tensor_id, block_idx, len(raw), h8, experts)
 
     def finish_tensor(self, tensor_id: str) -> None:
         if tensor_id != self._open_name:
@@ -101,6 +152,8 @@ class StagingWriter:
         spec["hash"] = self._open_hash.hexdigest()
         self._open_name = None
         self._open_file = None
+        if self.journal is not None:
+            self.journal.finish(tensor_id, spec["nbytes"], spec["hash"])
 
     # -- validation (Algorithm 2 step 2: S.ValidateHashes) ---------------------
     def validate_hashes(self) -> None:
@@ -129,7 +182,22 @@ class StagingWriter:
             self._open_file = None
             self._open_name = None
         shutil.rmtree(self.dir, ignore_errors=True)
+        if self.journal is not None:
+            # a deliberate abort discards progress — unlike a crash, which
+            # never reaches this path and leaves the journal for resume
+            self.journal.remove()
         self.aborted = True
+
+    def detach(self) -> None:
+        """Close open handles WITHOUT deleting staged data or the journal
+        — the in-process analogue of a worker death.  Used by the
+        service's crash handling and the chaos harness before resuming."""
+        if self._open_file is not None:
+            self._open_file.close()
+            self._open_file = None
+            self._open_name = None
+        if self.journal is not None:
+            self.journal.close()
 
 
 class WriteBehindWriter:
@@ -144,8 +212,12 @@ class WriteBehindWriter:
 
     A failure on the writer thread is re-raised on the producer side at
     the next enqueue (or at :meth:`flush`), so the executor's abort path
-    fires exactly as in the synchronous engine.  ``close(discard=True)``
-    stops the thread without replaying queued commands (abort path).
+    fires exactly as in the synchronous engine; the ``failed`` event is
+    set the moment the failure happens, so the *prefetch* stage can stop
+    reading expert bytes a doomed merge would throw away instead of
+    discovering the failure a full write-queue later.
+    ``close(discard=True)`` stops the thread without replaying queued
+    commands (abort path).
     """
 
     _FLUSH = object()  # queue marker: wake any flush() waiters
@@ -158,6 +230,10 @@ class WriteBehindWriter:
         self._closed = False
         self.peak_queued = 0
         self._flushed = threading.Event()
+        #: set by the writer thread the instant a write fails — poll this
+        #: (or ``raise_if_failed``) from read/compute stages for prompt
+        #: failure propagation
+        self.failed = threading.Event()
         self._thread = threading.Thread(
             target=self._drain, name="mergepipe-write-behind", daemon=True
         )
@@ -176,8 +252,14 @@ class WriteBehindWriter:
     def begin_tensor(self, tensor_id: str, shape, dtype) -> None:
         self._submit("begin_tensor", tensor_id, shape, dtype)
 
-    def write_block(self, tensor_id: str, block_idx: int, block: np.ndarray) -> None:
-        self._submit("write_block", tensor_id, block_idx, block)
+    def write_block(
+        self,
+        tensor_id: str,
+        block_idx: int,
+        block: np.ndarray,
+        experts: Optional[str] = None,
+    ) -> None:
+        self._submit("write_block", tensor_id, block_idx, block, experts)
 
     def finish_tensor(self, tensor_id: str) -> None:
         self._submit("finish_tensor", tensor_id)
@@ -218,9 +300,11 @@ class WriteBehindWriter:
             if self._exc is not None or self._discard:
                 continue  # drain without applying; producer will re-raise
             try:
+                chaos_point("writer:drain")
                 getattr(self.writer, method)(*args)
             except BaseException as e:  # noqa: BLE001 — forwarded to producer
                 self._exc = e
+                self.failed.set()
 
 
 class SnapshotStore:
@@ -250,14 +334,75 @@ class SnapshotStore:
         )
         self.staging_root = os.path.join(workspace, "staging")
         self.manifest_root = os.path.join(workspace, "manifests")
+        self.journal_root = os.path.join(workspace, "journals")
         os.makedirs(self.staging_root, exist_ok=True)
         os.makedirs(self.manifest_root, exist_ok=True)
+        os.makedirs(self.journal_root, exist_ok=True)
 
     # -- staging ------------------------------------------------------------
-    def open_staging_writer(self) -> StagingWriter:
+    def open_staging_writer(
+        self,
+        sid: Optional[str] = None,
+        plan=None,
+        resume: Optional[ResumeState] = None,
+        journal_sync_every: Optional[int] = None,
+    ) -> StagingWriter:
+        """Open a staging writer.
+
+        With ``sid`` + ``plan``, a durable progress journal is attached so
+        a crash mid-merge is resumable.  With ``resume`` (a validated
+        :class:`~repro.store.journal.ResumeState`), the dead run's staging
+        dir is adopted and the journal continued.  Bare calls (no sid/
+        plan) stay journal-free — discard-only semantics, as before.
+        """
+        sync_every = (
+            journal_sync_every if journal_sync_every is not None
+            else self.journal_sync_every
+        )
+        if resume is not None:
+            journal = ProgressJournal(
+                resume.journal_file, self.stats, sync_every=sync_every
+            )
+            journal.begin(
+                resume.sid, resume.plan_id, resume.plan_digest,
+                resume.staging_dir, resume.block_size,
+                attempt=resume.attempt + 1,
+            )
+            return StagingWriter(
+                resume.staging_dir, self.stats, journal=journal, resume=resume
+            )
         token = uuid.uuid4().hex[:12]
-        return StagingWriter(
-            os.path.join(self.staging_root, f"txn-{token}"), self.stats
+        staging_dir = os.path.join(self.staging_root, f"txn-{token}")
+        journal = None
+        if sid is not None and plan is not None:
+            journal = ProgressJournal(
+                self.journal_path(sid), self.stats, sync_every=sync_every
+            )
+            journal.begin(
+                sid, plan.plan_id, plan.digest(), staging_dir,
+                plan.block_size, attempt=1,
+            )
+        return StagingWriter(staging_dir, self.stats, journal=journal)
+
+    # -- journals (crash resume) -------------------------------------------
+    #: default fsync cadence for journal block records; tests lower it to
+    #: 1 so every block is durably journaled the instant it lands
+    journal_sync_every = 32
+
+    def journal_path(self, sid: str) -> str:
+        from repro.store.journal import journal_path as _jp
+
+        return _jp(self.journal_root, sid)
+
+    def list_journal_paths(self) -> List[str]:
+        try:
+            names = os.listdir(self.journal_root)
+        except OSError:
+            return []
+        return sorted(
+            os.path.join(self.journal_root, n)
+            for n in names
+            if n.endswith(".journal")
         )
 
     # -- atomic publish (paper §5.3) ---------------------------------------
@@ -296,6 +441,17 @@ class SnapshotStore:
             os.fsync(f.fileno())
         os.replace(tmp, os.path.join(self.manifest_root, f"{sid}.json"))
         self.stats.record_write("meta", len(raw))
+        # 4. the snapshot is durable, but its progress journal must
+        # outlive the publish until the catalog's lineage rows (coverage,
+        # touch map) land — the executor removes it right before commit,
+        # and recovery replays lineage for a published sid from the
+        # journal before deleting it.  Journal-less writers just clear
+        # any stale journal a previous crashed attempt left behind.
+        if writer.journal is None:
+            try:
+                os.unlink(self.journal_path(sid))
+            except FileNotFoundError:
+                pass
         return sid
 
     # -- queries ----------------------------------------------------------
@@ -316,10 +472,16 @@ class SnapshotStore:
             if f.endswith(".json")
         )
 
-    def gc_staging(self) -> int:
-        """Remove orphaned staging dirs (crash recovery). Returns count."""
+    def gc_staging(self, keep: Optional[frozenset] = None) -> int:
+        """Remove orphaned staging dirs (crash recovery). Returns count.
+
+        ``keep`` holds directory basenames with a validated progress
+        journal — resumable work the GC must not destroy."""
+        keep = keep or frozenset()
         n = 0
         for d in os.listdir(self.staging_root):
+            if d in keep:
+                continue
             shutil.rmtree(os.path.join(self.staging_root, d), ignore_errors=True)
             n += 1
         return n

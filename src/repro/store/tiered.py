@@ -32,6 +32,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -49,12 +50,28 @@ from repro.store.tensorstore import (
     CheckpointStore,
     TensorSpec,
 )
+from repro.testing.chaos import chaos_point
 
 #: locally cached copy of a remote model's manifest (etag-validated)
 MANIFEST_CACHE = "MODEL.cache.json"
 
 _EXT_DIR = "ext"
 _TMP_DIR = "tmp"
+
+
+_TMP_NAME = re.compile(r"fill-(\d+)-\d+\.tmp$")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    except OSError:
+        return False
+    return True
 
 
 def _key_hash(content_key: str) -> str:
@@ -103,6 +120,7 @@ class DiskExtentCache:
         return os.path.join(self._ext_dir(kh), f"{kh}__{offset}__{nbytes}.ext")
 
     def _rebuild_index(self) -> None:
+        self._sweep_tmp()
         index: Dict[str, Dict[Tuple[int, int], int]] = {}
         usage = 0
         ext_root = os.path.join(self.root, _EXT_DIR)
@@ -120,6 +138,33 @@ class DiskExtentCache:
         with self._lock:
             self._index = index
             self._usage = usage
+
+    def _sweep_tmp(self) -> int:
+        """GC partial fill files (``tmp/fill-<pid>-<seq>.tmp``) left by
+        writers that died between write and atomic-rename publish.
+        Files owned by *another still-running* pid are in-flight fills
+        and kept; dead-pid files, unparseable names, and our own pid's
+        leftovers (this runs only at construction, before this instance
+        has any fill in flight) are deleted.  Returns the count removed.
+        """
+        tmp_root = os.path.join(self.root, _TMP_DIR)
+        removed = 0
+        try:
+            names = os.listdir(tmp_root)
+        except FileNotFoundError:
+            return 0
+        for fname in names:
+            m = _TMP_NAME.match(fname)
+            if m is not None:
+                pid = int(m.group(1))
+                if pid != os.getpid() and _pid_alive(pid):
+                    continue
+            try:
+                os.unlink(os.path.join(tmp_root, fname))
+                removed += 1
+            except OSError:
+                pass
+        return removed
 
     def _rescan(self, kh: str) -> None:
         """Refresh one key's extents from disk (picks up fills by other
@@ -256,6 +301,9 @@ class DiskExtentCache:
             f.write(data)
             f.flush()
             os.fsync(f.fileno())
+        # a crash here leaves only the invisible temp file — swept by
+        # the next _rebuild_index, never a torn extent
+        chaos_point("cache:fill")
         os.replace(tmp, path)
         with self._lock:
             ent = self._index.setdefault(kh, {})

@@ -1,0 +1,14 @@
+"""Test-support utilities that ship with the library (not the test suite).
+
+:mod:`repro.testing.chaos` is the fault-injection harness used by the
+crash-recovery tests, the seeded CI chaos job, and ``bench_recovery``.
+It lives in the package (rather than ``tests/``) so the CLI's chaos
+flags and external harnesses can reach the same crash points.
+"""
+from repro.testing.chaos import (  # noqa: F401
+    CRASH_POINTS,
+    ChaosInjector,
+    SimulatedCrash,
+    chaos_point,
+    inject,
+)

@@ -1,0 +1,120 @@
+"""Chaos fault injection: simulated process deaths at named crash points.
+
+The recovery story (docs/RECOVERY.md) is only credible if every stage of
+the execution path has been killed and resumed.  This module provides the
+kill switch: production code calls :func:`chaos_point` at the places a
+real worker could die, and tests/benchmarks arm an injector with
+:func:`inject` to turn exactly one of those points into a simulated
+SIGKILL.
+
+Design notes:
+
+* :class:`SimulatedCrash` derives from ``BaseException`` **on purpose**:
+  the executor's ``except Exception`` abort path must NOT trigger, so the
+  staging directory and progress journal stay on disk exactly as a real
+  process death would leave them.  Deliberate failures (operator errors,
+  cancellation) still abort and discard; only simulated kills leave
+  resumable state behind.
+* ``chaos_point`` is a single global-load plus ``is None`` check when no
+  injector is armed — cheap enough for per-block call sites.
+* Injectors fire once (``skip`` earlier visits first) and record that
+  they fired, so a sweep can assert the point was actually reached.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional
+
+#: every registered crash point, in rough execution order.  The crash
+#: sweep test parametrizes over this tuple — adding a call site without
+#: registering it here means the sweep silently skips it, so keep them
+#: in lockstep.
+CRASH_POINTS = (
+    "executor:tensor",     # stream/batched: before a tensor begins
+    "executor:block",      # stream: before each block's base read
+    "executor:prefetch",   # pipelined: reader-pool window staging
+    "executor:window",     # pipelined: compute stage, per window
+    "writer:drain",        # write-behind thread, before applying a command
+    "journal:append",      # before a journal record is written
+    "publish:before",      # transaction manager, before the publish rename
+    "publish:after",       # after publish, before the catalog commit record
+    "cache:fill",          # disk extent cache, before the atomic rename
+)
+
+
+class SimulatedCrash(BaseException):
+    """An injected process death.
+
+    Deliberately NOT an ``Exception``: the executor's abort handler
+    (``except Exception: txn.abort()``) must not see it, so staged
+    output and the progress journal survive — the same on-disk state a
+    kill -9 would leave.
+    """
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated crash at {point}")
+        self.point = point
+
+
+class ChaosInjector:
+    """Kills the process-under-test at the ``skip+1``-th visit of one
+    crash point (thread-safe: points are visited from reader-pool,
+    write-behind, and compute threads alike)."""
+
+    def __init__(self, point: str, skip: int = 0):
+        if point not in CRASH_POINTS:
+            raise ValueError(
+                f"unknown crash point {point!r}; registered: {CRASH_POINTS}"
+            )
+        self.point = point
+        self.skip = int(skip)
+        self.hits = 0
+        self.fired = False
+        self._lock = threading.Lock()
+
+    def visit(self, name: str) -> None:
+        if name != self.point:
+            return
+        with self._lock:
+            self.hits += 1
+            if self.hits <= self.skip or self.fired:
+                return
+            self.fired = True
+        raise SimulatedCrash(name)
+
+
+_active: Optional[ChaosInjector] = None
+
+
+def chaos_point(name: str) -> None:
+    """Mark a crash-point call site.  No-op unless an injector is armed."""
+    inj = _active
+    if inj is not None:
+        inj.visit(name)
+
+
+@contextlib.contextmanager
+def inject(point: str, skip: int = 0) -> Iterator[ChaosInjector]:
+    """Arm a single-shot crash injector for the duration of the block."""
+    global _active
+    inj = ChaosInjector(point, skip=skip)
+    prev = _active
+    _active = inj
+    try:
+        yield inj
+    finally:
+        _active = prev
+
+
+def arm(point: str, skip: int = 0) -> ChaosInjector:
+    """Arm an injector without a context manager (CLI chaos flags)."""
+    global _active
+    inj = ChaosInjector(point, skip=skip)
+    _active = inj
+    return inj
+
+
+def disarm() -> None:
+    global _active
+    _active = None

@@ -1,0 +1,375 @@
+"""Crash-recovery properties: the chaos sweep (kill at every registered
+crash point, resume, assert bit-identical output), IOStats residual
+accounting, service requeue/restart/quarantine, and the disk cache's
+partial-fill GC.  See docs/RECOVERY.md."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_models
+from repro.api.jobs import JobState
+from repro.api.service import MergeService
+from repro.api.spec import MergeSpec
+from repro.core.executor import execute_merge
+from repro.store.snapshot import WriteBehindWriter
+from repro.testing import chaos
+
+ENGINES = ("stream", "batched", "pipelined")
+
+THETA = {
+    "avg": {},
+    "ta": {"lam": 1.0},
+    "ties": {"trim_frac": 0.2},
+    "dare": {"density": 0.3, "seed": 7},
+}
+
+
+def _plan(mp, base, ids, op="ties"):
+    mp.snapshots.journal_sync_every = 1
+    mp.ensure_analyzed(base, ids)
+    return mp.plan(base, ids, op, theta=THETA[op], budget=0.5).plan
+
+
+def _crash_then_resume(mp, plan, compute, point, skip):
+    """Kill one run at (point, skip), salvage, resume; returns the
+    resumed MergeResult (or the repaired commit for post-publish kills)."""
+    with pytest.raises(chaos.SimulatedCrash):
+        with chaos.inject(point, skip=skip):
+            execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                          txn=mp.txn, compute=compute)
+    mp.txn.forsake()
+    state = mp.txn.prepare_resume("crash")
+    if state is None:
+        if "crash" in mp.list_snapshots():
+            # killed after the publish rename: the snapshot is committed;
+            # recover() repairs the missing catalog record instead
+            mp.txn.recover()
+            return None
+        # nothing validated survived (the crash beat the write-behind
+        # drain to the journal): recovery degrades to a clean fresh run
+        mp.txn.recover()  # GC the unjournaled staging orphan
+        return execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                             txn=mp.txn, compute=compute)
+    return execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                         txn=mp.txn, compute=compute, resume=state)
+
+
+# ======================================================================
+# the chaos sweep: every registered point x every engine
+# ======================================================================
+
+@pytest.mark.parametrize("compute", ENGINES)
+@pytest.mark.parametrize("point", chaos.CRASH_POINTS)
+def test_crash_sweep_resume_bit_identical(populated, point, compute):
+    if point == "cache:fill":
+        pytest.skip("disk-cache fills are covered by test_disk_cache_*")
+    mp, base, ids, *_ = populated
+    plan = _plan(mp, base, ids)
+
+    ref = execute_merge(plan, mp.snapshots, mp.catalog, sid="ref",
+                        txn=mp.txn, compute=compute)
+    ref_arrays = mp.load("ref")
+
+    # probe: count how often this engine actually visits the point (an
+    # armed-but-never-fired injector would make the sweep vacuous)
+    with chaos.inject(point, skip=1 << 30) as probe:
+        execute_merge(plan, mp.snapshots, mp.catalog, sid="probe",
+                      txn=mp.txn, compute=compute)
+    if probe.hits == 0:
+        pytest.skip(f"{compute} engine never visits {point}")
+
+    res = _crash_then_resume(mp, plan, compute, point, skip=probe.hits // 2)
+    got = mp.load("crash")
+    for k in ref_arrays:
+        assert np.array_equal(ref_arrays[k], got[k]), (
+            f"{k} not bit-identical after {point} crash + resume"
+        )
+    assert mp.verify("crash")
+    # lineage survives the crash: coverage earned by the dead attempt is
+    # replayed from the journal's per-block experts annotations
+    ref_cov = {(t, b, e) for t, b, e in mp.catalog.coverage("ref")}
+    got_cov = {(t, b, e) for t, b, e in mp.catalog.coverage("crash")}
+    assert ref_cov == got_cov, f"coverage lost across {point} crash"
+    if res is not None:
+        assert res.stats["c_expert_run"] <= res.stats["c_expert_hat"]
+    # no leaks: journal removed at publish, staging fully promoted
+    assert mp.snapshots.list_journal_paths() == []
+    assert os.listdir(mp.snapshots.staging_root) == []
+
+
+@pytest.mark.parametrize("compute", ("stream", "pipelined"))
+@pytest.mark.parametrize("op", ("avg", "ta", "ties", "dare"))
+def test_crash_resume_all_operators(populated, op, compute):
+    """Bit-identity must hold per operator — DARE is the canary: its
+    dropout mask is seeded per (seed, experts, tensor, block), so a
+    resumed residual run must regenerate the exact masks the journaled
+    prefix used."""
+    mp, base, ids, *_ = populated
+    plan = _plan(mp, base, ids, op=op)
+    # per-engine point with a deterministic journaled prefix: the stream
+    # loop journals synchronously per block; the pipelined drain thread
+    # applies commands in order, so killing it mid-stream always leaves
+    # the preceding blocks journaled
+    point = "executor:block" if compute == "stream" else "writer:drain"
+
+    ref = execute_merge(plan, mp.snapshots, mp.catalog, sid="ref",
+                        txn=mp.txn, compute=compute)
+    ref_arrays = mp.load("ref")
+    with chaos.inject(point, skip=1 << 30) as probe:
+        execute_merge(plan, mp.snapshots, mp.catalog, sid="probe",
+                      txn=mp.txn, compute=compute)
+    res = _crash_then_resume(mp, plan, compute, point, skip=probe.hits // 2)
+    assert res is not None and res.stats["resumed_blocks"] > 0
+    got = mp.load("crash")
+    for k in ref_arrays:
+        assert np.array_equal(ref_arrays[k], got[k]), (op, compute, k)
+
+
+# ======================================================================
+# residual accounting
+# ======================================================================
+
+def test_resume_accounting_reads_residual_only(populated, stats):
+    mp, base, ids, *_ = populated
+    plan = _plan(mp, base, ids)
+
+    mark = stats.snapshot()
+    execute_merge(plan, mp.snapshots, mp.catalog, sid="ref", txn=mp.txn,
+                  compute="stream")
+    full = stats.delta_since(mark)
+
+    with pytest.raises(chaos.SimulatedCrash):
+        with chaos.inject("executor:block", skip=5):
+            execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                          txn=mp.txn, compute="stream")
+    mp.txn.forsake()
+    state = mp.txn.prepare_resume("crash")
+    assert state is not None
+
+    mark = stats.snapshot()
+    res = execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                        txn=mp.txn, compute="stream", resume=state)
+    resumed = stats.delta_since(mark)
+
+    # the resumed run re-reads strictly less than a full run — and its
+    # skips are recorded out-of-band, never inside the C_* terms
+    assert resumed["base_read"] < full["base_read"]
+    assert resumed["out_written"] < full["out_written"]
+    assert resumed["resumed_skipped"] > 0
+    assert full["resumed_skipped"] == 0
+    # journal upkeep is metadata (C_meta), not expert bytes
+    assert resumed["journal_write"] > 0
+    assert res.stats["resumed_blocks"] == 5
+    assert res.stats["c_expert_run"] <= res.stats["c_expert_hat"]
+
+
+# ======================================================================
+# prompt write-behind failure propagation
+# ======================================================================
+
+def test_write_behind_failure_is_prompt(populated):
+    """The `failed` event must be set the instant the drain thread dies
+    — not a full write-queue later — so prefetch stops reading expert
+    bytes a doomed merge would throw away."""
+    mp, *_ = populated
+    w = mp.snapshots.open_staging_writer()
+    wb = WriteBehindWriter(w)
+    try:
+        with chaos.inject("writer:drain"):
+            wb.begin_tensor("t", (1024,), "float32")
+            assert wb.failed.wait(5.0), "failed event not set promptly"
+            with pytest.raises(chaos.SimulatedCrash):
+                wb.raise_if_failed()
+            with pytest.raises(chaos.SimulatedCrash):
+                wb.write_block("t", 0, np.zeros(1024, np.float32))
+    finally:
+        try:
+            wb.close(discard=True)
+        except BaseException:
+            pass
+        w.abort()
+
+
+# ======================================================================
+# MergeService: requeue + resume, restart re-adoption, quarantine
+# ======================================================================
+
+def _service(path, **kw):
+    kw.setdefault("budget", "64MiB")
+    svc = MergeService(str(path), block_size=4096, start=False,
+                       compute="stream", **kw)
+    svc.snapshots.journal_sync_every = 1
+    return svc
+
+
+def _register(svc):
+    base, experts = make_models()
+    svc.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        svc.register_model(f"ex{i}", e)
+        ids.append(f"ex{i}")
+    return ids
+
+
+def _spec(ids, name, op="ties"):
+    return MergeSpec.build("base", ids, op=op, theta=THETA[op], budget=0.5,
+                           name=name)
+
+
+def test_service_crash_requeues_and_resumes(tmp_path):
+    svc = _service(tmp_path / "ws")
+    ids = _register(svc)
+    svc.submit(_spec(ids, "ref"))
+    svc.drain()
+    ref = svc.load("ref")
+
+    spent0 = svc.arbiter.usage()["global_spent_b"]
+    h = svc.submit(_spec(ids, "out"))
+    with chaos.inject("executor:block", skip=6):
+        svc.drain()
+    res = h.wait(5)
+    assert res.stats.get("resumed") is True
+    assert res.stats["resumed_blocks"] > 0
+    got = svc.load("out")
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+    row = svc.catalog.get_job(h.job_id)
+    assert row["state"] == "done" and row["attempts"] == 2
+
+    # exactly-once billing of journaled bytes: the retry window's
+    # re-charge is refunded for the prefix the dead attempt already paid
+    # to read, so total spend stays under two full charges while never
+    # dropping below one (soundness: realized <= charged)
+    hat = res.stats["c_expert_hat"]
+    spent = svc.arbiter.usage()["global_spent_b"] - spent0
+    assert hat <= spent < 2 * hat
+    assert svc.status()["resumable_sids"] == []
+    svc.close()
+
+
+def test_service_restart_readopts_and_resumes(tmp_path):
+    ws = tmp_path / "ws"
+    svc = _service(ws)
+    ids = _register(svc)
+    h = svc.submit(_spec(ids, "out", op="dare"))
+    with chaos.inject("executor:block", skip=6):
+        svc._cycle()
+    assert h.status == JobState.QUEUED  # requeued, awaiting backoff
+    # simulated process death: no close(), no abort — just gone
+    del svc
+
+    svc2 = _service(ws)
+    st = svc2.status()
+    assert st["resumable_sids"] == ["out"]
+    assert st["jobs"].get(JobState.QUEUED) == 1
+    svc2.drain()
+    row = svc2.catalog.get_job(h.job_id)
+    assert row["state"] == "done"
+    assert row["attempts"] == 2  # attempt count survives the restart
+
+    # bit-identity vs an uninterrupted reference in the same workspace
+    svc2.submit(_spec(ids, "ref", op="dare"))
+    svc2.drain()
+    ref, got = svc2.load("ref"), svc2.load("out")
+    for k in ref:
+        assert np.array_equal(ref[k], got[k]), k
+    assert svc2.snapshots.list_journal_paths() == []
+    svc2.close()
+
+
+def test_service_quarantines_poison_jobs(tmp_path):
+    svc = _service(tmp_path / "ws", max_job_attempts=2)
+    ids = _register(svc)
+    h = svc.submit(_spec(ids, "poison", op="avg"))
+
+    chaos.arm("executor:block", skip=3)
+    try:
+        svc._cycle()
+    finally:
+        chaos.disarm()
+    assert h.status == JobState.QUEUED
+
+    chaos.arm("executor:block", skip=3)
+    try:
+        deadline = time.time() + 10
+        while h.status == JobState.QUEUED and time.time() < deadline:
+            time.sleep(0.02)
+            svc._cycle()
+    finally:
+        chaos.disarm()
+    assert h.status == JobState.QUARANTINED
+    with pytest.raises(RuntimeError, match="quarantined"):
+        h.wait(1)
+    assert h.job_id in svc.status()["quarantined"]
+    row = svc.catalog.get_job(h.job_id)
+    assert row["state"] == JobState.QUARANTINED and row["attempts"] == 2
+    svc.close()
+
+
+def test_service_restart_quarantines_exhausted_rows(tmp_path):
+    """A job row that already burned max_job_attempts in a previous
+    process must not be re-adopted into a crash loop."""
+    ws = tmp_path / "ws"
+    svc = _service(ws)
+    ids = _register(svc)
+    h = svc.submit(_spec(ids, "out"))
+    # one recorded death, then the whole process dies too
+    chaos.arm("executor:block", skip=3)
+    try:
+        svc._cycle()
+    finally:
+        chaos.disarm()
+    assert svc.catalog.get_job(h.job_id)["attempts"] == 1
+    del svc
+
+    # the restarted service's retry limit is already burned
+    svc2 = _service(ws, max_job_attempts=1)
+    row = svc2.catalog.get_job(h.job_id)
+    assert row["state"] == JobState.QUARANTINED
+    assert "quarantined at restart" in row["error"]
+    svc2.close()
+
+
+# ======================================================================
+# disk extent cache: partial-fill GC
+# ======================================================================
+
+def test_disk_cache_crash_mid_fill_leaves_no_torn_extent(tmp_path):
+    from repro.store.tiered import DiskExtentCache
+
+    root = tmp_path / "cache"
+    c = DiskExtentCache(str(root))
+    assert c.put("key", 0, b"x" * 64)
+    with chaos.inject("cache:fill"):
+        with pytest.raises(chaos.SimulatedCrash):
+            c.put("key", 64, b"y" * 64)
+    # the torn fill is invisible: reads miss, the good extent survives
+    assert c.read("key", 64, 64) is None
+    assert c.read("key", 0, 64) == b"x" * 64
+    tmp_dir = root / "tmp"
+    assert len(list(tmp_dir.iterdir())) == 1  # orphaned partial file
+
+
+def test_disk_cache_tmp_sweep_on_rebuild(tmp_path):
+    from repro.store.tiered import DiskExtentCache
+
+    root = tmp_path / "cache"
+    c = DiskExtentCache(str(root))
+    assert c.put("key", 0, b"x" * 64)
+    with chaos.inject("cache:fill"):
+        with pytest.raises(chaos.SimulatedCrash):
+            c.put("key", 64, b"y" * 64)
+    # dead-pid leftover from "another" crashed process
+    tmp_dir = root / "tmp"
+    (tmp_dir / "fill-999999999-1.tmp").write_bytes(b"z")
+    (tmp_dir / "unparseable.tmp").write_bytes(b"z")
+
+    c2 = DiskExtentCache(str(root))  # index rebuild sweeps the orphans
+    assert list(tmp_dir.iterdir()) == []
+    assert c2.read("key", 0, 64) == b"x" * 64
+    # the cache is fully usable after the sweep
+    assert c2.put("key", 64, b"y" * 64)
+    assert c2.read("key", 0, 128) == b"x" * 64 + b"y" * 64

@@ -442,7 +442,9 @@ def test_cancel_mid_pipelined_execution_is_crash_safe(tmp_path, monkeypatch):
     monkeypatch.setattr(tensorstore.ModelReader, "read_range", real)
     assert "victim" not in svc.list_snapshots()
     assert svc.catalog.get_manifest("victim") is None
-    assert svc.txn.recover() == {"staging_gc": 0, "manifests_repaired": 0}
+    assert svc.txn.recover() == {
+        "staging_gc": 0, "manifests_repaired": 0, "resumable": {},
+    }
     row = svc.catalog.get_job(h.job_id)
     assert row["state"] == "cancelled" and row["error"]
 

@@ -48,6 +48,73 @@ def test_recover_gc_staging(populated):
     assert os.listdir(mp.snapshots.staging_root) == []
 
 
+def test_recover_resume_mode_protects_journaled_staging(populated):
+    """recover() must NOT GC staging that a validated progress journal
+    still references — that staging is the resumable prefix."""
+    import os
+
+    import numpy as np
+
+    from repro.core.executor import execute_merge
+    from repro.testing import chaos
+
+    mp, base, ids, *_ = populated
+    mp.snapshots.journal_sync_every = 1
+    mp.ensure_analyzed(base, ids)
+    plan = mp.plan(base, ids, "ties", theta={"trim_frac": 0.2},
+                   budget=0.5).plan
+    ref = execute_merge(plan, mp.snapshots, mp.catalog, sid="ref",
+                        txn=mp.txn, compute="stream")
+
+    with pytest.raises(chaos.SimulatedCrash):
+        with chaos.inject("executor:block", skip=5):
+            execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                          txn=mp.txn, compute="stream")
+    mp.txn.forsake()
+
+    rep = mp.txn.recover()
+    assert "crash" in rep["resumable"]
+    assert os.listdir(mp.snapshots.staging_root) != []  # prefix kept
+
+    res = execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                        txn=mp.txn, compute="stream",
+                        resume=rep["resumable"]["crash"])
+    assert res.stats["resumed_blocks"] == 5
+    a, b = mp.load("ref"), mp.load("crash")
+    for k in a:
+        assert np.array_equal(a[k], b[k])
+    # nothing left behind once the resumed merge commits
+    assert mp.snapshots.list_journal_paths() == []
+    assert os.listdir(mp.snapshots.staging_root) == []
+    del ref
+
+
+def test_recover_without_resume_discards_journaled_staging(populated):
+    """recover(resume=False) keeps the legacy discard-everything
+    contract: journals and their staging both go."""
+    import os
+
+    from repro.core.executor import execute_merge
+    from repro.testing import chaos
+
+    mp, base, ids, *_ = populated
+    mp.snapshots.journal_sync_every = 1
+    mp.ensure_analyzed(base, ids)
+    plan = mp.plan(base, ids, "ties", theta={"trim_frac": 0.2},
+                   budget=0.5).plan
+    with pytest.raises(chaos.SimulatedCrash):
+        with chaos.inject("executor:block", skip=5):
+            execute_merge(plan, mp.snapshots, mp.catalog, sid="crash",
+                          txn=mp.txn, compute="stream")
+    mp.txn.forsake()
+
+    rep = mp.txn.recover(resume=False)
+    assert rep["resumable"] == {}
+    assert rep["staging_gc"] >= 1
+    assert mp.snapshots.list_journal_paths() == []
+    assert os.listdir(mp.snapshots.staging_root) == []
+
+
 def test_snapshot_immutable_and_verifiable(populated):
     mp, base, ids, *_ = populated
     res = mp.merge(base, ids, "ties", budget=0.5)
