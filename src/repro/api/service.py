@@ -487,9 +487,9 @@ class MergeService(WorkspaceOps):
         self._resume_states: Dict[str, ResumeState] = {}
 
         self._cond = threading.Condition()
-        self._pending: List[_Job] = []
-        self._jobs: Dict[str, _Job] = {}
-        self._seq = 0
+        self._pending: List[_Job] = []  # guarded-by: _cond
+        self._jobs: Dict[str, _Job] = {}  # guarded-by: _cond
+        self._seq = 0  # guarded-by: _cond
         self._window_seq = 0
         self.window_log: List[Dict] = []
         self._thread: Optional[threading.Thread] = None
@@ -535,7 +535,9 @@ class MergeService(WorkspaceOps):
         if self._closed:
             return
         if cancel_pending:
-            for job in list(self._jobs.values()):
+            with self._cond:
+                jobs = list(self._jobs.values())
+            for job in jobs:
                 job.handle.cancel()
         else:
             try:
@@ -545,7 +547,9 @@ class MergeService(WorkspaceOps):
         # whatever drain could not finish (admission-held jobs, timeout
         # leftovers) is cancelled now: close() never strands a waiter on
         # a handle that can no longer reach a terminal state
-        for job in list(self._jobs.values()):
+        with self._cond:
+            jobs = list(self._jobs.values())
+        for job in jobs:
             if job.handle.status not in JobState.TERMINAL:
                 job.handle.cancel()
         self._stop.set()
@@ -569,12 +573,18 @@ class MergeService(WorkspaceOps):
             while not self._stop.is_set():
                 try:
                     busy = self._cycle()
-                except Exception as e:  # scheduler must never die silently
-                    for job in list(self._jobs.values()):
+                # broad-except-ok: the scheduler thread must outlive any
+                # cycle failure (every live handle is settled with the
+                # error); MergeCancelled is settled per-node inside
+                # _run_level and cannot reach here, and SimulatedCrash is
+                # a BaseException this handler deliberately cannot see
+                except Exception as e:
+                    with self._cond:
+                        jobs = list(self._jobs.values())
+                        self._pending.clear()
+                    for job in jobs:
                         if job.handle.status not in JobState.TERMINAL:
                             self._fail_handle(job.handle, e)
-                    with self._cond:
-                        self._pending.clear()
                     busy = False
                 if not busy:
                     # nothing ran this cycle: any pending jobs are
@@ -697,23 +707,29 @@ class MergeService(WorkspaceOps):
     def _cancel_job(self, handle: JobHandle) -> bool:
         """JobHandle.cancel() backend: dequeue a queued job immediately,
         flag a running one for cooperative abort."""
+        dequeued = None
         with self._cond:
             job = self._jobs.get(handle.job_id)
             if job is not None and job in self._pending:
                 self._pending.remove(job)
-                self._settle_reservation(job)
-                # row first, handle second (see _fail_handle)
-                finished_at = time.time()
-                self.catalog.update_job(
-                    handle.job_id, state=JobState.CANCELLED,
-                    finished_at=finished_at,
-                )
-                handle._fail(
-                    JobCancelled(f"job {handle.job_id} was cancelled"),
-                    state=JobState.CANCELLED,
-                    finished_at=finished_at,
-                )
-                return True
+                dequeued = job
+        if dequeued is not None:
+            # once off the pending queue the job is exclusively ours —
+            # settle it outside _cond: the catalog write is blocking
+            # sqlite I/O and must not stall the scheduler lock
+            self._settle_reservation(dequeued)
+            # row first, handle second (see _fail_handle)
+            finished_at = time.time()
+            self.catalog.update_job(
+                handle.job_id, state=JobState.CANCELLED,
+                finished_at=finished_at,
+            )
+            handle._fail(
+                JobCancelled(f"job {handle.job_id} was cancelled"),
+                state=JobState.CANCELLED,
+                finished_at=finished_at,
+            )
+            return True
         if handle.status in JobState.TERMINAL:
             return False
         handle._cancel_event.set()
@@ -728,7 +744,9 @@ class MergeService(WorkspaceOps):
     def wait_all(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted job reaches a terminal state."""
         deadline = None if timeout is None else time.time() + timeout
-        for job in list(self._jobs.values()):
+        with self._cond:
+            jobs = list(self._jobs.values())
+        for job in jobs:
             left = None if deadline is None else max(0.0, deadline - time.time())
             if not job.handle._terminal.wait(left):
                 raise TimeoutError(
@@ -752,8 +770,10 @@ class MergeService(WorkspaceOps):
         else:
             deadline = None if timeout is None else time.time() + timeout
             while True:
+                with self._cond:
+                    jobs = list(self._jobs.values())
                 live = [
-                    j for j in self._jobs.values()
+                    j for j in jobs
                     if j.handle.status not in JobState.TERMINAL
                     and not self._is_parked(j)
                 ]
@@ -834,6 +854,11 @@ class MergeService(WorkspaceOps):
         """Admission control over the queued jobs; returns those cleared
         for scheduling (removed from the pending queue)."""
         taken: List[_Job] = []
+        #: jobs settled terminal by admission this cycle; their handle
+        #: _fail + catalog row land after _cond is released — the
+        #: catalog write is blocking sqlite I/O and submit()/cancel()
+        #: must not stall on the scheduler lock behind it
+        settled: List[Tuple[_Job, BaseException, str, Optional[Dict]]] = []
         now = time.time()
         with self._cond:
             still_pending: List[_Job] = []
@@ -842,16 +867,10 @@ class MergeService(WorkspaceOps):
                 if handle.status in JobState.TERMINAL:
                     continue  # cancelled while queued
                 if job.deadline_at is not None and now > job.deadline_at:
-                    self._settle_reservation(job)
-                    handle._fail(DeadlineExceeded(
+                    settled.append((job, DeadlineExceeded(
                         f"job {handle.job_id} missed its deadline before "
                         f"a scheduling window could run it"
-                    ))
-                    self.catalog.update_job(
-                        handle.job_id, state=JobState.FAILED,
-                        error="deadline exceeded",
-                        finished_at=handle.finished_at,
-                    )
+                    ), JobState.FAILED, None))
                     continue
                 if job.not_before > now:
                     # requeued after a transient crash: still waiting out
@@ -883,18 +902,10 @@ class MergeService(WorkspaceOps):
                             continue
                         record["decision"] = "reject"
                         handle.admission = record
-                        handle._fail(
-                            AdmissionRejected(
-                                f"job {handle.job_id} is elastic but tenant "
-                                f"{handle.tenant!r} has no budget pool left"
-                            ),
-                            state=JobState.REJECTED,
-                        )
-                        self.catalog.update_job(
-                            handle.job_id, state=JobState.REJECTED,
-                            admission=record,
-                            finished_at=handle.finished_at,
-                        )
+                        settled.append((job, AdmissionRejected(
+                            f"job {handle.job_id} is elastic but tenant "
+                            f"{handle.tenant!r} has no budget pool left"
+                        ), JobState.REJECTED, record))
                         continue
                     record["decision"] = "admit"
                     handle.admission = record
@@ -912,21 +923,13 @@ class MergeService(WorkspaceOps):
                         continue
                     else:
                         handle.admission = record
-                        handle._fail(
-                            AdmissionRejected(
-                                f"job {handle.job_id} demands "
-                                f"{demand} expert bytes but tenant "
-                                f"{handle.tenant!r} has "
-                                f"{record['tenant_remaining_b']} of the "
-                                f"pool left"
-                            ),
-                            state=JobState.REJECTED,
-                        )
-                        self.catalog.update_job(
-                            handle.job_id, state=JobState.REJECTED,
-                            admission=record,
-                            finished_at=handle.finished_at,
-                        )
+                        settled.append((job, AdmissionRejected(
+                            f"job {handle.job_id} demands "
+                            f"{demand} expert bytes but tenant "
+                            f"{handle.tenant!r} has "
+                            f"{record['tenant_remaining_b']} of the "
+                            f"pool left"
+                        ), JobState.REJECTED, record))
                         continue
                 # the transient ADMITTED state lives on the handle only;
                 # the catalog records admission with the terminal row
@@ -934,6 +937,21 @@ class MergeService(WorkspaceOps):
                 handle._set_state(JobState.ADMITTED)
                 taken.append(job)
             self._pending = still_pending
+        for job, error, state, record in settled:
+            handle = job.handle
+            self._settle_reservation(job)
+            handle._fail(error, state=state)
+            if state == JobState.REJECTED:
+                self.catalog.update_job(
+                    handle.job_id, state=state, admission=record,
+                    finished_at=handle.finished_at,
+                )
+            else:
+                self.catalog.update_job(
+                    handle.job_id, state=state,
+                    error="deadline exceeded",
+                    finished_at=handle.finished_at,
+                )
         return taken
 
     # ---------------------------------------------------------- windowing
@@ -1140,9 +1158,11 @@ class MergeService(WorkspaceOps):
                 window_stats = self._run_level(
                     by_level[level], nodes, opts, interested, dead,
                 )
+        # broad-except-ok: level-infrastructure failure (per-node errors,
+        # incl. MergeCancelled, are contained inside _run_level); every
+        # unresolved handle in the window is settled with the error, and
+        # SimulatedCrash stays invisible to this handler by design
         except Exception as e:
-            # a level-infrastructure failure (not a per-node error, those
-            # are contained) fails whatever is still unresolved
             self._fail_window(wjobs, e)
             return
         finally:
@@ -1233,7 +1253,8 @@ class MergeService(WorkspaceOps):
         for h in handles:
             if h.status in JobState.TERMINAL or h.cancel_requested:
                 continue
-            job = self._jobs.get(h.job_id)
+            with self._cond:
+                job = self._jobs.get(h.job_id)
             if job is None or job.attempts >= self.max_job_attempts:
                 quarantine_err = RuntimeError(
                     f"job {h.job_id} quarantined after "
@@ -1631,6 +1652,10 @@ class MergeService(WorkspaceOps):
                         self._resume_states[exec_sid] = state
                     self._requeue_or_quarantine(node, handles, e, dead)
                     continue
+                # broad-except-ok: per-node containment — MergeCancelled
+                # and SimulatedCrash are taken by the dedicated handlers
+                # above; everything else either requeues (transient) or
+                # settles the node's handles with the error
                 except Exception as e:
                     if is_transient(e):
                         # transient I/O failure (timeouts, dropped

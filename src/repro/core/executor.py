@@ -654,8 +654,8 @@ class _ResidencyGauge:
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self.current = 0
-        self.peak = 0
+        self.current = 0  # guarded-by: _lock
+        self.peak = 0  # guarded-by: _lock
 
     def add(self, n: int) -> None:
         if n <= 0:
@@ -852,7 +852,11 @@ class _PipelineEngine:
                     return
                 flush_one()
             self._put(_PipelineEngine._DONE)
-        except BaseException as e:  # noqa: BLE001 — re-raised on caller thread
+        # broad-except-ok: nothing is swallowed — the error (incl.
+        # SimulatedCrash) rides the window queue as an ("error", e) item
+        # and is re-raised on the consumer thread, preserving the
+        # BaseException-invisibility of simulated crashes to abort paths
+        except BaseException as e:  # noqa: BLE001
             self._put(("error", e, None, None))
 
     def _put(self, item) -> None:

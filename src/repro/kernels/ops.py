@@ -29,7 +29,7 @@ from repro.kernels import ref
 def _on_tpu() -> bool:
     try:
         return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover
+    except (RuntimeError, IndexError):  # pragma: no cover — no backend
         return False
 
 

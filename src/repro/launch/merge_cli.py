@@ -130,8 +130,14 @@ def _cmd_submit(argv) -> None:
             "submitted_at": time.time(),
         }
         tmp = os.path.join(inbox, f".{job_id}.tmp")
+        # fsync before the rename: the serve daemon trusts any *.json in
+        # the inbox, and a torn spec surviving a crash would wedge it
         with open(tmp, "w", encoding="utf-8") as f:
             json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # chaos-ok: client-side submit, outside the merge pipeline the
+        # chaos harness exercises — a crash here just loses the submit
         os.rename(tmp, os.path.join(inbox, f"{job_id}.json"))
         print(f"[submit] {job_id}  spec={spec.spec_id}  "
               f"tenant={args.tenant}  priority={args.priority}")

@@ -35,7 +35,7 @@ class CacheBudget:
 
     def __init__(self, max_bytes: Optional[int]):
         self.max_bytes = max_bytes
-        self.used = 0
+        self.used = 0  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def admit(self, nbytes: int) -> bool:
@@ -67,16 +67,16 @@ class CachingModelReader:
     ):
         self._reader = reader
         self.budget = budget or CacheBudget(max_bytes)
-        self._blocks: Dict[Tuple[str, int, int], np.ndarray] = {}
-        self._tensors: Dict[str, np.ndarray] = {}
+        self._blocks: Dict[Tuple[str, int, int], np.ndarray] = {}  # guarded-by: _lock
+        self._tensors: Dict[str, np.ndarray] = {}  # guarded-by: _lock
         #: guards cache maps + counters; physical reads happen outside the
         #: lock (pread is already concurrent-safe), so a racing miss may
         #: read a block twice — accounting stays honest, never unsound.
         self._lock = threading.Lock()
-        self.cached_bytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.bytes_saved = 0
+        self.cached_bytes = 0  # guarded-by: _lock
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.bytes_saved = 0  # guarded-by: _lock
         #: optional IOStats for RAM-tier hit/miss counters (hits still
         #: record zero read bytes — they are free by construction)
         self.stats = stats
@@ -117,6 +117,7 @@ class CachingModelReader:
         return fn(tensor_id) if fn is not None else frozenset()
 
     # -- caching reads -----------------------------------------------------
+    # unguarded-ok: caller holds self._lock (every call site acquires it)
     def _admit(self, key: Tuple[str, int, int], arr: np.ndarray) -> None:
         if key in self._blocks or not self.budget.admit(arr.nbytes):
             return

@@ -57,6 +57,14 @@ CATEGORIES = (
 #: which storage tier the bytes physically came from
 EXPERT_CATEGORIES = ("expert", "expert_packed", "expert_remote", "expert_disk")
 
+#: cache tiers record_cache accepts — tier names, NOT categories
+TIERS = ("ram", "disk")
+
+
+class IOStatsError(ValueError):
+    """Debug-mode accounting violation: unknown category/tier or a
+    broken totals decomposition."""
+
 
 @dataclasses.dataclass
 class Counter:
@@ -69,35 +77,56 @@ class Counter:
 
 
 class IOStats:
-    """Thread-safe tagged byte counters."""
+    """Thread-safe tagged byte counters.
 
-    def __init__(self) -> None:
+    With ``debug=True`` every ``record_*`` call validates its category
+    (tier for ``record_cache``) against the closed sets above, so a
+    typo'd category fails at the call site instead of silently leaking
+    bytes out of every C_* cost term.  The test suite's ``stats``
+    fixture runs in debug mode and calls :meth:`self_check` at
+    teardown; production paths default to ``debug=False`` and skip the
+    membership test on the hot path.
+    """
+
+    def __init__(self, debug: bool = False) -> None:
+        self.debug = debug
         self._lock = threading.Lock()
-        self.read: Dict[str, Counter] = defaultdict(Counter)
-        self.written: Dict[str, Counter] = defaultdict(Counter)
+        self.read: Dict[str, Counter] = defaultdict(Counter)  # guarded-by: _lock
+        self.written: Dict[str, Counter] = defaultdict(Counter)  # guarded-by: _lock
         # per-tier cache effectiveness ("ram" / "disk"): a hit is a read
         # served without touching the next tier down
-        self.cache_hits: Dict[str, Counter] = defaultdict(Counter)
-        self.cache_misses: Dict[str, Counter] = defaultdict(Counter)
+        self.cache_hits: Dict[str, Counter] = defaultdict(Counter)  # guarded-by: _lock
+        self.cache_misses: Dict[str, Counter] = defaultdict(Counter)  # guarded-by: _lock
         # logical bytes a resumed run skipped thanks to journaled progress
-        self.skipped: Dict[str, Counter] = defaultdict(Counter)
+        self.skipped: Dict[str, Counter] = defaultdict(Counter)  # guarded-by: _lock
 
     # -- recording -----------------------------------------------------
+    def _validate(self, name: str, allowed, kind: str) -> None:
+        if self.debug and name not in allowed:
+            raise IOStatsError(
+                "unknown %s %r (expected one of %s)"
+                % (kind, name, ", ".join(allowed))
+            )
+
     def record_read(self, category: str, nbytes: int) -> None:
+        self._validate(category, CATEGORIES, "category")
         with self._lock:
             self.read[category].add(nbytes)
 
     def record_write(self, category: str, nbytes: int) -> None:
+        self._validate(category, CATEGORIES, "category")
         with self._lock:
             self.written[category].add(nbytes)
 
     def record_cache(self, tier: str, nbytes: int, hit: bool) -> None:
+        self._validate(tier, TIERS, "cache tier")
         with self._lock:
             (self.cache_hits if hit else self.cache_misses)[tier].add(nbytes)
 
     def record_skip(self, category: str, nbytes: int) -> None:
         """Logical bytes NOT moved because a resume state proved the work
         already done (journal high-water mark).  Never part of C_*."""
+        self._validate(category, CATEGORIES, "category")
         with self._lock:
             self.skipped[category].add(nbytes)
 
@@ -211,6 +240,57 @@ class IOStats:
             self.cache_hits.clear()
             self.cache_misses.clear()
             self.skipped.clear()
+
+    def self_check(self) -> None:
+        """Accounting-completeness invariant.  Raises
+        :class:`IOStatsError` if any recorded counter sits outside the
+        closed category/tier sets (bytes that no C_* cost term would
+        count), if a counter went negative or recorded bytes without a
+        call, or if the documented totals decomposition broke:
+        ``total_expert_bytes == c_expert + expert_disk`` and the C_*
+        terms together cover every recorded byte."""
+        snap = self.snapshot()
+        problems = []
+        for kind, allowed in (
+            ("read", CATEGORIES), ("written", CATEGORIES),
+            ("skipped", CATEGORIES),
+            ("cache_hits", TIERS), ("cache_misses", TIERS),
+        ):
+            for key, ctr in snap[kind].items():
+                if key not in allowed:
+                    problems.append(
+                        "%s counter for unknown key %r (%d bytes would "
+                        "escape every cost term)" % (kind, key, ctr["bytes"])
+                    )
+                if ctr["bytes"] < 0 or ctr["calls"] < 0:
+                    problems.append(
+                        "%s[%r] went negative: %r" % (kind, key, ctr))
+                if ctr["bytes"] > 0 and ctr["calls"] == 0:
+                    problems.append(
+                        "%s[%r] has bytes without calls: %r"
+                        % (kind, key, ctr))
+        if self.total_expert_bytes != (
+            self.c_expert + self.bytes_read("expert_disk")
+        ):
+            problems.append(
+                "expert decomposition broke: total_expert_bytes=%d != "
+                "c_expert=%d + expert_disk=%d"
+                % (self.total_expert_bytes, self.c_expert,
+                   self.bytes_read("expert_disk"))
+            )
+        declared = (
+            self.c_base + self.c_expert + self.c_out + self.c_meta
+            + self.bytes_read("expert_disk") + self.c_analyze
+            + self.bytes_read("repack") + self.bytes_written("repack")
+        )
+        accounted = sum(c["bytes"] for c in snap["read"].values()) + sum(
+            c["bytes"] for c in snap["written"].values())
+        if declared != accounted:
+            problems.append(
+                "cost terms do not cover recorded volume: terms=%d "
+                "recorded=%d" % (declared, accounted))
+        if problems:
+            raise IOStatsError("; ".join(problems))
 
     def delta_since(self, before: Dict[str, Dict[str, int]]) -> Dict[str, int]:
         now = self.snapshot()

@@ -366,6 +366,9 @@ class PackedStore:
             f.write(raw_doc)
             f.flush()
             os.fsync(f.fileno())
+        # chaos-ok: a layout is derived state — a crash mid-repack leaves
+        # no manifest, and the whole repack is re-run from the source
+        # snapshots; there is no resume edge for the harness to probe
         os.replace(tmp, os.path.join(ldir, LAYOUT_MANIFEST))
         self.stats.record_write("meta", len(raw_doc))
 
@@ -686,20 +689,20 @@ class PackedLayout:
         self.members: Dict[str, Dict] = doc["members"]
         self._fd = os.open(os.path.join(ldir, EXTENT_FILE), os.O_RDONLY)
         self._lock = threading.Lock()
-        self._cache: Dict[str, bytes] = {}
-        self._inflight: Dict[str, threading.Event] = {}
-        self.pinned_bytes = 0
+        self._cache: Dict[str, bytes] = {}  # guarded-by: _lock
+        self._inflight: Dict[str, threading.Event] = {}  # guarded-by: _lock
+        self.pinned_bytes = 0  # guarded-by: _lock
         #: physical bytes recorded for extents this open already read
         #: once (only possible when ``max_pinned_bytes`` evicts a
         #: multi-consumer extent before all consumers were served); the
         #: executor widens its budget-soundness slack by this amount —
         #: the planner charged each extent once, honestly-accounted
         #: rereads are a memory-cap tradeoff, not a plan violation
-        self.reread_bytes = 0
-        self._read_keys: set = set()
-        self._base_reader = None
+        self.reread_bytes = 0  # guarded-by: _lock
+        self._read_keys: set = set()  # guarded-by: _lock
+        self._base_reader = None  # guarded-by: _base_lock
         self._base_lock = threading.Lock()
-        self._closed = False
+        self._closed = False  # guarded-by: _lock
 
     # -- members -----------------------------------------------------------
     def member_ids(self) -> List[str]:
@@ -714,6 +717,9 @@ class PackedLayout:
         return PackedModelReader(self, model_id)
 
     # -- physical reads ----------------------------------------------------
+    # unaccounted-ok: raw extent fetch — every caller (_read_decode,
+    # read_extents, base_block) tags the bytes per extent with
+    # expert_packed/base plus decode waste, which this helper cannot know
     def _pread(self, off: int, nbytes: int) -> bytes:
         chunks = []
         got = 0
@@ -832,9 +838,10 @@ class PackedLayout:
                         f"blocks: no source CheckpointStore attached"
                     )
                 self._base_reader = self.models.open_model(self.base_id)
+            reader = self._base_reader
         # these are base-checkpoint bytes: never charge them as expert
         # reads — elided blocks move zero expert bytes by contract
-        return self._base_reader.read_block(
+        return reader.read_block(
             tensor_id, block_idx, block_size,
             "base" if category == "expert" else category,
         )

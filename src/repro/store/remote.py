@@ -138,6 +138,9 @@ class RemoteObjectStore:
             f.write(data)
             f.flush()
             os.fsync(f.fileno())
+        # chaos-ok: PUT atomicity is the object store's contract (this
+        # class emulates S3-style semantics); failure injection for the
+        # remote path goes through inject_faults, not the chaos harness
         os.replace(tmp, path)
 
     def head(self, key: str) -> Dict:

@@ -302,7 +302,11 @@ class WriteBehindWriter:
             try:
                 chaos_point("writer:drain")
                 getattr(self.writer, method)(*args)
-            except BaseException as e:  # noqa: BLE001 — forwarded to producer
+            # broad-except-ok: nothing is swallowed — the error (incl.
+            # SimulatedCrash) is parked on self._exc and re-raised on the
+            # producer thread at the next enqueue/flush/close via
+            # raise_if_failed, which is also the abort path's view of it
+            except BaseException as e:  # noqa: BLE001
                 self._exc = e
                 self.failed.set()
 
@@ -428,6 +432,9 @@ class SnapshotStore:
         self.stats.record_write("meta", len(raw_model))
         # 2. move staged dir into the model store (same fs => atomic rename)
         final_dir = os.path.join(self.models.root, sid)
+        # chaos-ok: the publish:before / publish:after crash points
+        # bracket this whole call one layer up, in
+        # TransactionManager.atomic_publish (transactions.py)
         os.replace(writer.dir, final_dir)
         # 3. publish point: manifest file appears atomically
         manifest = dict(manifest)
@@ -439,6 +446,8 @@ class SnapshotStore:
             f.write(raw)
             f.flush()
             os.fsync(f.fileno())
+        # chaos-ok: bracketed by publish:before / publish:after in
+        # TransactionManager.atomic_publish (transactions.py)
         os.replace(tmp, os.path.join(self.manifest_root, f"{sid}.json"))
         self.stats.record_write("meta", len(raw))
         # 4. the snapshot is durable, but its progress journal must

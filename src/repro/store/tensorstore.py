@@ -309,6 +309,8 @@ class CheckpointStore:
             if fsync:
                 f.flush()
                 os.fsync(f.fileno())
+        # chaos-ok: input-model ingest, upstream of merge transactions —
+        # crash points cover the merge publish/journal edges only
         os.replace(tmp, os.path.join(mdir, MODEL_MANIFEST))
         self.stats.record_write("meta", len(raw_manifest))
         return mdir
@@ -349,6 +351,8 @@ class CheckpointStore:
             f.write(raw)
             f.flush()
             os.fsync(f.fileno())
+        # chaos-ok: model registration at ingest, upstream of merge
+        # transactions; a crash here is re-run by the operator
         os.replace(tmp, os.path.join(mdir, REMOTE_STUB))
         self.stats.record_write("meta", len(raw))
         return mdir
@@ -409,8 +413,16 @@ class CheckpointStore:
             }
             raw = json.dumps(stub, indent=1).encode()
             tmp = os.path.join(mdir, REMOTE_STUB + ".tmp")
+            # the local tensors are already gone at this point: a torn
+            # stub after a crash would orphan the model, so the stub
+            # must be durable before it becomes visible (mergelint:
+            # durability caught the missing fsync here)
             with open(tmp, "wb") as f:
                 f.write(raw)
+                f.flush()
+                os.fsync(f.fileno())
+            # chaos-ok: operator-driven republish, upstream of merge
+            # transactions — re-run publish_remote after a crash
             os.replace(tmp, os.path.join(mdir, REMOTE_STUB))
             self.stats.record_write("meta", len(raw))
         return remote.root

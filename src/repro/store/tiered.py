@@ -102,14 +102,14 @@ class DiskExtentCache:
         os.makedirs(os.path.join(self.root, _EXT_DIR), exist_ok=True)
         os.makedirs(os.path.join(self.root, _TMP_DIR), exist_ok=True)
         self._lock = threading.Lock()
-        self._index: Dict[str, Dict[Tuple[int, int], int]] = {}
-        self._usage = 0
-        self._seq = 0
-        self.hits = 0
-        self.misses = 0
-        self.fills = 0
-        self.evictions = 0
-        self._inflight: Dict[Tuple[str, int, int], threading.Event] = {}
+        self._index: Dict[str, Dict[Tuple[int, int], int]] = {}  # guarded-by: _lock
+        self._usage = 0  # guarded-by: _lock
+        self._seq = 0  # guarded-by: _lock
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.fills = 0  # guarded-by: _lock
+        self.evictions = 0  # guarded-by: _lock
+        self._inflight: Dict[Tuple[str, int, int], threading.Event] = {}  # guarded-by: _lock
         self._rebuild_index()
 
     # -- paths / index ------------------------------------------------------
@@ -434,11 +434,11 @@ class TieredReader(BlockReaderMixin):
         #: bytes re-fetched from remote for ranges that were disk-cached
         #: when this reader first touched the tensor (mid-run eviction);
         #: the executor widens its budget-soundness slack by the delta
-        self.evict_refetch_bytes = 0
+        self.evict_refetch_bytes = 0  # guarded-by: _mut
         #: remote requests that failed and were retried (fault injection)
-        self.retries = 0
+        self.retries = 0  # guarded-by: _mut
         self._mut = threading.Lock()
-        self._cover_snapshots: Dict[str, List[Tuple[int, int]]] = {}
+        self._cover_snapshots: Dict[str, List[Tuple[int, int]]] = {}  # guarded-by: _mut
         doc = self._load_manifest()
         self.meta: Dict = doc.get("meta", {})
         self.specs: Dict[str, TensorSpec] = {
@@ -469,6 +469,10 @@ class TieredReader(BlockReaderMixin):
         tmp = cache_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump({"etag": head["etag"], "manifest": doc}, f)
+        # fsync-ok: local manifest cache — a torn file fails the JSON
+        # parse (or the etag check) above and is refetched from remote
+        # chaos-ok: soft state, not a durability edge; cache:fill covers
+        # the disk tier's real persistence path
         os.replace(tmp, cache_path)
         return doc
 
@@ -494,8 +498,10 @@ class TieredReader(BlockReaderMixin):
 
     def _fetch_remote(self, tensor_id: str, offset: int, nbytes: int) -> Callable[[], bytes]:
         key = model_key(self.model_id, self.specs[tensor_id]["file"])
+        # deferred fetch thunk: read_range records the bytes at the
+        # serving tier via _record, once it knows which tier served it
         return lambda: self.retry.call(
-            lambda: self.remote.get_range(key, offset, nbytes),
+            lambda: self.remote.get_range(key, offset, nbytes),  # unaccounted-ok: recorded by read_range via _record
             on_retry=self._on_retry,
         )
 
@@ -520,12 +526,12 @@ class TieredReader(BlockReaderMixin):
                 # the tensor — a later miss inside this set means the
                 # extent was evicted mid-run and must be re-fetched
                 self._cover_snapshots[ckey] = self.disk.extents_for(ckey)
+            snap = self._cover_snapshots[ckey]
         data = self.disk.read(ckey, offset, nbytes)
         if data is not None:
             self.stats.record_cache("disk", nbytes, hit=True)
             self._record(category, "disk", payload, waste_nbytes)
             return data
-        snap = self._cover_snapshots.get(ckey, [])
         if any(o <= offset and offset + nbytes <= o + n for o, n in snap):
             with self._mut:
                 self.evict_refetch_bytes += payload

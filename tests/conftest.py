@@ -6,11 +6,30 @@ import pytest
 
 from repro.core.api import MergePipe
 from repro.store.iostats import IOStats
+from repro.testing.locktrace import LockTracer
 
 
 @pytest.fixture
 def stats():
-    return IOStats()
+    """Debug-mode stats: every record_* call validates its category and
+    the totals decomposition is re-checked after the test."""
+    st = IOStats(debug=True)
+    yield st
+    st.self_check()
+
+
+@pytest.fixture
+def lock_tracer():
+    """Runtime lock-order tracer (repro.testing.locktrace): traces every
+    repro lock allocated while active; teardown fails the test on an
+    acquisition-order cycle or on blocking I/O under the scheduler lock."""
+    tracer = LockTracer()
+    tracer.install()
+    try:
+        yield tracer
+    finally:
+        tracer.uninstall()
+    tracer.check()
 
 
 @pytest.fixture

@@ -1,0 +1,50 @@
+"""Chaos-point registry drift: chaos.CRASH_POINTS and the live
+``chaos_point("...")`` call sites must stay in bijection.  A point with
+no call site is dead crash coverage; an unregistered call-site name can
+never be armed (ChaosInjector rejects it)."""
+import ast
+import os
+
+import pytest
+
+from repro.analysis import durability, runner
+from repro.testing.chaos import CRASH_POINTS, ChaosInjector
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _call_sites():
+    """point name -> (path, line) for every chaos_point("...") literal."""
+    sites = {}
+    for sf in runner.parse_files(runner.discover(ROOT), ROOT):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None)
+            if name == "chaos_point" and node.args and isinstance(
+                    node.args[0], ast.Constant):
+                sites.setdefault(node.args[0].value, (sf.path, node.lineno))
+    return sites
+
+
+def test_registry_matches_call_sites_exactly():
+    sites = _call_sites()
+    unregistered = set(sites) - set(CRASH_POINTS)
+    dead = set(CRASH_POINTS) - set(sites)
+    assert not unregistered, (
+        "call sites not in CRASH_POINTS: %s" % sorted(unregistered))
+    assert not dead, (
+        "registered points with no live call site: %s" % sorted(dead))
+
+
+def test_durability_drift_pass_agrees():
+    files = runner.parse_files(runner.discover(ROOT), ROOT)
+    findings = [f for f in durability.run_repo(files) if not f.waived]
+    assert not findings, "\n".join(f.render() for f in findings)
+
+
+def test_injector_rejects_unregistered_point():
+    with pytest.raises(ValueError, match="unknown crash point"):
+        ChaosInjector("publish:nonexistent")
