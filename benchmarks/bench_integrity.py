@@ -1,0 +1,240 @@
+"""Verify-on-read overhead + read-repair throughput (docs/STORAGE.md).
+
+Two questions about the block-integrity contract (store/integrity):
+
+1. **What does verification cost when nothing is wrong?**  The same
+   warm tiered merge (every expert block served from the local disk
+   cache) runs with ``verify=False`` and ``verify=True``; the wall-time
+   delta is pure hashing + hash-table lookups.  blake2b-8 over
+   block-sized payloads is memory-bandwidth-bound, so the overhead must
+   stay in the noise floor — the ``--check`` gate requires **<= 5%**.
+
+2. **What does repair cost when everything is wrong?**  Every extent in
+   the warm disk cache is bit-flipped at rest, then the merge reruns:
+   each cache hit fails digest validation, is dropped, and is refetched
+   from the remote bucket (billed ``expert_repair``).  The run must
+   commit **bit-identically** to the flat-local golden — corruption
+   costs time, never correctness.
+
+Emits a JSON summary (``benchmarks/out/bench_integrity.json`` or
+``$REPRO_BENCH_JSON``).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.harness import bench_mb, cleanup, Csv, fresh_dir, model_shapes, summary_path
+from repro.api import MergeSpec, Session
+from repro.store.iostats import measure
+from repro.testing.chaos import corrupt_file
+
+BLOCK_SIZE = 16 * 1024
+
+
+def _fleet_arrays(k: int, total_mb: float) -> Tuple[Dict, List[Dict]]:
+    rng = np.random.default_rng(0)
+    shapes = model_shapes(total_mb)
+    base = {n: rng.normal(size=s).astype(np.float32) for n, s in shapes.items()}
+    experts = []
+    for i in range(k):
+        r = np.random.default_rng(100 + i)
+        experts.append({
+            n: v + 0.02 * r.normal(size=v.shape).astype(np.float32)
+            for n, v in base.items()
+        })
+    return base, experts
+
+
+def _spec(ids, budget):
+    return MergeSpec.build(base="base", experts=list(ids), op="ties",
+                           theta={"trim_frac": 0.3}, budget=budget)
+
+
+def _merge(ws: str, ids, budget, verify) -> Dict:
+    """One merge in a fresh Session (fresh RAM tier, persistent disk
+    tier) — wall time, per-tier bytes, and the verify report."""
+    sess = Session(ws, block_size=BLOCK_SIZE)
+    try:
+        handle = sess.submit(_spec(ids, budget))
+        t0 = time.perf_counter()
+        with measure(sess.stats) as io:
+            sess.run_all(verify=verify)
+        wall = time.perf_counter() - t0
+        res = handle.result
+        return {
+            "wall_s": wall,
+            "arrays": sess.load(res.sid),
+            "expert_bytes": io["expert_read"],
+            "expert_remote_bytes": io["expert_remote_read"],
+            "expert_repair_bytes": io["expert_repair_read"],
+            "verify": res.stats.get("verify"),
+        }
+    finally:
+        sess.close()
+
+
+def _paired(n: int, fn_off, fn_on) -> Tuple[Dict, Dict, float]:
+    """Interleave n (off, on) pairs and compare the *minimum* wall per
+    arm: scheduling and thermal interference on a shared host is
+    strictly additive (it only ever slows a run down), so min-of-N
+    converges to the noise-free wall, while means or per-pair deltas
+    bill ambient load to whichever arm drew the slower run.
+    Interleaving (with alternating order inside each pair) keeps slow
+    drift from giving either arm a systematically calmer slice of the
+    machine."""
+    offs, ons = [], []
+    for i in range(n):
+        first, second = (fn_off, fn_on) if i % 2 == 0 else (fn_on, fn_off)
+        a, b = first(), second()
+        offs.append(a if i % 2 == 0 else b)
+        ons.append(b if i % 2 == 0 else a)
+    off = min(offs, key=lambda r: r["wall_s"])
+    on = min(ons, key=lambda r: r["wall_s"])
+    overhead = (on["wall_s"] - off["wall_s"]) / max(off["wall_s"], 1e-9)
+    return off, on, overhead
+
+
+def run(
+    k: int = 8,
+    budget: float = 0.5,
+    total_mb: Optional[float] = None,
+    repeats: int = 3,
+    json_path: Optional[str] = None,
+) -> Dict:
+    total_mb = total_mb or bench_mb()
+    csv = Csv("integrity", [
+        "arm", "k", "wall_s", "expert_mb", "repair_mb", "verified_blocks",
+        "repaired_blocks", "overhead_vs_off",
+    ])
+    base, experts = _fleet_arrays(k, total_mb)
+
+    # flat local golden -------------------------------------------------
+    ws_local = fresh_dir("integrity-local")
+    sess = Session(ws_local, block_size=BLOCK_SIZE)
+    sess.register_model("base", base)
+    ids = []
+    for i, ex in enumerate(experts):
+        sess.register_model(f"expert-{i:02d}", ex)
+        ids.append(f"expert-{i:02d}")
+    sess.ensure_analyzed("base", ids)
+    sess.close()
+    golden = _merge(ws_local, ids, budget, verify=True)
+
+    # tiered workspace, warm disk cache ---------------------------------
+    ws = fresh_dir("integrity-tiered")
+    sess = Session(ws, block_size=BLOCK_SIZE)
+    sess.register_model("base", base)
+    for i, ex in enumerate(experts):
+        sess.register_model(f"expert-{i:02d}", ex)
+        sess.publish_model_remote(f"expert-{i:02d}", os.path.join(ws, "bucket"))
+    sess.ensure_analyzed("base", ids)  # warms the disk cache clean
+    sess.close()
+
+    _merge(ws, ids, budget, verify=False)  # page-cache warm-up, untimed
+    off, on, overhead = _paired(
+        repeats,
+        lambda: _merge(ws, ids, budget, verify=False),
+        lambda: _merge(ws, ids, budget, verify=True),
+    )
+
+    # rot every cached extent at rest, then merge through the damage ----
+    for path in glob.glob(os.path.join(ws, "diskcache", "**", "*.ext"),
+                          recursive=True):
+        corrupt_file(path, "bitflip")
+    corrupt = _merge(ws, ids, budget, verify=True)
+
+    arms = {"verify_off": off, "verify_on": on, "corrupt_cold": corrupt}
+    summary: Dict = {
+        "workload": {
+            "k": k, "model_mb": total_mb, "block_size": BLOCK_SIZE,
+            "budget": budget, "repeats": repeats,
+        },
+        "verify_overhead_frac": overhead,
+        "results": {},
+    }
+    for arm, r in arms.items():
+        v = r["verify"] or {}
+        csv.row(arm, k, r["wall_s"], r["expert_bytes"] / 1e6,
+                r["expert_repair_bytes"] / 1e6, v.get("verified_blocks", 0),
+                v.get("repaired_blocks", 0),
+                overhead if arm == "verify_on" else "")
+        summary["results"][arm] = {
+            "wall_s": r["wall_s"],
+            "expert_bytes": r["expert_bytes"],
+            "expert_remote_bytes": r["expert_remote_bytes"],
+            "expert_repair_bytes": r["expert_repair_bytes"],
+            "verify": v,
+            "bit_identical_to_local": all(
+                np.array_equal(golden["arrays"][t], r["arrays"][t])
+                for t in golden["arrays"]
+            ),
+        }
+    for w in (ws_local, ws):
+        cleanup(w)
+    out = summary_path("bench_integrity", json_path)
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# integrity json summary -> {out}", flush=True)
+    return summary
+
+
+def check(max_overhead: float = 0.05) -> int:
+    """CI smoke: verification costs <= 5% wall on the warm tier, and a
+    fully-corrupted cache repairs to a bit-identical commit."""
+    summary = run(k=8, total_mb=2.0, repeats=7)
+    res = summary["results"]
+    ok = True
+    overhead = summary["verify_overhead_frac"]
+    print(f"# check: verify overhead {overhead:+.1%} "
+          f"(require <= {max_overhead:.0%})")
+    if overhead > max_overhead:
+        print("FAIL: verify-on-read overhead above budget")
+        ok = False
+    if res["verify_on"]["verify"].get("verified_blocks", 0) <= 0:
+        print("FAIL: verify_on run verified no blocks")
+        ok = False
+    if res["verify_off"]["verify"]:
+        print("FAIL: verify_off run still produced a verify report")
+        ok = False
+    corrupt = res["corrupt_cold"]
+    if corrupt["expert_repair_bytes"] <= 0:
+        print("FAIL: corrupted-cache run billed no repair bytes")
+        ok = False
+    for arm in ("verify_off", "verify_on", "corrupt_cold"):
+        if not res[arm]["bit_identical_to_local"]:
+            print(f"FAIL: {arm} merge differs bitwise from flat local")
+            ok = False
+    print(f"# check: corrupt_cold repaired "
+          f"{corrupt['expert_repair_bytes'] / 1e6:.2f}MB, bit-identical="
+          f"{corrupt['bit_identical_to_local']}")
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: <=5% verify overhead + bit-identical "
+                         "repair through a fully-corrupted cache")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--budget", type=float, default=0.5)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    if args.fast:
+        run(k=4, total_mb=2.0, repeats=2, json_path=args.json)
+    else:
+        run(k=args.k, budget=args.budget, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,7 @@ reads).
 move **>= 2x fewer** expert bytes under the same budget with merged
 output bit-identical at 100%% budget; on ``all_unique`` packed bytes must
 not exceed flat bytes (no regression).  Emits a JSON summary
-(``bench_packed_store.json`` or ``$REPRO_BENCH_JSON``).
+(``benchmarks/out/bench_packed_store.json`` or ``$REPRO_BENCH_JSON``).
 """
 from __future__ import annotations
 
@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from benchmarks.harness import Csv, bench_mb, cleanup, fresh_dir, model_shapes
+from benchmarks.harness import Csv, bench_mb, cleanup, fresh_dir, model_shapes, summary_path
 from repro.core.api import MergePipe
 from repro.store import packed as packed_mod
 from repro.store import tensorstore
@@ -205,9 +205,7 @@ def run(
                 })
             mp.close()
             cleanup(ws)
-    out = json_path or os.environ.get(
-        "REPRO_BENCH_JSON", "bench_packed_store.json"
-    )
+    out = summary_path("bench_packed_store", json_path)
     with open(out, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"# packed_store json summary -> {out}", flush=True)

@@ -41,7 +41,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from benchmarks.harness import Csv, bench_mb, build_zoo, cleanup, fresh_dir
+from benchmarks.harness import Csv, bench_mb, build_zoo, cleanup, fresh_dir, summary_path
 from repro.core.executor import PipelineConfig
 from repro.store import tensorstore
 from repro.store.iostats import IOStats
@@ -156,7 +156,7 @@ def run(
         mp.close()
         cleanup(ws)
     summary["best_shared_speedup"] = best_shared_speedup
-    out = json_path or os.environ.get("REPRO_BENCH_JSON", "bench_pipeline.json")
+    out = summary_path("bench_pipeline", json_path)
     with open(out, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"# pipeline json summary -> {out}", flush=True)

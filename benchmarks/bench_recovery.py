@@ -27,7 +27,7 @@ of the full run's expert bytes (the crash fires at ~50%, so a resume
 that re-reads the prefix blows past this), must skip at least one
 journaled block, must commit bit-identically, and must leave no journal
 or staging residue behind.  Emits a JSON summary
-(``bench_recovery.json`` or ``$REPRO_BENCH_JSON``).
+(``benchmarks/out/bench_recovery.json`` or ``$REPRO_BENCH_JSON``).
 """
 from __future__ import annotations
 
@@ -40,7 +40,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from benchmarks.harness import bench_mb, build_zoo, cleanup, Csv, fresh_dir
+from benchmarks.harness import bench_mb, build_zoo, cleanup, Csv, fresh_dir, summary_path
 from repro.core.executor import execute_merge
 from repro.store.iostats import IOStats, measure
 from repro.testing import chaos
@@ -149,9 +149,7 @@ def run(
             "resumed_blocks": r["stats"].get("resumed_blocks", 0),
         }
     cleanup(ws)
-    out = json_path or os.environ.get(
-        "REPRO_BENCH_JSON", "bench_recovery.json"
-    )
+    out = summary_path("bench_recovery", json_path)
     with open(out, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"# recovery json summary -> {out}", flush=True)

@@ -29,7 +29,7 @@ repro.store.remote) — merged four ways under the same budget:
 warm-run remote expert bytes must be **< 2%** of the cold run's, the
 warm merge must beat the no-cache merge by **>= 2x** wall time, and the
 warm output must be bit-identical to the flat-local golden.  Emits a
-JSON summary (``bench_remote_store.json`` or ``$REPRO_BENCH_JSON``).
+JSON summary (``benchmarks/out/bench_remote_store.json`` or ``$REPRO_BENCH_JSON``).
 """
 from __future__ import annotations
 
@@ -42,7 +42,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from benchmarks.harness import bench_mb, cleanup, Csv, fresh_dir, model_shapes
+from benchmarks.harness import bench_mb, cleanup, Csv, fresh_dir, model_shapes, summary_path
 from repro.api import MergeSpec, Session
 from repro.store.iostats import measure
 
@@ -188,9 +188,7 @@ def run(
         }
     for ws in (ws_local, ws_nc, ws_t):
         cleanup(ws)
-    out = json_path or os.environ.get(
-        "REPRO_BENCH_JSON", "bench_remote_store.json"
-    )
+    out = summary_path("bench_remote_store", json_path)
     with open(out, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"# remote_store json summary -> {out}", flush=True)

@@ -39,7 +39,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from benchmarks.bench_pipeline import storage_profile
-from benchmarks.harness import Csv, bench_mb, build_zoo, cleanup, fresh_dir
+from benchmarks.harness import Csv, bench_mb, build_zoo, cleanup, fresh_dir, summary_path
 from repro.api import MergeService, MergeSpec, Session
 from repro.store.iostats import IOStats
 
@@ -177,8 +177,7 @@ def run(
                     }
                     csv.row(*row.values())
                     summary["results"].append(row)
-    out = json_path or os.environ.get("REPRO_BENCH_JSON",
-                                      "bench_service.json")
+    out = summary_path("bench_service", json_path)
     with open(out, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"# service json summary -> {out}", flush=True)

@@ -25,6 +25,22 @@ def bench_mb() -> float:
     return float(os.environ.get("REPRO_BENCH_MB", "8"))
 
 
+#: benchmark JSON summaries land here (gitignored), never in the CWD
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+
+
+def summary_path(name: str, override: str = None) -> str:
+    """Where a benchmark writes its JSON summary: an explicit ``--json``
+    path wins, then ``$REPRO_BENCH_JSON``, else
+    ``benchmarks/out/<name>.json`` — keeping artifacts out of the repo
+    root so a bench run never dirties the working tree."""
+    out = override or os.environ.get("REPRO_BENCH_JSON")
+    if out:
+        return out
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, f"{name}.json")
+
+
 def model_shapes(total_mb: float) -> Dict[str, Tuple[int, ...]]:
     """Transformer-shaped tensor inventory summing to ~total_mb."""
     # distribute: 70% mlp, 20% attn, 10% embed across 24 layers

@@ -16,6 +16,7 @@ from benchmarks import (
     bench_blocksize,
     bench_conflict_ablation,
     bench_budget,
+    bench_integrity,
     bench_merge_compute,
     bench_operators,
     bench_overheads,
@@ -70,6 +71,10 @@ ALL = {
     "remote_store": lambda fast: bench_remote_store.run(
         k=4 if fast else 8,
         total_mb=2.0 if fast else None),
+    "integrity": lambda fast: bench_integrity.run(
+        k=4 if fast else 8,
+        total_mb=2.0 if fast else None,
+        repeats=2 if fast else 3),
     "recovery": lambda fast: bench_recovery.run(
         k=4 if fast else 8,
         total_mb=2.0 if fast else None),

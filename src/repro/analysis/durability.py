@@ -17,7 +17,10 @@ Repo-wide, the pass flags drift between ``chaos.CRASH_POINTS`` and the
 actual ``chaos_point("...")`` call sites, in both directions: a
 registered point with no live call site is dead coverage; an
 unregistered name at a call site can never be armed by the chaos
-harness.
+harness.  The same two-way drift check covers the corruption-injection
+registry — ``chaos.CORRUPTION_POINTS`` vs ``chaos_corrupt("...")``
+call sites — so the integrity tests' corruption sweep and the data
+path can never silently diverge.
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ from typing import Dict, List, Tuple
 
 from repro.analysis.findings import Finding
 from repro.analysis.source import SourceFile
-from repro.testing.chaos import CRASH_POINTS
+from repro.testing.chaos import CORRUPTION_POINTS, CRASH_POINTS
 
 PASS_ID = "durability"
 FSYNC_WAIVER = "fsync-ok"
@@ -47,10 +50,20 @@ def run(sf: SourceFile) -> List[Finding]:
     return findings
 
 
+#: (call-site function name, registry tuple, registry symbol, armed-verb)
+_REGISTRIES = (
+    ("chaos_point", CRASH_POINTS, "CRASH_POINTS", "armed"),
+    ("chaos_corrupt", CORRUPTION_POINTS, "CORRUPTION_POINTS", "injected"),
+)
+
+
 def run_repo(files: List[SourceFile]) -> List[Finding]:
-    """Cross-file check: CRASH_POINTS registry vs call-site drift."""
+    """Cross-file check: chaos registries vs call-site drift, both ways,
+    for the crash-point *and* the corruption-point registry."""
     findings: List[Finding] = []
-    sites: Dict[str, Tuple[str, int]] = {}
+    sites: Dict[str, Dict[str, Tuple[str, int]]] = {
+        fn: {} for fn, _pts, _sym, _verb in _REGISTRIES
+    }
     registry_file = None
     for sf in files:
         if sf.path.endswith("testing/chaos.py"):
@@ -63,30 +76,30 @@ def run_repo(files: List[SourceFile]) -> List[Finding]:
                 name = node.func.id
             elif isinstance(node.func, ast.Attribute):
                 name = node.func.attr
-            if name != "chaos_point" or not node.args:
+            if name not in sites or not node.args:
                 continue
             arg = node.args[0]
             if not (isinstance(arg, ast.Constant)
                     and isinstance(arg.value, str)):
                 continue
-            point = arg.value
-            sites.setdefault(point, (sf.path, node.lineno))
-            if point not in CRASH_POINTS:
+            sites[name].setdefault(arg.value, (sf.path, node.lineno))
+    for fn, points, symbol, verb in _REGISTRIES:
+        for point, (path, lineno) in sorted(sites[fn].items()):
+            if point not in points:
                 findings.append(Finding(
-                    pass_id=PASS_ID, path=sf.path, line=node.lineno,
-                    symbol="chaos_point",
-                    message="chaos_point(%r) is not registered in "
-                            "chaos.CRASH_POINTS — it can never be armed"
-                            % point,
+                    pass_id=PASS_ID, path=path, line=lineno, symbol=fn,
+                    message="%s(%r) is not registered in chaos.%s — it "
+                            "can never be %s" % (fn, point, symbol, verb),
                 ))
-    for point in CRASH_POINTS:
-        if point not in sites:
-            path = registry_file.path if registry_file else "testing/chaos.py"
-            findings.append(Finding(
-                pass_id=PASS_ID, path=path, line=1, symbol="CRASH_POINTS",
-                message="registered crash point %r has no live "
-                        "chaos_point() call site" % point,
-            ))
+        for point in points:
+            if point not in sites[fn]:
+                path = (registry_file.path if registry_file
+                        else "testing/chaos.py")
+                findings.append(Finding(
+                    pass_id=PASS_ID, path=path, line=1, symbol=symbol,
+                    message="registered point %r has no live %s() call "
+                            "site" % (point, fn),
+                ))
     return findings
 
 

@@ -120,6 +120,7 @@ class WindowOptions:
         pipeline: Optional[PipelineConfig] = None,
         prefer_packed: Union[bool, str] = True,
         tier_billing: bool = False,
+        verify=True,
     ):
         self.shared_reads = shared_reads
         self.shared_budget = shared_budget
@@ -131,6 +132,11 @@ class WindowOptions:
         )
         self.pipeline = pipeline
         self.prefer_packed = prefer_packed
+        #: verify-on-read knob forwarded to execute_merge: True (default)
+        #: enforces the block-integrity contract on every tier, a
+        #: repro.store.integrity.VerifyPolicy opts tiers out selectively,
+        #: False disables (trusted-local benchmarking only)
+        self.verify = verify
         # tier-aware planner billing for remote-backed experts: warm-tier
         # blocks bill below full price, so a fixed budget admits more
         # blocks as caches fill.  Opt-in because it intentionally changes
@@ -372,6 +378,9 @@ class MergeService(WorkspaceOps):
         start: bool = True,
         disk_cache_max_bytes: Optional[int] = None,
         max_job_attempts: int = DEFAULT_MAX_JOB_ATTEMPTS,
+        verify=True,
+        scrub_idle_s: Optional[float] = None,
+        scrub_rate_mbps: float = 0.0,
     ):
         # scoped I/O accounting: a service gets its own IOStats unless
         # the caller opts into a shared (e.g. GLOBAL_STATS) instance
@@ -396,6 +405,9 @@ class MergeService(WorkspaceOps):
             max_open_readers=max_open_readers, poll_s=poll_s,
             owns_substrate=True,
             max_job_attempts=max_job_attempts,
+            verify=verify,
+            scrub_idle_s=scrub_idle_s,
+            scrub_rate_mbps=scrub_rate_mbps,
         )
         if recovery is not None:
             self._resume_states.update(recovery.get("resumable", {}))
@@ -446,6 +458,9 @@ class MergeService(WorkspaceOps):
         poll_s: float = 0.05,
         owns_substrate: bool = True,
         max_job_attempts: int = DEFAULT_MAX_JOB_ATTEMPTS,
+        verify=True,
+        scrub_idle_s: Optional[float] = None,
+        scrub_rate_mbps: float = 0.0,
     ) -> None:
         self.snapshots = snapshots
         self.catalog = catalog
@@ -470,8 +485,16 @@ class MergeService(WorkspaceOps):
             shared_reads=shared_reads, compute=compute, coalesce=coalesce,
             analyze=analyze, cache_max_bytes=cache_max_bytes,
             pipeline=pipeline, prefer_packed=prefer_packed,
-            tier_billing=tier_billing,
+            tier_billing=tier_billing, verify=verify,
         )
+        #: idle-time background scrub (mergefsck): when set, an idle
+        #: scheduler runs a repairing fsck pass over the workspace every
+        #: ``scrub_idle_s`` seconds of quiet — the ZFS-scrub counterpart
+        #: to verify-on-read, catching rot in data no merge is touching
+        self.scrub_idle_s = scrub_idle_s
+        self.scrub_rate_mbps = float(scrub_rate_mbps)
+        self._last_scrub = time.monotonic()  # scheduler thread only
+        self._scrub_report: Optional[Dict[str, Any]] = None  # guarded-by: _cond
         self.persistent_cache = persistent_cache
         self.max_window_jobs = max(1, int(max_window_jobs))
         self.max_open_readers = max(1, int(max_open_readers))
@@ -587,12 +610,17 @@ class MergeService(WorkspaceOps):
                             self._fail_handle(job.handle, e)
                     busy = False
                 if not busy:
+                    self._maybe_scrub()
                     # nothing ran this cycle: any pending jobs are
                     # admission-held — sleep until a submit notifies or
                     # the poll interval re-checks admission (no spin)
                     with self._cond:
                         if not self._stop.is_set():
                             self._cond.wait(timeout=self.poll_s)
+                else:
+                    # work ran: push the next idle scrub out a full
+                    # interval so scrubbing never competes with merges
+                    self._last_scrub = time.monotonic()
         finally:
             self.catalog.close()  # this thread's sqlite connection
 
@@ -1261,6 +1289,10 @@ class MergeService(WorkspaceOps):
                     f"{job.attempts if job else '?'} execution(s) died: "
                     f"{error}"
                 )
+                # chain the final attempt's failure so callers can
+                # introspect the typed cause (e.g. CorruptBlockError
+                # provenance after an unrepairable-source merge)
+                quarantine_err.__cause__ = error
                 updates.append((h.job_id, {
                     "state": JobState.QUARANTINED,
                     "error": str(quarantine_err),
@@ -1628,6 +1660,7 @@ class MergeService(WorkspaceOps):
                         txn=self.txn,
                         compute=opts.compute,
                         coalesce=opts.coalesce,
+                        verify=getattr(opts, "verify", True),
                         expert_readers=expert_readers,
                         pipeline=opts.pipeline,
                         cancel=cancel,
@@ -1851,14 +1884,48 @@ class MergeService(WorkspaceOps):
         """Job table view (catalog-backed; survives restarts)."""
         return self.catalog.list_jobs(state=state, tenant=tenant)
 
+    # ------------------------------------------------------- mergefsck scrub
+    def _maybe_scrub(self) -> None:
+        """Scheduler-thread hook: run a repairing fsck pass when the
+        service has been idle for ``scrub_idle_s``.  Disabled (None) by
+        default; scrub failures never take down the scheduler."""
+        if self.scrub_idle_s is None:
+            return
+        now = time.monotonic()
+        if now - self._last_scrub < self.scrub_idle_s:
+            return
+        self._last_scrub = now
+        try:
+            self.scrub(repair=True)
+        # broad-except-ok: the scrubber is best-effort background
+        # hygiene; a failed pass is reported via status(), not by
+        # killing the scheduler thread
+        except Exception as e:
+            with self._cond:
+                self._scrub_report = {"error": str(e)}
+
+    def scrub(self, repair: bool = True) -> Dict[str, Any]:
+        """Run mergefsck over the workspace now (also available as
+        ``merge_cli fsck``): re-hashes snapshots, packed extents, and
+        disk-cache extents against their cataloged contracts, repairing
+        or quarantining what it can (see :mod:`repro.store.fsck`).  The
+        latest report is kept and surfaced in :meth:`status`."""
+        report = self.fsck(repair=repair, rate_mbps=self.scrub_rate_mbps)
+        doc = report.to_dict()
+        with self._cond:
+            self._scrub_report = doc
+        return doc
+
     def status(self) -> Dict[str, Any]:
         """Service health snapshot: in-memory job-state counts, pending
         queue depth, budget-pool usage, sids holding a validated resume
-        state (crashed work awaiting its next attempt), and quarantined
-        job ids (catalog-backed, so restarts are included)."""
+        state (crashed work awaiting its next attempt), quarantined job
+        ids (catalog-backed, so restarts are included), and the latest
+        background-scrub report (None until a scrub has run)."""
         with self._cond:
             jobs = list(self._jobs.values())
             pending = len(self._pending)
+            scrub_report = self._scrub_report
         counts: Dict[str, int] = {}
         for j in jobs:
             s = j.handle.status
@@ -1873,4 +1940,5 @@ class MergeService(WorkspaceOps):
                 r["job_id"]
                 for r in self.catalog.list_jobs(state=JobState.QUARANTINED)
             ],
+            "scrub": scrub_report,
         }

@@ -148,6 +148,7 @@ class Session(WorkspaceOps):
         pipeline: Optional[PipelineConfig] = None,
         prefer_packed: Union[bool, str] = True,
         tier_billing: bool = False,
+        verify: Any = True,
     ) -> List[MergeResult]:
         """Plan and execute every queued job, sharing expert block reads.
 
@@ -184,6 +185,14 @@ class Session(WorkspaceOps):
         selection — outputs can differ from an all-local run of the
         same spec (the default keeps selections, and therefore bytes,
         identical to flat local reads).
+
+        ``verify`` controls block verify-on-read against the catalog's
+        content hashes (docs/STORAGE.md): ``True`` (default) verifies
+        remote/disk-cache and packed reads with read-repair, ``False``
+        disables verification, or pass a
+        :class:`~repro.store.integrity.VerifyPolicy` to pick tiers
+        (e.g. ``VerifyPolicy(flat=True)`` to also check local flat
+        reads).
         Returns results in submission order; handles cancelled while
         still queued are dropped from the batch (and from the results).
         """
@@ -205,6 +214,7 @@ class Session(WorkspaceOps):
             pipeline=pipeline,
             prefer_packed=prefer_packed,
             tier_billing=tier_billing,
+            verify=verify,
         )
         # one atomic group: the whole batch is a single scheduling window
         # (plan-together semantics, batch-wide sid validation)

@@ -118,6 +118,16 @@ class WorkspaceOps:
     def verify(self, sid: str) -> bool:
         return verify_snapshot(self.snapshots, sid)
 
+    def fsck(self, repair: bool = False, rate_mbps: float = 0.0):
+        """mergefsck: scrub every store of this workspace (models,
+        remote stubs, snapshots, packed layouts, disk cache, journals)
+        against the block-integrity contract.  Returns a
+        :class:`repro.store.fsck.FsckReport`; see that module for what
+        each pass checks and what ``repair`` may mutate."""
+        from repro.store.fsck import fsck as _fsck
+
+        return _fsck(self.snapshots, repair=repair, rate_mbps=rate_mbps)
+
     # ----------------------------------------------------------------- data
     def load(self, model_id: str) -> Dict[str, np.ndarray]:
         return load_model_arrays(self.snapshots.models, model_id)

@@ -46,6 +46,7 @@ from repro.core.delta_iterator import DeltaIterator
 from repro.core.operators import apply_operator, dare_mask_batch
 from repro.core.plan import MergePlan
 from repro.core.transactions import TransactionManager
+from repro.store.integrity import VerifyPolicy, attach_verifier
 from repro.store.iostats import IOStats
 from repro.store.journal import ResumeState
 from repro.store.snapshot import SnapshotStore, WriteBehindWriter
@@ -227,6 +228,7 @@ def execute_merge(
     compute: str = "stream",
     validate: bool = True,
     enforce_budget: bool = True,
+    verify=True,
     expert_readers: Optional[Dict[str, object]] = None,
     pipeline: Optional[PipelineConfig] = None,
     cancel: Optional[threading.Event] = None,
@@ -252,6 +254,17 @@ def execute_merge(
     snapshot is published.  ``progress`` is called as
     ``progress(blocks_done, blocks_total)`` as output blocks retire (per
     tensor on the synchronous engines, per window on the pipelined one).
+
+    ``verify`` enables verify-on-read (:mod:`repro.store.integrity`):
+    every block read during the merge is checked against the catalog's
+    ANALYZE block hash (packed extents against their content-hash keys),
+    with read-repair on the tiered/packed paths and a typed
+    :class:`~repro.store.integrity.CorruptBlockError` when repair is
+    impossible.  ``True`` (default) verifies every tier; pass a
+    :class:`~repro.store.integrity.VerifyPolicy` to opt flat-local reads
+    out of hashing on trusted hot paths; ``False`` disables entirely.
+    Models without catalog analysis at this block size are served
+    unverified (no contract exists for them).
 
     ``resume`` is a validated :class:`~repro.store.journal.ResumeState`
     (from ``TransactionManager.recover()`` / ``prepare_resume``): the
@@ -353,6 +366,23 @@ def execute_merge(
         [base_reader, *expert_readers.values()]
     )
     evict_refetch_before = sum(r.evict_refetch_bytes for r in tiered_readers)
+    # -- verify-on-read (repro.store.integrity) --------------------------
+    # attach a catalog-hash verifier per reader (packed members instead
+    # toggle their layout's extent self-check); a disabled policy
+    # explicitly detaches, so injected readers reused across windows
+    # honor this window's knob
+    verify_policy = VerifyPolicy.coerce(verify)
+    verifiers = []
+    for mid, r in [(plan.base_id, base_reader), *expert_readers.items()]:
+        v = attach_verifier(r, catalog, mid, plan.block_size, verify_policy)
+        if v is not None:
+            verifiers.append(v)
+    # read-repair traffic (corrupt cache extents refilled, corrupt packed
+    # extents served from flat sources) widens budget slack below — the
+    # plan could not have priced corruption in
+    repair_before = sum(
+        getattr(r, "repair_bytes", 0) for r in tiered_readers
+    ) + sum(getattr(l, "repair_bytes", 0) for l in merge_layouts)
     if compute == "pipelined" and pipeline is None:
         pipeline = (
             PipelineConfig.for_remote()
@@ -480,6 +510,14 @@ def execute_merge(
                     sum(r.evict_refetch_bytes for r in tiered_readers)
                     - evict_refetch_before
                 )
+            if tiered_readers or merge_layouts:
+                # read-repair refetches (expert_repair) are honest extra
+                # bytes forced by detected corruption, never plannable
+                slack += (
+                    sum(getattr(r, "repair_bytes", 0) for r in tiered_readers)
+                    + sum(getattr(l, "repair_bytes", 0) for l in merge_layouts)
+                    - repair_before
+                )
             if realized_expert_bytes > plan.c_expert_hat + slack:
                 raise RuntimeError(
                     f"budget soundness violated: realized expert bytes "
@@ -541,6 +579,17 @@ def execute_merge(
         "coalesce": coalesce,
         "resumed_blocks": sum(resumed_from.values()),
     }
+    if verify_policy is not None:
+        run_stats["verify"] = {
+            "verified_blocks": sum(v.verified_blocks for v in verifiers),
+            "repaired_blocks": sum(v.repaired_blocks for v in verifiers),
+            "corrupt_blocks": sum(v.corrupt_blocks for v in verifiers),
+            "repair_bytes": (
+                sum(getattr(r, "repair_bytes", 0) for r in tiered_readers)
+                + sum(getattr(l, "repair_bytes", 0) for l in merge_layouts)
+                - repair_before
+            ),
+        }
     if pipe_stats is not None:
         run_stats["pipeline"] = pipe_stats
     return MergeResult(sid, manifest, run_stats)

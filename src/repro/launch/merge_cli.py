@@ -61,6 +61,21 @@ Crash recovery (docs/RECOVERY.md)::
     merge_cli resume --workspace WS SID          # resume + commit SID
     merge_cli resume --workspace WS SID --discard
 
+Integrity scrubbing (docs/STORAGE.md, mergefsck)::
+
+    merge_cli fsck --workspace WS                # detect + repair
+    merge_cli fsck --workspace WS --check        # detect only; exit 1
+                                                 # on any damage found
+    merge_cli fsck --workspace WS --rate-mbps 50 [--json]
+
+``fsck`` re-hashes every store against the catalog/manifest integrity
+contract — flat checkpoints and snapshots vs their MODEL.json hashes,
+packed extents vs their content-hash keys (corrupt ones are
+quarantined so reads fall back to the flat source), disk-cache extents
+vs their filename digests (corrupt ones are dropped and refill from
+remote), plus orphaned-journal and remote-stub reachability checks.
+Exit status is non-zero while unrepaired damage remains.
+
 A merge killed mid-execution (power loss, OOM-kill) leaves a
 block-level progress journal; ``resume`` validates the staged prefix
 and re-reads only the residual blocks.  The ``--chaos-crash POINT`` /
@@ -93,7 +108,7 @@ from repro.core.executor import PipelineConfig
 from repro.store.iostats import measure
 
 SUBCOMMANDS = ("repack", "layouts", "delete", "serve", "submit", "status",
-               "cancel", "remote", "cache", "resume")
+               "cancel", "remote", "cache", "resume", "fsck")
 
 
 # --------------------------------------------------------------- job spool
@@ -625,6 +640,42 @@ def _cmd_resume(argv) -> None:
         mp.close()
 
 
+def _cmd_fsck(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="merge_cli fsck",
+        description="mergefsck: scrub every store of a workspace against "
+                    "the block-integrity contract (docs/STORAGE.md) — "
+                    "models, snapshots, packed layouts, disk cache, "
+                    "journals, remote stubs.",
+    )
+    ap.add_argument("--workspace", required=True)
+    ap.add_argument("--check", action="store_true",
+                    help="detect only (no cache drops / journal removal); "
+                         "exit 1 when any damage is found")
+    ap.add_argument("--repair", action="store_true",
+                    help="explicit repair mode (the default when --check "
+                         "is not given; kept for scripting clarity)")
+    ap.add_argument("--rate-mbps", type=float, default=0.0,
+                    help="throttle scrub I/O to this many MB/s (0 = "
+                         "unthrottled)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full report as JSON instead of text")
+    args = ap.parse_args(argv)
+    if args.check and args.repair:
+        raise SystemExit("--check and --repair are mutually exclusive")
+    sess = Session(args.workspace)
+    try:
+        report = sess.fsck(repair=not args.check, rate_mbps=args.rate_mbps)
+    finally:
+        sess.close()
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        print(report.summary())
+    if report.exit_code():
+        raise SystemExit(report.exit_code())
+
+
 def _run_specs(args) -> None:
     specs = load_spec_file(args.spec)
     sess = Session(args.workspace, block_size=args.block_size)
@@ -689,6 +740,8 @@ def main() -> None:
             return _cmd_cache(argv)
         if cmd == "resume":
             return _cmd_resume(argv)
+        if cmd == "fsck":
+            return _cmd_fsck(argv)
         return _cmd_delete(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--workspace", required=True)

@@ -20,6 +20,14 @@ mirroring the paper's cost decomposition (§3.2):
               part of the budget-enforced C_expert term (the budget
               bounds cold fetches, §3.2) but they are real local I/O, so
               they appear in ``total_expert_bytes``.
+    expert_repair — expert bytes refetched/re-read to *repair* a block
+              that failed verify-on-read (repro.store.integrity): a
+              corrupt disk-cache extent refilled from remote, or a
+              quarantined packed extent served from its flat source.
+              Counted into C_expert (they are cold moved bytes) but kept
+              separate so repair traffic is directly visible and never
+              double-counted with ``expert_remote`` — each physical
+              fetch is billed to exactly one category.
     out     — writes of the merged output      (C_out)
     meta    — catalog / manifest / hash I/O    (C_meta)
     repack  — one-time PackedStore repack I/O (amortized, like analyze)
@@ -50,12 +58,14 @@ from typing import Dict, Iterator
 
 CATEGORIES = (
     "base", "expert", "expert_packed", "expert_remote", "expert_disk",
-    "out", "meta", "analyze", "repack", "journal", "other",
+    "expert_repair", "out", "meta", "analyze", "repack", "journal", "other",
 )
 
 #: every category that serves plan-selected expert blocks, regardless of
 #: which storage tier the bytes physically came from
-EXPERT_CATEGORIES = ("expert", "expert_packed", "expert_remote", "expert_disk")
+EXPERT_CATEGORIES = (
+    "expert", "expert_packed", "expert_remote", "expert_disk", "expert_repair",
+)
 
 #: cache tiers record_cache accepts — tier names, NOT categories
 TIERS = ("ram", "disk")
@@ -151,14 +161,17 @@ class IOStats:
     @property
     def c_expert(self) -> int:
         """Budget-enforced expert-read cost term: flat checkpoint reads,
-        physical packed-extent reads, and cold remote fetches (all move
-        bytes the budget B governs).  Warm-tier hits — RAM (recorded as
-        zero I/O) and local-disk extent-cache reads (``expert_disk``) —
-        are deliberately excluded: the budget bounds cold moved bytes."""
+        physical packed-extent reads, cold remote fetches, and
+        read-repair refetches (all move bytes the budget B governs —
+        repair traffic widens executor slack the way evict-refetches
+        do).  Warm-tier hits — RAM (recorded as zero I/O) and
+        local-disk extent-cache reads (``expert_disk``) — are
+        deliberately excluded: the budget bounds cold moved bytes."""
         return (
             self.bytes_read("expert")
             + self.bytes_read("expert_packed")
             + self.bytes_read("expert_remote")
+            + self.bytes_read("expert_repair")
         )
 
     @property
@@ -318,6 +331,10 @@ class IOStats:
             "expert_disk_read": (
                 _get(now, "read", "expert_disk")
                 - _get(before, "read", "expert_disk")
+            ),
+            "expert_repair_read": (
+                _get(now, "read", "expert_repair")
+                - _get(before, "read", "expert_repair")
             ),
             "out_written": _get(now, "written", "out") - _get(before, "written", "out"),
             # "meta" keeps its historical definition (meta + other + now

@@ -63,11 +63,17 @@ import numpy as np
 
 from repro.core import blocks as blk
 from repro.store import dtypes
+from repro.store.integrity import CorruptBlockError
 from repro.store.iostats import GLOBAL_STATS, IOStats
 from repro.store.tensorstore import CheckpointStore, TensorSpec
+from repro.testing.chaos import chaos_corrupt
 
 LAYOUT_MANIFEST = "LAYOUT.json"
 EXTENT_FILE = "extents.bin"
+#: extent keys verified corrupt and excluded from serving (reads fall
+#: back to the member's flat source checkpoint); written by the read
+#: path and by fsck, honored by every subsequent open of the layout
+QUARANTINE_FILE = "QUARANTINE.json"
 
 #: lossy downcasts the repack pass may apply, per source dtype
 _DOWNCASTS = {"float32": ("float16", "bfloat16")}
@@ -703,6 +709,24 @@ class PackedLayout:
         self._base_reader = None  # guarded-by: _base_lock
         self._base_lock = threading.Lock()
         self._closed = False  # guarded-by: _lock
+        #: verify decoded extents against their content-hash key
+        #: (repro.store.integrity contract; lossless encodings only —
+        #: a downcast extent cannot reproduce its pre-encoding hash)
+        self.verify = True
+        #: flat-source bytes read to serve quarantined/corrupt extents;
+        #: folded into executor budget slack like reread_bytes
+        self.repair_bytes = 0  # guarded-by: _lock
+        #: extent keys verified corrupt — never served again; loaded
+        #: from QUARANTINE.json, persisted on every new quarantine
+        self.quarantined: set = set()  # guarded-by: _lock
+        try:
+            with open(os.path.join(ldir, QUARANTINE_FILE), "rb") as f:
+                self.quarantined = set(json.loads(f.read()).get("extents", []))
+        except (FileNotFoundError, ValueError):
+            pass
+        self._quar_write_lock = threading.Lock()
+        self._flat_readers: Dict[str, object] = {}  # guarded-by: _flat_lock
+        self._flat_lock = threading.Lock()
 
     # -- members -----------------------------------------------------------
     def member_ids(self) -> List[str]:
@@ -735,7 +759,10 @@ class PackedLayout:
                 f"short extent read in layout {self.layout_id} "
                 f"[{off}:{off+nbytes}]: got {len(data)}"
             )
-        return data
+        # at-rest bit-rot in extents.bin lands here, after the short-read
+        # check: a corrupt payload has plausible framing and is only
+        # caught by decode/content-hash verification downstream
+        return chaos_corrupt("packed:extent", data)
 
     def _note_read(self, key: str, phys: int) -> None:
         with self._lock:
@@ -744,8 +771,42 @@ class PackedLayout:
             else:
                 self._read_keys.add(key)
 
+    def _decode_verified(self, key: str, ent: Tuple, payload: bytes) -> bytes:
+        """Decode one extent payload and enforce the integrity contract:
+        the decoded logical bytes must hash back to the extent's own
+        content-hash key (lossless encodings only — a ``cast:`` extent
+        cannot reproduce its pre-encoding hash).  Undecodable or
+        hash-mismatched extents are quarantined and raise
+        :class:`~repro.store.integrity.CorruptBlockError` so the member
+        reader can fall back to the flat source."""
+        _off, _phys, logical, encoding, dtype_name, _refs = ent
+        try:
+            raw = decode_extent(payload, encoding, dtype_name, logical)
+        except (IOError, ValueError, zlib.error) as e:
+            self.quarantine_extent(key)
+            raise CorruptBlockError(
+                f"undecodable extent {key} in layout {self.layout_id} "
+                f"(encoding {encoding!r}): {e}",
+                tier="packed",
+                extent_key=key,
+            ) from e
+        if self.verify and "cast:" not in encoding:
+            expected = key.split("~", 1)[0]
+            actual = content_hash(raw)
+            if actual != expected:
+                self.quarantine_extent(key)
+                raise CorruptBlockError(
+                    f"corrupt extent {key} in layout {self.layout_id}: "
+                    f"decoded bytes hash {actual}, key says {expected}",
+                    tier="packed",
+                    extent_key=key,
+                    expected=expected,
+                    actual=actual,
+                )
+        return raw
+
     def _read_decode(self, key: str, ent: Tuple, category: str) -> bytes:
-        off, phys, logical, encoding, dtype_name, _refs = ent
+        off, phys, _logical, _encoding, _dtype_name, _refs = ent
         payload = self._pread(off, phys)
         # the *physical* (possibly compressed/downcast) bytes are what
         # moved from storage — that is what the category counts
@@ -753,7 +814,7 @@ class PackedLayout:
             "expert_packed" if category == "expert" else category, phys
         )
         self._note_read(key, phys)
-        return decode_extent(payload, encoding, dtype_name, logical)
+        return self._decode_verified(key, ent, payload)
 
     def read_extent(self, key: str, category: str) -> bytes:
         """Logical raw bytes of one extent; multi-consumer extents are
@@ -817,11 +878,122 @@ class PackedLayout:
                 ent = self.extents[k]
                 lo = off - start
                 self._note_read(k, ent[1])
-                out[k] = decode_extent(
-                    data[lo:lo + ent[1]], ent[3], ent[4], ent[2]
-                )
+                out[k] = self._decode_verified(k, ent, data[lo:lo + ent[1]])
             i = j
         return out
+
+    # -- quarantine + flat-source fallback ----------------------------------
+    def expected_hash(self, key: str) -> Optional[str]:
+        """The content hash a repaired read must reproduce for this
+        extent — None for lossy (``cast:``) extents, whose key hashes
+        pre-encoding bytes the layout can no longer produce."""
+        ent = self.extents[key]
+        return None if "cast:" in ent[3] else key.split("~", 1)[0]
+
+    def quarantine_extent(self, key: str) -> None:
+        """Mark one extent corrupt, durably: it is dropped from the
+        pinned cache, excluded from every future read (this open and
+        later ones — QUARANTINE.json persists next to the manifest), and
+        its consumers fall back to their flat source checkpoints."""
+        with self._lock:
+            if key in self.quarantined:
+                return
+            self.quarantined.add(key)
+            hit = self._cache.pop(key, None)
+            if hit is not None:
+                self.pinned_bytes -= len(hit)
+        with self._quar_write_lock:
+            with self._lock:
+                snapshot = sorted(self.quarantined)
+            qpath = os.path.join(self.dir, QUARANTINE_FILE)
+            tmp = qpath + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(
+                    {"layout_id": self.layout_id, "extents": snapshot}, f
+                )
+                f.flush()
+                os.fsync(f.fileno())
+            # chaos-ok: losing a quarantine record on crash only means the
+            # same corrupt extent is re-detected (and re-quarantined) on
+            # its next read — the verify contract, not this file, is the
+            # integrity boundary
+            os.replace(tmp, qpath)
+
+    def _flat_reader(self, model_id: str):
+        with self._flat_lock:
+            reader = self._flat_readers.get(model_id)
+            if reader is None:
+                if self.models is None:
+                    raise CorruptBlockError(
+                        f"layout {self.layout_id} cannot repair member "
+                        f"{model_id}: no source CheckpointStore attached",
+                        tier="packed",
+                        model_id=model_id,
+                    )
+                try:
+                    reader = self.models.open_model(model_id)
+                except (OSError, KeyError, ValueError, RuntimeError) as e:
+                    raise CorruptBlockError(
+                        f"layout {self.layout_id} member {model_id} has a "
+                        f"corrupt extent and no readable flat source to "
+                        f"fall back to: {e}",
+                        tier="packed",
+                        model_id=model_id,
+                    ) from e
+                self._flat_readers[model_id] = reader
+            return reader
+
+    def flat_fallback(
+        self,
+        model_id: str,
+        tensor_id: str,
+        block_idx: int,
+        block_size: int,
+        category: str,
+        expected: Optional[str] = None,
+    ) -> np.ndarray:
+        """Serve one block of a quarantined extent from the member's
+        flat source checkpoint (the member's own kind semantics hold:
+        full/delta/adapter flat sources all store the same logical bytes
+        the extent did).  The bytes are verified against ``expected``
+        when the extent was lossless; repair traffic is billed to
+        ``expert_repair`` and tracked in :attr:`repair_bytes`.  Raises
+        :class:`~repro.store.integrity.CorruptBlockError` when no flat
+        source exists or it disagrees with the contract — an
+        unrepairable block must fail the job, never approximate it."""
+        reader = self._flat_reader(model_id)
+        cat = (
+            "expert_repair" if category in ("expert", "expert_packed")
+            else category
+        )
+        try:
+            arr = reader.read_block(tensor_id, block_idx, block_size, cat)
+        except (OSError, KeyError, ValueError) as e:
+            raise CorruptBlockError(
+                f"flat fallback failed for {model_id}/{tensor_id}"
+                f"[{block_idx}] (layout {self.layout_id}): {e}",
+                tier="packed",
+                model_id=model_id,
+                tensor_id=tensor_id,
+                block_idx=block_idx,
+            ) from e
+        raw = np.ascontiguousarray(arr).tobytes()
+        if expected is not None and content_hash(raw) != expected:
+            raise CorruptBlockError(
+                f"flat fallback for {model_id}/{tensor_id}[{block_idx}] "
+                f"does not match the cataloged extent hash {expected} "
+                f"(got {content_hash(raw)}): source checkpoint diverged "
+                f"or is itself corrupt",
+                tier="packed",
+                model_id=model_id,
+                tensor_id=tensor_id,
+                block_idx=block_idx,
+                expected=expected,
+                actual=content_hash(raw),
+            )
+        with self._lock:
+            self.repair_bytes += len(raw)
+        return arr
 
     def base_block(
         self, tensor_id: str, block_idx: int, block_size: int, category: str
@@ -858,6 +1030,10 @@ class PackedLayout:
             if self._base_reader is not None:
                 self._base_reader.close()
                 self._base_reader = None
+        with self._flat_lock:
+            for reader in self._flat_readers.values():
+                reader.close()
+            self._flat_readers.clear()
 
     def __enter__(self):
         return self
@@ -935,7 +1111,21 @@ class PackedModelReader:
             return self.layout.base_block(
                 tensor_id, block_idx, block_size, category
             )
-        raw = self.layout.read_extent(entry[1], category)
+        key = entry[1]
+        if key in self.layout.quarantined:
+            return self.layout.flat_fallback(
+                self.model_id, tensor_id, block_idx, block_size, category,
+                expected=self.layout.expected_hash(key),
+            )
+        try:
+            raw = self.layout.read_extent(key, category)
+        except CorruptBlockError:
+            # the read just quarantined this extent; serve the block from
+            # the flat source (raises again if none exists — unrepairable)
+            return self.layout.flat_fallback(
+                self.model_id, tensor_id, block_idx, block_size, category,
+                expected=self.layout.expected_hash(key),
+            )
         return np.frombuffer(raw, dtype=spec.dtype)
 
     def read_blocks_coalesced(
@@ -966,11 +1156,35 @@ class PackedModelReader:
                 key_blocks.setdefault(entry[1], []).append(b)
         if want_keys:
             spec = self.specs[tensor_id]
-            raws = self.layout.read_extents(want_keys, category)
-            for k, bs in key_blocks.items():
-                arr = np.frombuffer(raws[k], dtype=spec.dtype)
-                for b in bs:
-                    out[b] = arr
+            pending = list(dict.fromkeys(want_keys))
+            while pending:
+                # quarantined keys (pre-existing, or added by a failed
+                # batch below) serve their blocks from the flat source
+                for k in pending:
+                    if k in self.layout.quarantined:
+                        expected = self.layout.expected_hash(k)
+                        for b in key_blocks[k]:
+                            out[b] = self.layout.flat_fallback(
+                                self.model_id, tensor_id, b, block_size,
+                                category, expected=expected,
+                            )
+                pending = [
+                    k for k in pending if k not in self.layout.quarantined
+                ]
+                if not pending:
+                    break
+                try:
+                    raws = self.layout.read_extents(pending, category)
+                except CorruptBlockError:
+                    # every failure quarantines >= 1 key, so this loop
+                    # strictly shrinks ``pending`` and terminates; clean
+                    # extents re-read on retry are honestly re-recorded
+                    continue
+                for k in pending:
+                    arr = np.frombuffer(raws[k], dtype=spec.dtype)
+                    for b in key_blocks[k]:
+                        out[b] = arr
+                break
         return out
 
     def read_tensor(self, tensor_id: str, category: str) -> np.ndarray:

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional
 # and the service's executor-level retry); re-exported for compatibility.
 from repro.store.retry import RetryPolicy  # noqa: F401
 from repro.store.tensorstore import MODEL_MANIFEST, CheckpointStore
+from repro.testing.chaos import chaos_corrupt
 
 
 class RemoteError(IOError):
@@ -166,6 +167,10 @@ class RemoteObjectStore:
             raise RemoteError(
                 f"range [{offset}:{offset + nbytes}] out of bounds for {key!r}"
             )
+        # wire bit-rot happens after the server's own length check: a
+        # corrupt payload arrives with plausible framing and only the
+        # verify-on-read contract (repro.store.integrity) catches it
+        data = chaos_corrupt("remote:get", data)
         self._throttle(len(data))
         with self._lock:
             self.bytes_served += len(data)

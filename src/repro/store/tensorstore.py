@@ -74,6 +74,12 @@ class BlockReaderMixin:
 
     specs: Dict[str, "TensorSpec"]
 
+    #: verify-on-read hook (repro.store.integrity.BlockVerifier or None).
+    #: When attached, every derived block read is checked against the
+    #: cataloged block hash before the bytes reach compute — duck-typed
+    #: so this module stays import-free of the integrity layer.
+    verifier = None
+
     # -- structure -------------------------------------------------------
     def tensor_names(self) -> List[str]:
         return list(self.specs.keys())
@@ -94,6 +100,12 @@ class BlockReaderMixin:
         spec = self.specs[tensor_id]
         rng = blk.block_range(spec.nbytes, block_idx, block_size)
         data = self.read_range(tensor_id, rng.offset, rng.nbytes, category)
+        v = self.verifier
+        if v is not None and block_size == v.block_size:
+            data = v.check(
+                self, tensor_id, block_idx, rng.offset, rng.nbytes, data,
+                category,
+            )
         return np.frombuffer(data, dtype=spec.dtype)
 
     def read_blocks_coalesced(
@@ -145,11 +157,19 @@ class BlockReaderMixin:
                     tensor_id, offset, nbytes, category, waste_nbytes=waste
                 )
             )
+            v = self.verifier
             for r in run_ranges:
                 lo = r.offset - offset
-                out[r.block_idx] = np.frombuffer(
-                    data[lo : lo + r.nbytes], dtype=spec.dtype
-                )
+                chunk = data[lo : lo + r.nbytes]
+                if v is not None and block_size == v.block_size:
+                    # verified per logical block, not per physical run:
+                    # the contract hashes live on the block grid, and a
+                    # repair refetches only the corrupt block's range
+                    chunk = v.check(
+                        self, tensor_id, r.block_idx, r.offset, r.nbytes,
+                        chunk, category,
+                    )
+                out[r.block_idx] = np.frombuffer(chunk, dtype=spec.dtype)
         return out
 
     def read_tensor(self, tensor_id: str, category: str) -> np.ndarray:

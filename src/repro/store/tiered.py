@@ -50,7 +50,7 @@ from repro.store.tensorstore import (
     CheckpointStore,
     TensorSpec,
 )
-from repro.testing.chaos import chaos_point
+from repro.testing.chaos import chaos_corrupt, chaos_point
 
 #: locally cached copy of a remote model's manifest (etag-validated)
 MANIFEST_CACHE = "MODEL.cache.json"
@@ -78,18 +78,51 @@ def _key_hash(content_key: str) -> str:
     return hashlib.blake2b(content_key.encode(), digest_size=16).hexdigest()
 
 
+def _payload_digest(data: bytes) -> str:
+    """Self-check digest embedded in an extent's filename (blake2b-8,
+    same construction as the catalog block hash)."""
+    return hashlib.blake2b(data, digest_size=8).hexdigest()
+
+
+def _parse_ext_name(fname: str) -> Optional[Tuple[str, int, int, Optional[str]]]:
+    """``(kh, offset, nbytes, digest)`` from an extent filename, or None.
+    Accepts both the current 4-part self-verifying form
+    ``kh__offset__nbytes__digest.ext`` and the legacy 3-part form
+    (digest None — length-validated only)."""
+    if not fname.endswith(".ext"):
+        return None
+    parts = fname[: -len(".ext")].split("__")
+    try:
+        if len(parts) == 4:
+            return parts[0], int(parts[1]), int(parts[2]), parts[3]
+        if len(parts) == 3:
+            return parts[0], int(parts[1]), int(parts[2]), None
+    except ValueError:
+        return None
+    return None
+
+
 class DiskExtentCache:
-    """Crash-safe, content-addressed extent cache on local disk.
+    """Crash-safe, content-addressed, *self-verifying* extent cache on
+    local disk.
 
     One extent file per cached byte range, named
-    ``<blake2b(content_key)>__<offset>__<nbytes>.ext`` under a 2-hex
-    fanout directory — the name *is* the index entry, so the in-memory
-    index can always be rebuilt from a directory listing (other
-    processes' fills become visible on rescan).  A read hits when a
-    single cached extent fully covers the requested range; partial
-    overlaps miss and fill a new extent (deterministic coalescing plus
-    plan reuse make warm re-runs exact-key hits, so overlap storage is
-    transient and reclaimed by LRU eviction).
+    ``<blake2b(content_key)>__<offset>__<nbytes>__<payload-digest>.ext``
+    under a 2-hex fanout directory — the name *is* the index entry, so
+    the in-memory index can always be rebuilt from a directory listing
+    (other processes' fills become visible on rescan).  The name is
+    also the extent's integrity contract: rebuild/rescan drop any file
+    whose on-disk length disagrees with the ``nbytes`` in its name
+    (instead of trusting the filename and serving a truncated extent),
+    and every hit re-hashes the payload against the embedded digest —
+    a rotted extent is evicted and the read falls through to remote as
+    a repair fill, never served corrupt.  Legacy 3-part names (no
+    digest) stay readable with length-validation only.
+
+    A read hits when a single cached extent fully covers the requested
+    range; partial overlaps miss and fill a new extent (deterministic
+    coalescing plus plan reuse make warm re-runs exact-key hits, so
+    overlap storage is transient and reclaimed by LRU eviction).
 
     ``max_bytes`` bounds usage: fills evict least-recently-used extents
     (hit reads refresh mtime) until the new extent fits; an extent
@@ -102,13 +135,17 @@ class DiskExtentCache:
         os.makedirs(os.path.join(self.root, _EXT_DIR), exist_ok=True)
         os.makedirs(os.path.join(self.root, _TMP_DIR), exist_ok=True)
         self._lock = threading.Lock()
-        self._index: Dict[str, Dict[Tuple[int, int], int]] = {}  # guarded-by: _lock
+        # extent -> filename payload digest (None for legacy 3-part names)
+        self._index: Dict[str, Dict[Tuple[int, int], Optional[str]]] = {}  # guarded-by: _lock
         self._usage = 0  # guarded-by: _lock
         self._seq = 0  # guarded-by: _lock
         self.hits = 0  # guarded-by: _lock
         self.misses = 0  # guarded-by: _lock
         self.fills = 0  # guarded-by: _lock
         self.evictions = 0  # guarded-by: _lock
+        #: extents dropped because their file length or payload digest
+        #: disagreed with the filename contract (truncation / bit-rot)
+        self.corrupt_dropped = 0  # guarded-by: _lock
         self._inflight: Dict[Tuple[str, int, int], threading.Event] = {}  # guarded-by: _lock
         self._rebuild_index()
 
@@ -116,28 +153,61 @@ class DiskExtentCache:
     def _ext_dir(self, kh: str) -> str:
         return os.path.join(self.root, _EXT_DIR, kh[:2])
 
-    def _ext_path(self, kh: str, offset: int, nbytes: int) -> str:
-        return os.path.join(self._ext_dir(kh), f"{kh}__{offset}__{nbytes}.ext")
+    def _ext_path(
+        self, kh: str, offset: int, nbytes: int, digest: Optional[str]
+    ) -> str:
+        if digest is None:
+            name = f"{kh}__{offset}__{nbytes}.ext"
+        else:
+            name = f"{kh}__{offset}__{nbytes}__{digest}.ext"
+        return os.path.join(self._ext_dir(kh), name)
+
+    def _drop_corrupt(self, path: str) -> None:
+        """Unlink an extent whose content broke the filename contract."""
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        with self._lock:
+            self.corrupt_dropped += 1
+
+    def _scan_dir(
+        self, dirpath: str, files: List[str], kh_filter: Optional[str] = None
+    ) -> Dict[str, Dict[Tuple[int, int], Optional[str]]]:
+        """Parse + length-validate one fanout directory's extent files;
+        corrupt (wrong-length) files are unlinked, not indexed — the
+        rebuild must never resurrect an extent the filename promises but
+        the file cannot honor."""
+        found: Dict[str, Dict[Tuple[int, int], Optional[str]]] = {}
+        for fname in files:
+            parsed = _parse_ext_name(fname)
+            if parsed is None:
+                continue
+            kh, offset, nbytes, digest = parsed
+            if kh_filter is not None and kh != kh_filter:
+                continue
+            path = os.path.join(dirpath, fname)
+            try:
+                if os.stat(path).st_size != nbytes:
+                    self._drop_corrupt(path)
+                    continue
+            except OSError:
+                continue
+            found.setdefault(kh, {})[(offset, nbytes)] = digest
+        return found
 
     def _rebuild_index(self) -> None:
         self._sweep_tmp()
-        index: Dict[str, Dict[Tuple[int, int], int]] = {}
-        usage = 0
+        index: Dict[str, Dict[Tuple[int, int], Optional[str]]] = {}
         ext_root = os.path.join(self.root, _EXT_DIR)
         for dirpath, _dirs, files in os.walk(ext_root):
-            for fname in files:
-                if not fname.endswith(".ext"):
-                    continue
-                try:
-                    kh, off_s, n_s = fname[: -len(".ext")].split("__")
-                    offset, nbytes = int(off_s), int(n_s)
-                except ValueError:
-                    continue
-                index.setdefault(kh, {})[(offset, nbytes)] = nbytes
-                usage += nbytes
+            for kh, entries in self._scan_dir(dirpath, files).items():
+                index.setdefault(kh, {}).update(entries)
         with self._lock:
             self._index = index
-            self._usage = usage
+            self._usage = sum(
+                n for entries in index.values() for (_o, n) in entries
+            )
 
     def _sweep_tmp(self) -> int:
         """GC partial fill files (``tmp/fill-<pid>-<seq>.tmp``) left by
@@ -168,23 +238,19 @@ class DiskExtentCache:
 
     def _rescan(self, kh: str) -> None:
         """Refresh one key's extents from disk (picks up fills by other
-        processes sharing the cache directory)."""
-        entries: Dict[Tuple[int, int], int] = {}
+        processes sharing the cache directory); wrong-length files are
+        dropped here exactly as at full rebuild."""
+        dirpath = self._ext_dir(kh)
         try:
-            names = os.listdir(self._ext_dir(kh))
+            names = os.listdir(dirpath)
         except FileNotFoundError:
             names = []
-        for fname in names:
-            if not fname.startswith(kh) or not fname.endswith(".ext"):
-                continue
-            try:
-                _kh, off_s, n_s = fname[: -len(".ext")].split("__")
-            except ValueError:
-                continue
-            entries[(int(off_s), int(n_s))] = int(n_s)
+        entries = self._scan_dir(dirpath, names, kh_filter=kh).get(kh, {})
         with self._lock:
             old = self._index.get(kh, {})
-            self._usage += sum(entries.values()) - sum(old.values())
+            self._usage += sum(n for (_o, n) in entries) - sum(
+                n for (_o, n) in old
+            )
             self._index[kh] = entries
 
     def _assemble(
@@ -241,12 +307,38 @@ class DiskExtentCache:
                 "misses": self.misses,
                 "fills": self.fills,
                 "evictions": self.evictions,
+                "corrupt_dropped": self.corrupt_dropped,
             }
 
     # -- data path ----------------------------------------------------------
-    def read(self, content_key: str, offset: int, nbytes: int) -> Optional[bytes]:
-        """Serve a range if cached extents cover it without gaps (one
-        extent or a contiguous assembly of several)."""
+    def _remove_extent(self, kh: str, ext: Tuple[int, int]) -> None:
+        with self._lock:
+            ent = self._index.get(kh, {})
+            if ext in ent:
+                del ent[ext]
+                self._usage -= ext[1]
+
+    def read_verified(
+        self, content_key: str, offset: int, nbytes: int,
+        check_digest: bool = True,
+    ) -> Tuple[Optional[bytes], bool]:
+        """Serve a range if cached extents cover it without gaps, after
+        verifying every touched extent against its filename contract.
+
+        Returns ``(data, corrupt_dropped)``: on a digest/length mismatch
+        the offending extent is evicted on the spot and the result is a
+        miss with ``corrupt_dropped=True`` — the caller refills from
+        remote and bills the refetch as *repair* traffic, not a plain
+        cold miss.
+
+        ``check_digest=False`` skips the payload-digest re-hash (length
+        validation still applies): the tiered reader passes it when a
+        catalog :class:`~repro.store.integrity.BlockVerifier` is attached
+        above, whose end-to-end block hashes strictly subsume the
+        extent's write-consistency digest — each byte is then hashed
+        once per read, not twice, and a corrupt extent is still caught
+        (and evicted via :meth:`invalidate`) by the catalog check.
+        """
         kh = _key_hash(content_key)
         plan = self._assemble(kh, offset, nbytes)
         if plan is None:
@@ -255,32 +347,129 @@ class DiskExtentCache:
         if plan is None:
             with self._lock:
                 self.misses += 1
-            return None
+            return None, False
+        with self._lock:
+            digests = dict(self._index.get(kh, {}))
         parts: List[bytes] = []
         for (o, n), lo, hi in plan:
-            path = self._ext_path(kh, o, n)
+            digest = digests.get((o, n))
+            path = self._ext_path(kh, o, n, digest)
             try:
                 with open(path, "rb") as f:
-                    f.seek(lo - o)
-                    chunk = f.read(hi - lo)
+                    if digest is None or not check_digest:
+                        # legacy extent (length-validated at index time),
+                        # or the caller's catalog verifier subsumes the
+                        # digest: serve the requested slice only
+                        f.seek(lo - o)
+                        chunk = f.read(hi - lo)
+                        whole = None
+                    else:
+                        whole = f.read()
+                        chunk = whole[lo - o : hi - o]
                 os.utime(path, None)  # LRU touch
             except (FileNotFoundError, OSError):
                 # evicted (possibly by another process) between index + open
-                with self._lock:
-                    ent = self._index.get(kh, {})
-                    if (o, n) in ent:
-                        del ent[(o, n)]
-                        self._usage -= n
-                    self.misses += 1
-                return None
-            if len(chunk) != hi - lo:
+                self._remove_extent(kh, (o, n))
                 with self._lock:
                     self.misses += 1
-                return None
+                return None, False
+            corrupt = len(chunk) != hi - lo
+            if not corrupt and whole is not None:
+                corrupt = len(whole) != n or _payload_digest(whole) != digest
+            if corrupt:
+                # the file does not honor its own name: evict it rather
+                # than ever serving the bytes
+                self._remove_extent(kh, (o, n))
+                self._drop_corrupt(path)
+                with self._lock:
+                    self.misses += 1
+                return None, True
             parts.append(chunk)
         with self._lock:
             self.hits += 1
-        return parts[0] if len(parts) == 1 else b"".join(parts)
+        return (parts[0] if len(parts) == 1 else b"".join(parts)), False
+
+    def read(self, content_key: str, offset: int, nbytes: int) -> Optional[bytes]:
+        """Verified read without the corruption signal (compat surface)."""
+        data, _dropped = self.read_verified(content_key, offset, nbytes)
+        return data
+
+    def invalidate(
+        self, content_key: str, offset: int, nbytes: int,
+        corrupt: bool = False,
+    ) -> int:
+        """Evict every cached extent overlapping ``[offset,
+        offset+nbytes)`` — read-repair calls this before refetching so a
+        corrupt extent can never serve the repaired range again.
+        ``corrupt=True`` (the read-repair path) counts the drops as
+        ``corrupt_dropped`` rather than plain evictions, so the cache's
+        rot statistics stay truthful when the catalog verifier — not the
+        extent digest — is what caught the damage.  Returns the number
+        of extents removed."""
+        kh = _key_hash(content_key)
+        self._rescan(kh)
+        with self._lock:
+            victims = [
+                (ext, digest)
+                for ext, digest in self._index.get(kh, {}).items()
+                if ext[0] < offset + nbytes and offset < ext[0] + ext[1]
+            ]
+        removed = 0
+        for (o, n), digest in victims:
+            try:
+                os.remove(self._ext_path(kh, o, n, digest))
+            except FileNotFoundError:
+                pass
+            self._remove_extent(kh, (o, n))
+            with self._lock:
+                if corrupt:
+                    self.corrupt_dropped += 1
+                else:
+                    self.evictions += 1
+            removed += 1
+        return removed
+
+    def scrub(self, repair: bool = False, on_bytes=None) -> Dict[str, object]:
+        """Re-validate every cached extent against its filename contract
+        (length always; payload digest when the name carries one) — the
+        mergefsck cache pass.  ``on_bytes(n)`` is invoked per extent read
+        so the caller can rate-limit scrub I/O.  With ``repair=True``
+        corrupt extents are unlinked and dropped from the index (a cache
+        entry is re-fetchable, so dropping *is* the repair); otherwise
+        they are only reported.  Returns scanned/verified/corrupt/
+        repaired counters plus the corrupt file paths and bytes read."""
+        self._rebuild_index()  # adopt other processes' fills; drop bad lengths
+        with self._lock:
+            snapshot = {kh: dict(v) for kh, v in self._index.items()}
+        res: Dict[str, object] = {
+            "scanned": 0, "verified": 0, "corrupt": 0, "repaired": 0,
+            "bytes": 0, "corrupt_paths": [],
+        }
+        for kh in sorted(snapshot):
+            for (offset, nbytes), digest in sorted(snapshot[kh].items()):
+                res["scanned"] += 1
+                path = self._ext_path(kh, offset, nbytes, digest)
+                try:
+                    with open(path, "rb") as f:
+                        data = f.read()
+                except OSError:
+                    continue  # evicted by a concurrent reader/writer
+                res["bytes"] += len(data)
+                if on_bytes is not None:
+                    on_bytes(len(data))
+                ok = len(data) == nbytes and (
+                    digest is None or _payload_digest(data) == digest
+                )
+                if ok:
+                    res["verified"] += 1
+                    continue
+                res["corrupt"] += 1
+                res["corrupt_paths"].append(path)
+                if repair:
+                    self._drop_corrupt(path)
+                    self._remove_extent(kh, (offset, nbytes))
+                    res["repaired"] += 1
+        return res
 
     def put(self, content_key: str, offset: int, data: bytes) -> bool:
         """Cache one extent (atomic rename publish). Returns False when
@@ -291,7 +480,13 @@ class DiskExtentCache:
         if self.max_bytes is not None:
             self._evict_to(self.max_bytes - nbytes)
         kh = _key_hash(content_key)
-        path = self._ext_path(kh, offset, nbytes)
+        # the filename contract is sealed over the CLEAN payload before
+        # the at-rest corruption point below: injected rot lands in the
+        # file body, disagrees with the embedded digest, and must be
+        # caught by the next verified read
+        digest = _payload_digest(data)
+        data = chaos_corrupt("cache:extent", data)
+        path = self._ext_path(kh, offset, nbytes, digest)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with self._lock:
             self._seq += 1
@@ -308,7 +503,7 @@ class DiskExtentCache:
         with self._lock:
             ent = self._index.setdefault(kh, {})
             if (offset, nbytes) not in ent:
-                ent[(offset, nbytes)] = nbytes
+                ent[(offset, nbytes)] = digest
                 self._usage += nbytes
             self.fills += 1
         return True
@@ -368,11 +563,11 @@ class DiskExtentCache:
                     st = os.stat(path)
                 except FileNotFoundError:
                     continue
-                try:
-                    kh, off_s, n_s = fname[: -len(".ext")].split("__")
-                    ext = (int(off_s), int(n_s))
-                except ValueError:
+                parsed = _parse_ext_name(fname)
+                if parsed is None:
                     continue
+                kh, offset, nbytes, _digest = parsed
+                ext = (offset, nbytes)
                 victims.append((st.st_mtime, st.st_size, path, kh, ext))
         victims.sort()
         freed = 0
@@ -435,6 +630,15 @@ class TieredReader(BlockReaderMixin):
         #: when this reader first touched the tensor (mid-run eviction);
         #: the executor widens its budget-soundness slack by the delta
         self.evict_refetch_bytes = 0  # guarded-by: _mut
+        #: bytes re-fetched from remote to repair corruption (a dropped
+        #: disk-cache extent or a failed catalog-hash check); billed to
+        #: ``expert_repair`` and folded into executor budget slack the
+        #: same way evict_refetch_bytes is — disjoint counters: a given
+        #: refetch bumps exactly one of the two
+        self.repair_bytes = 0  # guarded-by: _mut
+        #: verify-on-read hook (repro.store.integrity.BlockVerifier);
+        #: attached by the executor, consulted by BlockReaderMixin
+        self.verifier = None
         #: remote requests that failed and were retried (fault injection)
         self.retries = 0  # guarded-by: _mut
         self._mut = threading.Lock()
@@ -488,6 +692,8 @@ class TieredReader(BlockReaderMixin):
     @staticmethod
     def _tier_category(category: str, tier: str) -> str:
         if category in ("expert", "expert_packed"):
+            if tier == "repair":
+                return "expert_repair"
             return "expert_remote" if tier == "remote" else "expert_disk"
         return category
 
@@ -527,10 +733,34 @@ class TieredReader(BlockReaderMixin):
                 # extent was evicted mid-run and must be re-fetched
                 self._cover_snapshots[ckey] = self.disk.extents_for(ckey)
             snap = self._cover_snapshots[ckey]
-        data = self.disk.read(ckey, offset, nbytes)
+        # hash once per boundary: with an active catalog verifier above
+        # (strictly stronger — end-to-end hashes, catches stale-extent
+        # substitution the local digest cannot), skip the extent-digest
+        # re-hash; without one, the digest remains the disk tier's guard
+        v = self.verifier
+        data, corrupt_dropped = self.disk.read_verified(
+            ckey, offset, nbytes,
+            check_digest=v is None or not v.active(),
+        )
         if data is not None:
             self.stats.record_cache("disk", nbytes, hit=True)
             self._record(category, "disk", payload, waste_nbytes)
+            return data
+        if corrupt_dropped:
+            # read-repair, disk tier: the cache just evicted an extent
+            # whose payload broke its filename contract; the refill is
+            # repair traffic, not an eviction refetch or a cold miss
+            self.stats.record_cache("disk", nbytes, hit=False)
+            data, we_fetched = self.disk.fill(
+                ckey, offset, nbytes,
+                self._fetch_remote(tensor_id, offset, nbytes),
+            )
+            if we_fetched:
+                with self._mut:
+                    self.repair_bytes += payload
+                self._record(category, "repair", payload, waste_nbytes)
+            else:
+                self._record(category, "disk", payload, waste_nbytes)
             return data
         if any(o <= offset and offset + nbytes <= o + n for o, n in snap):
             with self._mut:
@@ -541,6 +771,55 @@ class TieredReader(BlockReaderMixin):
         )
         # a waiter served by another caller's fill got the bytes warm
         self._record(category, "remote" if we_fetched else "disk", payload, waste_nbytes)
+        return data
+
+    # -- read-repair ---------------------------------------------------------
+    def repair_range(
+        self,
+        tensor_id: str,
+        offset: int,
+        nbytes: int,
+        category: str,
+        expected: Optional[str] = None,
+    ) -> bytes:
+        """Repair one range that failed catalog-hash verification:
+        invalidate every covering disk-cache extent (the cached copy is
+        tainted even if *it* hashed clean — it may have been filled from
+        the same corrupt GET), refetch from remote under the bounded
+        :class:`RetryPolicy`, verify the fresh bytes against ``expected``
+        *before* caching them, and bill the traffic to ``expert_repair``.
+
+        Raises :class:`~repro.store.integrity.CorruptBlockError` when the
+        refetched bytes still mismatch — a persistently corrupt remote
+        object is unrepairable from this tier and must fail the job, not
+        poison the cache.
+        """
+        if self.disk is not None:
+            self.disk.invalidate(
+                self._content_key(tensor_id), offset, nbytes, corrupt=True
+            )
+        data = self._fetch_remote(tensor_id, offset, nbytes)()
+        if expected is not None:
+            from repro.store.integrity import CorruptBlockError, block_hash
+
+            actual = block_hash(data)
+            if actual != expected:
+                raise CorruptBlockError(
+                    f"read-repair failed for {self.model_id}/{tensor_id}"
+                    f"[{offset}:{offset + nbytes}]: refetched bytes hash "
+                    f"{actual}, catalog says {expected} — remote object is "
+                    f"corrupt at the source",
+                    tier="remote",
+                    model_id=self.model_id,
+                    tensor_id=tensor_id,
+                    expected=expected,
+                    actual=actual,
+                )
+        if self.disk is not None:
+            self.disk.put(self._content_key(tensor_id), offset, data)
+        with self._mut:
+            self.repair_bytes += nbytes
+        self.stats.record_read(self._tier_category(category, "repair"), nbytes)
         return data
 
 

@@ -223,21 +223,24 @@ def test_durability_requires_chaos_coverage():
 
 
 def test_chaos_registry_drift_both_directions():
-    from repro.testing.chaos import CRASH_POINTS
+    from repro.testing.chaos import CORRUPTION_POINTS, CRASH_POINTS
 
-    # seeded: a call site whose name is not in the registry
+    # seeded: call sites whose names are in neither registry
     rogue = _parse(
         """
-        def f():
+        def f(data):
             chaos_point("publish:nonexistent")
+            return chaos_corrupt("tier:nonexistent", data)
         """,
         path="src/repro/fake.py",
     )
     findings = _active(durability.run_repo([rogue]))
     assert any("never be armed" in f.message for f in findings)
-    # with no call sites for them, every registered point is dead
+    assert any("never be injected" in f.message for f in findings)
+    # with no call sites for them, every registered point (crash and
+    # corruption alike) is dead
     dead = [f for f in findings if "no live" in f.message]
-    assert len(dead) == len(CRASH_POINTS)
+    assert len(dead) == len(CRASH_POINTS) + len(CORRUPTION_POINTS)
 
 
 # ============================================================= baseline

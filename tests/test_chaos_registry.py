@@ -1,20 +1,26 @@
 """Chaos-point registry drift: chaos.CRASH_POINTS and the live
-``chaos_point("...")`` call sites must stay in bijection.  A point with
-no call site is dead crash coverage; an unregistered call-site name can
-never be armed (ChaosInjector rejects it)."""
+``chaos_point("...")`` call sites must stay in bijection, and likewise
+chaos.CORRUPTION_POINTS and the ``chaos_corrupt("...")`` call sites.  A
+point with no call site is dead coverage; an unregistered call-site
+name can never be armed (the injectors reject it)."""
 import ast
 import os
 
 import pytest
 
 from repro.analysis import durability, runner
-from repro.testing.chaos import CRASH_POINTS, ChaosInjector
+from repro.testing.chaos import (
+    CORRUPTION_POINTS,
+    CRASH_POINTS,
+    ChaosInjector,
+    CorruptionInjector,
+)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _call_sites():
-    """point name -> (path, line) for every chaos_point("...") literal."""
+def _call_sites(fn_name="chaos_point"):
+    """point name -> (path, line) for every ``fn_name("...")`` literal."""
     sites = {}
     for sf in runner.parse_files(runner.discover(ROOT), ROOT):
         for node in ast.walk(sf.tree):
@@ -23,7 +29,7 @@ def _call_sites():
             fn = node.func
             name = fn.id if isinstance(fn, ast.Name) else (
                 fn.attr if isinstance(fn, ast.Attribute) else None)
-            if name == "chaos_point" and node.args and isinstance(
+            if name == fn_name and node.args and isinstance(
                     node.args[0], ast.Constant):
                 sites.setdefault(node.args[0].value, (sf.path, node.lineno))
     return sites
@@ -39,6 +45,17 @@ def test_registry_matches_call_sites_exactly():
         "registered points with no live call site: %s" % sorted(dead))
 
 
+def test_corruption_registry_matches_call_sites_exactly():
+    sites = _call_sites("chaos_corrupt")
+    unregistered = set(sites) - set(CORRUPTION_POINTS)
+    dead = set(CORRUPTION_POINTS) - set(sites)
+    assert not unregistered, (
+        "call sites not in CORRUPTION_POINTS: %s" % sorted(unregistered))
+    assert not dead, (
+        "registered corruption points with no live call site: %s"
+        % sorted(dead))
+
+
 def test_durability_drift_pass_agrees():
     files = runner.parse_files(runner.discover(ROOT), ROOT)
     findings = [f for f in durability.run_repo(files) if not f.waived]
@@ -48,3 +65,10 @@ def test_durability_drift_pass_agrees():
 def test_injector_rejects_unregistered_point():
     with pytest.raises(ValueError, match="unknown crash point"):
         ChaosInjector("publish:nonexistent")
+
+
+def test_corruption_injector_rejects_unknown_point_and_mode():
+    with pytest.raises(ValueError, match="unknown corruption point"):
+        CorruptionInjector("tier:nonexistent")
+    with pytest.raises(ValueError, match="unknown corruption mode"):
+        CorruptionInjector("remote:get", mode="gamma-ray")

@@ -371,16 +371,20 @@ def test_total_expert_bytes_sums_every_tier():
     st.record_read("expert_packed", 20)
     st.record_read("expert_remote", 30)
     st.record_read("expert_disk", 40)
+    st.record_read("expert_repair", 5)
     st.record_read("base", 1000)  # never an expert category
     assert set(EXPERT_CATEGORIES) == {
-        "expert", "expert_packed", "expert_remote", "expert_disk"
+        "expert", "expert_packed", "expert_remote", "expert_disk",
+        "expert_repair",
     }
-    assert st.total_expert_bytes == 100
-    # the budget-enforced term counts cold moved bytes only
-    assert st.c_expert == 60
+    assert st.total_expert_bytes == 105
+    # the budget-enforced term counts cold moved bytes only (repair
+    # refetches are cold moved bytes too — folded into executor slack)
+    assert st.c_expert == 65
     d = st.delta_since(IOStats().snapshot())
-    assert d["expert_read"] == 100
+    assert d["expert_read"] == 105
     assert d["expert_remote_read"] == 30 and d["expert_disk_read"] == 40
+    assert d["expert_repair_read"] == 5
 
 
 def test_cache_hit_miss_counters():
