@@ -1,0 +1,227 @@
+"""Shard-parallel distributed merge execution (docs/DISTRIBUTED.md).
+
+One latency-bound fleet — K experts published to an emulated remote
+object store with **no** local disk cache, so every expert block read
+pays the round-trip — merged three ways under the same budget:
+
+``local``
+    The single-process pipelined engine: its prefetch pool overlaps at
+    most ``read_threads`` remote requests, so wall time is pinned to
+    ``~requests / read_threads * latency``.
+
+``shard2`` / ``shard4``
+    The same plan scattered over 2 / 4 shard worker processes
+    (``execution="sharded"``).  Each worker runs its own prefetch pool
+    over a disjoint span of the realized read set, multiplying the
+    in-flight request budget — the regime the coordinator/worker
+    subsystem exists for (shared-storage reads dominated by latency,
+    not local compute).
+
+``--check`` is the CI gate: sharded n_workers=4 must beat the
+single-process wall clock by **>= 1.6x** on the latency-bound profile,
+read exactly the same expert byte volume as the single-process plan
+(byte parity; flat remote reads have no extent slack), and stay
+bit-identical to the local golden.  Emits a JSON summary
+(``benchmarks/out/bench_distributed.json`` or ``$REPRO_BENCH_JSON``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.harness import bench_mb, cleanup, Csv, fresh_dir, model_shapes, summary_path
+from repro.api import MergeSpec, Session
+from repro.store.iostats import measure
+
+BLOCK_SIZE = 16 * 1024
+#: latency-bound shared-storage endpoint: round-trips dominate, so
+#: wall time scales with in-flight request concurrency — which is
+#: exactly what scattering over worker processes multiplies
+REMOTE_LATENCY_S = 40e-3
+REMOTE_MBPS = 200.0
+
+
+def _fleet_arrays(k: int, total_mb: float) -> Tuple[Dict, List[Dict]]:
+    rng = np.random.default_rng(0)
+    shapes = model_shapes(total_mb)
+    base = {n: rng.normal(size=s).astype(np.float32) for n, s in shapes.items()}
+    experts = []
+    for i in range(k):
+        r = np.random.default_rng(200 + i)
+        experts.append({
+            n: v + 0.02 * r.normal(size=v.shape).astype(np.float32)
+            for n, v in base.items()
+        })
+    return base, experts
+
+
+def _setup(tag: str, k: int, total_mb: float, profile: Dict) -> Tuple[str, List[str]]:
+    ws = fresh_dir(tag)
+    sess = Session(ws, block_size=BLOCK_SIZE)
+    base, experts = _fleet_arrays(k, total_mb)
+    sess.register_model("base", base)
+    ids = []
+    for i, ex in enumerate(experts):
+        mid = f"expert-{i:02d}"
+        sess.register_model(mid, ex)
+        # no disk cache: every expert read pays the remote round-trip,
+        # keeping the three arms byte-comparable (no cache-fill crosstalk)
+        sess.publish_model_remote(mid, os.path.join(ws, "bucket"),
+                                  profile=profile, disk_cache=False)
+        ids.append(mid)
+    sess.ensure_analyzed("base", ids)
+    sess.close()
+    return ws, ids
+
+
+def _spec(ids, budget):
+    # reuse_plan=True: every arm replays the identical selection, so
+    # byte parity compares realized reads, not planner noise
+    return MergeSpec.build(base="base", experts=list(ids), op="ties",
+                           theta={"trim_frac": 0.3}, budget=budget)
+
+
+def _merge(ws: str, ids, budget, n_workers: Optional[int]) -> Dict:
+    sess = Session(ws, block_size=BLOCK_SIZE)
+    try:
+        handle = sess.submit(_spec(ids, budget))
+        t0 = time.time()
+        with measure(sess.stats) as io:
+            if n_workers is None:
+                sess.run_all()
+            else:
+                sess.run_all(n_workers=n_workers)
+        wall = time.time() - t0
+        res = handle.result
+        out = {
+            "wall_s": wall,
+            "sid": res.sid,
+            "arrays": sess.load(res.sid),
+            "selected_blocks": res.stats["realized_expert_blocks"],
+            "expert_bytes": res.stats["c_expert_run"],
+            "expert_remote_bytes": io["expert_remote_read"],
+            "n_workers": n_workers or 1,
+        }
+        if n_workers is not None:
+            out["reissued"] = res.stats["reissued"]
+            out["duplicate_extent_bytes"] = (
+                res.stats["partition"]["duplicate_extent_bytes"])
+            out["shards"] = res.stats["shards"]
+        return out
+    finally:
+        sess.close()
+
+
+def run(
+    k: int = 6,
+    budget: float = 0.6,
+    total_mb: Optional[float] = None,
+    worker_counts: Tuple[int, ...] = (2, 4),
+    latency_s: float = REMOTE_LATENCY_S,
+    mbps: float = REMOTE_MBPS,
+    json_path: Optional[str] = None,
+) -> Dict:
+    total_mb = total_mb or bench_mb()
+    profile = {"latency_s": latency_s, "mbps": mbps}
+    csv = Csv("distributed", [
+        "arm", "k", "n_workers", "wall_s", "expert_mb", "remote_mb",
+        "selected_blocks", "speedup_vs_local", "bit_identical",
+    ])
+    ws, ids = _setup("dist-shared", k, total_mb, profile)
+
+    local = _merge(ws, ids, budget, n_workers=None)
+    arms = {"local": local}
+    for n in worker_counts:
+        arms[f"shard{n}"] = _merge(ws, ids, budget, n_workers=n)
+
+    summary: Dict = {
+        "workload": {
+            "k": k, "model_mb": total_mb, "block_size": BLOCK_SIZE,
+            "budget": budget,
+            "remote_profile": {"latency_s": latency_s, "mbps": mbps},
+        },
+        "results": {},
+    }
+    for arm, r in arms.items():
+        bitident = all(
+            np.array_equal(local["arrays"][t], r["arrays"][t])
+            for t in local["arrays"]
+        )
+        speedup = local["wall_s"] / max(r["wall_s"], 1e-9)
+        csv.row(arm, k, r["n_workers"], r["wall_s"],
+                r["expert_bytes"] / 1e6, r["expert_remote_bytes"] / 1e6,
+                r["selected_blocks"], speedup, bitident)
+        summary["results"][arm] = {
+            k2: v for k2, v in r.items() if k2 != "arrays"
+        } | {"bit_identical_to_local": bitident,
+             "speedup_vs_local": speedup}
+    cleanup(ws)
+    out = summary_path("bench_distributed", json_path)
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# distributed json summary -> {out}", flush=True)
+    return summary
+
+
+def check(min_speedup4: float = 1.6) -> int:
+    """CI gate: >=1.6x wall clock at n_workers=4 on the latency-bound
+    shared-storage profile, byte parity with the single-process plan,
+    bit-identity with the local golden."""
+    summary = run(k=6, total_mb=4.0)
+    res = summary["results"]
+    ok = True
+    s4 = res["shard4"]
+    print(f"# check: local wall={res['local']['wall_s']:.2f}s  "
+          f"shard4 wall={s4['wall_s']:.2f}s  "
+          f"speedup={s4['speedup_vs_local']:.2f}x "
+          f"(require >= {min_speedup4}x)")
+    if s4["speedup_vs_local"] < min_speedup4:
+        print("FAIL: sharded execution not enough faster than "
+              "single-process on the latency-bound profile")
+        ok = False
+    for arm in ("shard2", "shard4"):
+        r = res[arm]
+        # byte parity: same plan, disjoint spans, no extents, no crash
+        # re-reads -> the realized expert volume must match exactly
+        slack = r["duplicate_extent_bytes"]
+        drift = abs(r["expert_bytes"] - res["local"]["expert_bytes"])
+        print(f"# check: {arm} expert={r['expert_bytes']/1e6:.2f}MB  "
+              f"local={res['local']['expert_bytes']/1e6:.2f}MB  "
+              f"slack={slack/1e6:.2f}MB  reissued={r['reissued']}")
+        if r["reissued"] == 0 and drift > slack:
+            print(f"FAIL: {arm} read volume drifted beyond the "
+                  f"documented extent slack")
+            ok = False
+        if not r["bit_identical_to_local"]:
+            print(f"FAIL: {arm} differs bitwise from the local golden")
+            ok = False
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: sharded speedup + byte parity + "
+                         "bit-identity")
+    ap.add_argument("--k", type=int, default=6)
+    ap.add_argument("--budget", type=float, default=0.6)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    if args.fast:
+        run(k=4, budget=args.budget, total_mb=2.0,
+            worker_counts=(2,), json_path=args.json)
+    else:
+        run(k=args.k, budget=args.budget, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ from benchmarks import (
     bench_blocksize,
     bench_conflict_ablation,
     bench_budget,
+    bench_distributed,
     bench_integrity,
     bench_merge_compute,
     bench_operators,
@@ -71,6 +72,10 @@ ALL = {
     "remote_store": lambda fast: bench_remote_store.run(
         k=4 if fast else 8,
         total_mb=2.0 if fast else None),
+    "distributed": lambda fast: bench_distributed.run(
+        k=4 if fast else 6,
+        total_mb=2.0 if fast else None,
+        worker_counts=(2,) if fast else (2, 4)),
     "integrity": lambda fast: bench_integrity.run(
         k=4 if fast else 8,
         total_mb=2.0 if fast else None,

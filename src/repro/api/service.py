@@ -121,6 +121,8 @@ class WindowOptions:
         prefer_packed: Union[bool, str] = True,
         tier_billing: bool = False,
         verify=True,
+        execution: str = "local",
+        dist=None,
     ):
         self.shared_reads = shared_reads
         self.shared_budget = shared_budget
@@ -144,6 +146,14 @@ class WindowOptions:
         # keeps selections identical to the flat local path, which is
         # what bit-identity guarantees rely on.
         self.tier_billing = tier_billing
+        #: "local" runs execute_merge in-process; "sharded" scatters each
+        #: node across shard workers via repro.dist (docs/DISTRIBUTED.md)
+        if execution not in ("local", "sharded"):
+            raise ValueError(
+                "execution must be 'local' or 'sharded', got %r" % execution)
+        self.execution = execution
+        #: repro.dist.DistOptions for execution="sharded" (None = defaults)
+        self.dist = dist
 
 
 #: default cap on executions per job before it is quarantined as poison
@@ -1599,7 +1609,12 @@ class MergeService(WorkspaceOps):
         owned_readers: Dict[str, CachingModelReader] = {}
         owned_layout = None
         cache_before = (0, 0, 0)
-        if self.persistent_cache and opts.shared_reads:
+        sharded = getattr(opts, "execution", "local") == "sharded"
+        if sharded:
+            # workers open their own readers in their own processes —
+            # coordinator-side shared readers would never see a byte
+            pass
+        elif self.persistent_cache and opts.shared_reads:
             cache_readers = self._shared_readers(layout_id, level_experts)
             expert_readers = cache_readers
             cache_before = self._cache_counters(cache_readers)
@@ -1652,21 +1667,44 @@ class MergeService(WorkspaceOps):
                         resume.discard()
                         resume = None
                 try:
-                    result = execute_merge(
-                        plan,
-                        self.snapshots,
-                        self.catalog,
-                        sid=exec_sid,
-                        txn=self.txn,
-                        compute=opts.compute,
-                        coalesce=opts.coalesce,
-                        verify=getattr(opts, "verify", True),
-                        expert_readers=expert_readers,
-                        pipeline=opts.pipeline,
-                        cancel=cancel,
-                        progress=self._node_progress(handles),
-                        resume=resume,
-                    )
+                    if sharded:
+                        # scatter this node across shard workers; the
+                        # coordinator mirrors execute_merge's txn
+                        # semantics so every handler below works as-is
+                        from repro.dist.coordinator import run_sharded_merge
+                        from repro.dist.lease import DistOptions
+
+                        result = run_sharded_merge(
+                            plan,
+                            self.snapshots,
+                            self.catalog,
+                            sid=exec_sid,
+                            txn=self.txn,
+                            options=getattr(opts, "dist", None)
+                            or DistOptions(),
+                            coalesce=opts.coalesce,
+                            verify=getattr(opts, "verify", True),
+                            pipeline=opts.pipeline,
+                            cancel=cancel,
+                            progress=self._node_progress(handles),
+                            resume=resume,
+                        )
+                    else:
+                        result = execute_merge(
+                            plan,
+                            self.snapshots,
+                            self.catalog,
+                            sid=exec_sid,
+                            txn=self.txn,
+                            compute=opts.compute,
+                            coalesce=opts.coalesce,
+                            verify=getattr(opts, "verify", True),
+                            expert_readers=expert_readers,
+                            pipeline=opts.pipeline,
+                            cancel=cancel,
+                            progress=self._node_progress(handles),
+                            resume=resume,
+                        )
                 except MergeCancelled as e:
                     dead[id(node)] = e
                     for h in handles:

@@ -149,6 +149,9 @@ class Session(WorkspaceOps):
         prefer_packed: Union[bool, str] = True,
         tier_billing: bool = False,
         verify: Any = True,
+        execution: str = "local",
+        n_workers: Optional[int] = None,
+        dist: Any = None,
     ) -> List[MergeResult]:
         """Plan and execute every queued job, sharing expert block reads.
 
@@ -193,6 +196,16 @@ class Session(WorkspaceOps):
         :class:`~repro.store.integrity.VerifyPolicy` to pick tiers
         (e.g. ``VerifyPolicy(flat=True)`` to also check local flat
         reads).
+
+        ``execution="sharded"`` scatters each merge across shard worker
+        processes (see docs/DISTRIBUTED.md): the plan's realized read
+        set is partitioned on physical bytes, each worker runs the
+        pipelined engine over its slice under a per-shard budget, and
+        the coordinator splices the staged regions into one atomic
+        commit — bit-identical to local execution.  ``n_workers`` is a
+        convenience for the common case; pass a
+        :class:`repro.dist.DistOptions` as ``dist`` for full control
+        (transport, worker kernel, lease re-issue limits).
         Returns results in submission order; handles cancelled while
         still queued are dropped from the batch (and from the results).
         """
@@ -204,6 +217,12 @@ class Session(WorkspaceOps):
             self._queue = self._queue[len(queued):]
             return []
         svc = self._service()
+        if n_workers is not None and dist is None:
+            from repro.dist.lease import DistOptions
+
+            dist = DistOptions(n_workers=n_workers)
+        if dist is not None:
+            execution = "sharded"
         opts = WindowOptions(
             shared_reads=shared_reads,
             shared_budget=shared_budget,
@@ -215,6 +234,8 @@ class Session(WorkspaceOps):
             prefer_packed=prefer_packed,
             tier_billing=tier_billing,
             verify=verify,
+            execution=execution,
+            dist=dist,
         )
         # one atomic group: the whole batch is a single scheduling window
         # (plan-together semantics, batch-wide sid validation)

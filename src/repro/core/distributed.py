@@ -203,21 +203,57 @@ def build_merge_step(
     )
 
 
-def shard_plan_by_host(plan: MergePlan, n_hosts: int) -> List[Dict]:
+def shard_plan_by_host(
+    plan: MergePlan, n_hosts: int, catalog=None
+) -> List[Dict]:
     """Partition a plan's selected (expert, tensor, block) triples across
     hosts so each host reads <= ceil(Ĉ_expert / n_hosts) bytes (per-host
-    budget).  Deterministic round-robin over size-sorted items."""
-    items: List[Tuple[int, str, str, int]] = []  # (bytes, expert, tensor, blk)
-    for e, per_t in plan.selection.items():
-        for t, bs in per_t.items():
-            for b in bs:
-                items.append((plan.block_size, e, t, b))
-    items.sort(key=lambda it: (-it[0], it[1], it[2], it[3]))
+    budget).  Deterministic greedy (LPT) over size-sorted units.
+
+    With ``catalog`` the cost model matches the planner's marginal-byte
+    accounting (``planner._selection_bytes``): ragged tail blocks are
+    billed at their physical size, elided packed blocks at zero, and the
+    triples that share one packed extent form a single atomic unit so
+    the shared extent is charged — and read — once per host.  Without a
+    catalog every block falls back to the legacy ``plan.block_size``
+    estimate (an upper bound that overcounts tails and dedup)."""
+    # unit = [(bytes, expert, tensor, blk), ...] scheduled atomically;
+    # multi-item units are the triples sharing one packed extent
+    units: List[List[Tuple[int, str, str, int]]] = []
+    if catalog is not None:
+        from repro.core.planner import _selection_bytes
+
+        costs = _selection_bytes(catalog, plan, {})
+        by_extent: Dict[str, List[Tuple[int, str, str, int]]] = {}
+        for e, per_t in plan.selection.items():
+            for t, bs in per_t.items():
+                for b in bs:
+                    nbytes, extent_key = costs.get(
+                        (e, t, b), (plan.block_size, None))
+                    if extent_key is None:
+                        units.append([(nbytes, e, t, b)])
+                    else:
+                        by_extent.setdefault(extent_key, []).append(
+                            (nbytes, e, t, b))
+        for key in sorted(by_extent):
+            grp = sorted(by_extent[key], key=lambda it: (it[1], it[2], it[3]))
+            # the extent moves once per host no matter how many triples
+            # it serves: bill its physical size on the first item only
+            units.append([grp[0]] + [(0, e, t, b) for _n, e, t, b in grp[1:]])
+    else:
+        for e, per_t in plan.selection.items():
+            for t, bs in per_t.items():
+                for b in bs:
+                    units.append([(plan.block_size, e, t, b)])
+    units.sort(
+        key=lambda u: (-sum(it[0] for it in u), u[0][1], u[0][2], u[0][3])
+    )
     buckets: List[Dict] = [
         {"host": h, "bytes": 0, "items": []} for h in range(n_hosts)
     ]
-    for it in items:
+    for unit in units:
         tgt = min(buckets, key=lambda bkt: (bkt["bytes"], bkt["host"]))
-        tgt["items"].append(it[1:])
-        tgt["bytes"] += it[0]
+        for nbytes, e, t, b in unit:
+            tgt["items"].append((e, t, b))
+            tgt["bytes"] += nbytes
     return buckets

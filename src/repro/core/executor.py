@@ -758,6 +758,7 @@ class _PipelineEngine:
         progress: Optional[ProgressFn] = None,
         progress_total: int = 0,
         resume: Optional[ResumeState] = None,
+        spans: Optional[Dict[str, Tuple[int, int]]] = None,
     ):
         self.plan = plan
         self.base_reader = base_reader
@@ -774,6 +775,11 @@ class _PipelineEngine:
         self.progress = progress
         self.progress_total = progress_total
         self.resume = resume
+        # shard-worker mode: restrict the sweep to ``{tensor: (lo, hi)}``
+        # half-open block spans.  Block indices stay GLOBAL (DARE masks,
+        # coverage, and touch maps must match the single-process run
+        # bit-for-bit); tensors absent from the map are skipped entirely.
+        self.spans = spans
         self.resumed_from: Dict[str, int] = (
             {t: n for t, n in resume.completed.items() if n > 0}
             if resume is not None else {}
@@ -857,11 +863,18 @@ class _PipelineEngine:
                 self._put((kind, task, window, payload))
 
             for tensor_id in self.plan.tensor_order:
+                if self.spans is not None and tensor_id not in self.spans:
+                    continue
                 spec = self.base_reader.spec(tensor_id)
                 n_blocks = blk.num_blocks(spec.nbytes, self.plan.block_size)
                 mergeable = _is_mergeable(spec)
                 rev = self.plan.reverse_index(tensor_id) if mergeable else {}
+                lo, hi = 0, n_blocks
+                if self.spans is not None:
+                    lo, hi = self.spans[tensor_id]
+                    lo, hi = max(0, lo), min(hi, n_blocks)
                 skip = min(self.resumed_from.get(tensor_id, 0), n_blocks)
+                skip = max(lo, skip)
                 D = None
                 if mergeable and rev:
                     D = DeltaIterator(
@@ -872,14 +885,14 @@ class _PipelineEngine:
                         read_from=skip,
                     )
                 task = _TensorTask(tensor_id, spec, n_blocks, mergeable, rev, D)
-                if skip:
+                if skip and self.resume is not None:
                     # lineage from the dead run, re-seeded from the journal
                     for b, experts in self.resume.coverage(tensor_id):
                         task.touched.append(b)
                         self.coverage_rows.append((tensor_id, b, experts))
                 pending.append(("tensor", task, None, None))
                 W = self.cfg.window_blocks
-                for ws in range(skip, n_blocks, W):
+                for ws in range(skip, hi, W):
                     if self.stop.is_set():
                         return
                     # cancellation checkpoint: stop issuing new windows;
@@ -888,7 +901,7 @@ class _PipelineEngine:
                     _check_cancel(self.cancel, self.plan.plan_id)
                     # prompt failure propagation (see _stage_window)
                     self.wb.raise_if_failed()
-                    window = list(range(ws, min(n_blocks, ws + W)))
+                    window = list(range(ws, min(hi, ws + W)))
                     pending.append(
                         ("window", task, window,
                          self.pool.submit(self._stage_window, task, window))

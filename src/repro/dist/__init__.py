@@ -1,0 +1,47 @@
+"""Shard-parallel distributed merge execution (docs/DISTRIBUTED.md).
+
+Coordinator/worker subsystem that scatters one planned merge across
+byte-balanced shard workers and rolls the staged regions back into a
+single transactional commit:
+
+* :mod:`repro.dist.partition` — physical-byte shard partitioning over
+  the plan's realized read set;
+* :mod:`repro.dist.lease` — :class:`ShardLease` work orders and
+  :class:`DistOptions` knobs;
+* :mod:`repro.dist.region` — shard-side staged output regions (local
+  StagingWriter + per-shard progress journal);
+* :mod:`repro.dist.worker` — one lease in, one region + result doc out;
+* :mod:`repro.dist.transport` — process / inline worker transports;
+* :mod:`repro.dist.coordinator` — scatter, lease re-issue, splice,
+  single atomic publish.
+
+Deliberately jax-free at import time: only a worker running
+``kernel="mesh"`` touches :mod:`repro.core.distributed`.
+"""
+from repro.dist.coordinator import run_sharded_merge, shard_journal_root
+from repro.dist.lease import DistOptions, ShardLease
+from repro.dist.partition import Partition, Shard, partition_plan
+from repro.dist.region import ShardRegionWriter
+from repro.dist.transport import (
+    InlineTransport,
+    LocalProcessTransport,
+    WorkerExit,
+    make_transport,
+)
+from repro.dist.worker import run_worker
+
+__all__ = [
+    "DistOptions",
+    "InlineTransport",
+    "LocalProcessTransport",
+    "Partition",
+    "Shard",
+    "ShardLease",
+    "ShardRegionWriter",
+    "WorkerExit",
+    "make_transport",
+    "partition_plan",
+    "run_sharded_merge",
+    "run_worker",
+    "shard_journal_root",
+]

@@ -109,6 +109,11 @@ class IOStats:
         self.cache_misses: Dict[str, Counter] = defaultdict(Counter)  # guarded-by: _lock
         # logical bytes a resumed run skipped thanks to journaled progress
         self.skipped: Dict[str, Counter] = defaultdict(Counter)  # guarded-by: _lock
+        # per-shard read/write rollup absorbed from distributed workers:
+        # shard key -> {"read"|"written": {category: bytes}}; every byte
+        # here is ALSO in the flat counters above (shards is a view for
+        # billing/explain, never a second source of truth)
+        self.shards: Dict[str, Dict[str, Dict[str, int]]] = {}  # guarded-by: _lock
 
     # -- recording -----------------------------------------------------
     def _validate(self, name: str, allowed, kind: str) -> None:
@@ -139,6 +144,53 @@ class IOStats:
         self._validate(category, CATEGORIES, "category")
         with self._lock:
             self.skipped[category].add(nbytes)
+
+    def absorb(self, snap: Dict[str, Dict[str, Dict[str, int]]],
+               shard: str = None) -> None:
+        """Fold another :meth:`snapshot` into this instance — the
+        coordinator-side rollup for per-worker stats in sharded
+        execution.  Adds bytes AND call counts (so rates and
+        per-request costs stay meaningful after the merge); with
+        ``shard`` set, the same bytes are also accumulated under
+        ``self.shards[shard]`` so billing and ``explain()`` can report
+        the per-shard decomposition.  Debug mode validates the
+        absorbed categories against the closed sets, exactly as if the
+        worker had recorded into this instance directly."""
+        if self.debug:
+            for kind, allowed in (
+                ("read", CATEGORIES), ("written", CATEGORIES),
+                ("skipped", CATEGORIES),
+                ("cache_hits", TIERS), ("cache_misses", TIERS),
+            ):
+                for key in snap.get(kind, {}):
+                    self._validate(key, allowed, "absorbed " + kind)
+        with self._lock:
+            for kind, target in (
+                ("read", self.read), ("written", self.written),
+                ("cache_hits", self.cache_hits),
+                ("cache_misses", self.cache_misses),
+                ("skipped", self.skipped),
+            ):
+                for key, ctr in snap.get(kind, {}).items():
+                    target[key].bytes += int(ctr.get("bytes", 0))
+                    target[key].calls += int(ctr.get("calls", 0))
+            if shard is not None:
+                rollup = self.shards.setdefault(
+                    str(shard), {"read": {}, "written": {}})
+                for kind in ("read", "written"):
+                    for key, ctr in snap.get(kind, {}).items():
+                        rollup[kind][key] = (
+                            rollup[kind].get(key, 0) + int(ctr.get("bytes", 0))
+                        )
+
+    def shard_rollup(self) -> Dict[str, Dict[str, Dict[str, int]]]:
+        """Deep copy of the per-shard byte rollup (empty for
+        single-process runs)."""
+        with self._lock:
+            return {
+                s: {kind: dict(cats) for kind, cats in roll.items()}
+                for s, roll in self.shards.items()
+            }
 
     # -- queries (paper cost terms) -------------------------------------
     # Queries must not mutate the defaultdicts (a bare ``self.read[cat]``
@@ -253,6 +305,7 @@ class IOStats:
             self.cache_hits.clear()
             self.cache_misses.clear()
             self.skipped.clear()
+            self.shards.clear()
 
     def self_check(self) -> None:
         """Accounting-completeness invariant.  Raises
@@ -302,6 +355,25 @@ class IOStats:
             problems.append(
                 "cost terms do not cover recorded volume: terms=%d "
                 "recorded=%d" % (declared, accounted))
+        # the shard rollup is a view over the flat counters: per
+        # category, the sum across shards can never exceed the total
+        # (coordinator-side bytes make the totals strictly larger)
+        rollup = self.shard_rollup()
+        for kind in ("read", "written"):
+            per_cat: Dict[str, int] = {}
+            for roll in rollup.values():
+                for key, nbytes in roll.get(kind, {}).items():
+                    per_cat[key] = per_cat.get(key, 0) + nbytes
+            for key, nbytes in per_cat.items():
+                if key not in CATEGORIES:
+                    problems.append(
+                        "shard rollup has unknown %s category %r" % (kind, key))
+                    continue
+                total = snap[kind].get(key, {}).get("bytes", 0)
+                if nbytes > total:
+                    problems.append(
+                        "shard rollup exceeds flat counter: %s[%r] "
+                        "shards=%d total=%d" % (kind, key, nbytes, total))
         if problems:
             raise IOStatsError("; ".join(problems))
 

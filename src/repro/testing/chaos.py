@@ -49,6 +49,9 @@ CRASH_POINTS = (
     "publish:before",      # transaction manager, before the publish rename
     "publish:after",       # after publish, before the catalog commit record
     "cache:fill",          # disk extent cache, before the atomic rename
+    "worker:lease",        # shard worker: after accepting a lease, before I/O
+    "worker:block",        # shard worker: before each staged block write
+    "worker:commit",       # shard worker: before writing the result doc
 )
 
 

@@ -1,0 +1,206 @@
+"""Elastic shard recovery: worker death -> lease re-issue -> journal
+resume, budget accounting of re-read residuals, and partition edge
+cases (docs/DISTRIBUTED.md)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import MergeSpec, Session
+from repro.dist.lease import DistOptions
+from repro.dist.partition import partition_plan
+
+from conftest import make_models
+
+BS = 4096
+
+
+def _workspace(tmp_path, tag="ws", n_experts=3):
+    sess = Session(str(tmp_path / tag), block_size=BS)
+    base, experts = make_models(n_experts=n_experts)
+    sess.register_model("base", base)
+    ids = []
+    for i, e in enumerate(experts):
+        sess.register_model(f"ex{i}", e)
+        ids.append(f"ex{i}")
+    return sess, ids
+
+
+def _run(sess, ids, sid, **kw):
+    sess.submit(MergeSpec.build("base", ids, op="ties",
+                                theta={"trim_frac": 0.3}, budget="60%"),
+                sid=sid)
+    return sess.run_all(**kw)[0]
+
+
+def _no_residue(sess):
+    shards = os.path.join(sess.snapshots.staging_root, "shards")
+    assert not os.path.isdir(shards) or not os.listdir(shards)
+    ws = os.path.dirname(sess.snapshots.staging_root)
+    jroot = os.path.join(ws, "journals", "shards")
+    assert not os.path.isdir(jroot) or not os.listdir(jroot)
+
+
+# ------------------------------------------------------- worker death points
+@pytest.mark.parametrize("point,skip", [
+    ("worker:lease", 0),   # dies before any I/O: successor restarts cold
+    ("worker:block", 2),   # dies mid-region: successor resumes the journal
+    ("worker:commit", 0),  # dies after all I/O: successor re-validates
+])
+def test_worker_death_recovers_bit_identical(tmp_path, point, skip):
+    """Killing one worker (process transport, real subprocess death via
+    exit code) completes bit-identically through lease re-issue; the
+    mid-region kill proves journal resume (resumed_blocks > 0)."""
+    sess, ids = _workspace(tmp_path)
+    _run(sess, ids, "local")
+    r = _run(sess, ids, "shard",
+             dist=DistOptions(n_workers=2, chaos={
+                 "point": point, "skip": skip, "shard": 0}))
+    assert r.stats["reissued"] == 1
+    shard0 = next(s for s in r.stats["shards"] if s["shard"] == 0)
+    assert shard0["attempts"] == 2
+    if point == "worker:block":
+        assert shard0["resumed_blocks"] > 0
+    a, b = sess.load("local"), sess.load("shard")
+    for t in a:
+        assert np.array_equal(a[t], b[t]), t
+    _no_residue(sess)
+    sess.close()
+
+
+def test_lease_attempts_exhausted_aborts_window(tmp_path):
+    """A shard that keeps dying exhausts max_lease_attempts and fails
+    the window: the transaction aborts and no snapshot is published."""
+    sess, ids = _workspace(tmp_path)
+    # chaos re-arms only on attempt 1; max_lease_attempts=1 means that
+    # single poisoned attempt is also the last one allowed
+    with pytest.raises(RuntimeError, match="attempt"):
+        _run(sess, ids, "shard",
+             dist=DistOptions(n_workers=2, max_lease_attempts=1, chaos={
+                 "point": "worker:block", "skip": 1, "shard": 0}))
+    assert "shard" not in sess.list_snapshots()
+    _no_residue(sess)
+    sess.close()
+
+
+# ------------------------------------------------------ [hat, 2*hat) billing
+def test_total_spend_bounded_after_crash_inline(tmp_path):
+    """With the inline transport the dead attempt's partial reads are
+    salvaged into the roll-up, so the window's total expert spend —
+    first attempt + residual re-reads — lands in [hat, 2*hat): the
+    re-read residual can never exceed what the dead worker read."""
+    sess, ids = _workspace(tmp_path)
+    r = _run(sess, ids, "shard",
+             dist=DistOptions(n_workers=2, transport="inline", chaos={
+                 "point": "worker:block", "skip": 3, "shard": 0}))
+    assert r.stats["reissued"] == 1
+    hat = r.stats["c_expert_hat"]
+    spent = r.stats["c_expert_run"]
+    assert hat <= spent < 2 * hat, (hat, spent)
+    # the refunded residual is visible: resumed blocks skipped re-reads
+    shard0 = next(s for s in r.stats["shards"] if s["shard"] == 0)
+    assert shard0["resumed_blocks"] > 0
+    _no_residue(sess)
+    sess.close()
+
+
+def test_crash_free_spend_is_exactly_hat(tmp_path):
+    sess, ids = _workspace(tmp_path)
+    r = _run(sess, ids, "shard", n_workers=2)
+    assert r.stats["c_expert_run"] == r.stats["c_expert_hat"]
+    assert r.stats["reissued"] == 0
+    sess.close()
+
+
+# ------------------------------------------------------- partition edge cases
+def _plan_of(sess, ids, budget="60%"):
+    sess.submit(MergeSpec.build("base", ids, op="ties",
+                                theta={"trim_frac": 0.3}, budget=budget),
+                sid="probe")
+    r = sess.run_all()[0]
+    from repro.core.plan import MergePlan
+
+    row = sess.catalog.get_plan(r.manifest["plan_id"])
+    return MergePlan.from_payload(row["payload"])
+
+
+def test_partition_covers_plan_exactly(tmp_path):
+    sess, ids = _workspace(tmp_path)
+    plan = _plan_of(sess, ids)
+    for n in (1, 2, 3, 5):
+        part = partition_plan(plan, sess.catalog, n)
+        spans = {}
+        for s in part.shards:
+            for t, (lo, hi) in s.spans.items():
+                spans.setdefault(t, []).append((lo, hi))
+        # spans tile each tensor: contiguous, disjoint, complete
+        for t, pieces in spans.items():
+            pieces.sort()
+            assert pieces[0][0] == 0
+            for (a_lo, a_hi), (b_lo, b_hi) in zip(pieces, pieces[1:]):
+                assert a_hi == b_lo
+        # expert bytes partition the total (flat store: no extents)
+        assert sum(s.expert_bytes for s in part.shards) == \
+            part.total_expert_bytes
+        assert part.duplicate_extent_bytes == 0
+
+
+def test_partition_more_shards_than_blocks(tmp_path):
+    """n_shards beyond the block count yields empty trailing shards the
+    coordinator never leases."""
+    sess, ids = _workspace(tmp_path)
+    plan = _plan_of(sess, ids)
+    total_blocks = sum(n for _t, n in
+                       partition_plan(plan, sess.catalog, 1).order)
+    part = partition_plan(plan, sess.catalog, total_blocks + 5)
+    assert len(part.shards) == total_blocks + 5
+    assert sum(0 if s.empty else 1 for s in part.shards) <= total_blocks
+    covered = sum(s.n_blocks for s in part.shards)
+    assert covered == total_blocks
+    sess.close()
+
+
+def test_partition_zero_selection_splits_evenly(tmp_path):
+    """A plan with an empty selection (budget ~ 0) still partitions the
+    output blocks evenly so workers share the base-passthrough work."""
+    sess, ids = _workspace(tmp_path)
+    plan = _plan_of(sess, ids, budget=1)  # 1 byte: nothing selected
+    assert plan.total_selected_blocks() == 0
+    part = partition_plan(plan, sess.catalog, 3)
+    counts = [s.n_blocks for s in part.shards]
+    assert sum(counts) == sum(n for _t, n in part.order)
+    assert max(counts) - min(counts) <= 1  # even block-count split
+    assert part.total_expert_bytes == 0
+
+
+def test_partition_tensor_aligned_for_mesh(tmp_path):
+    sess, ids = _workspace(tmp_path)
+    plan = _plan_of(sess, ids)
+    part = partition_plan(plan, sess.catalog, 2, align="tensor")
+    from repro.core import blocks as blk
+
+    metas = {r[0]: r[3] for r in sess.catalog.tensor_metas("base")}
+    for s in part.shards:
+        for t, (lo, hi) in s.spans.items():
+            assert lo == 0
+            assert hi == blk.num_blocks(metas[t], plan.block_size)
+    sess.close()
+
+
+def test_sharded_zero_selection_executes(tmp_path):
+    """End-to-end: an all-passthrough merge still commits correctly
+    under sharded execution (pure base copy through the workers)."""
+    sess, ids = _workspace(tmp_path)
+    sess.submit(MergeSpec.build("base", ids, op="ties",
+                                theta={"trim_frac": 0.3}, budget=1),
+                sid="local")
+    sess.run_all()
+    sess.submit(MergeSpec.build("base", ids, op="ties",
+                                theta={"trim_frac": 0.3}, budget=1),
+                sid="shard")
+    r = sess.run_all(n_workers=2)
+    assert r[0].stats["c_expert_run"] == 0
+    a, b = sess.load("local"), sess.load("shard")
+    for t in a:
+        assert np.array_equal(a[t], b[t]), t
+    sess.close()
